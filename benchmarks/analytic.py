@@ -1,0 +1,286 @@
+"""Analytic FLOP/byte models per (arch x shape) cell.
+
+Two uses:
+  * MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) — the §Roofline
+    "useful compute" yardstick (N = active params for MoE),
+  * an attention-aware step-FLOPs estimate used to correct XLA-CPU
+    ``cost_analysis`` numbers, which count ``while`` (scan) bodies ONCE
+    (verified experimentally; see EXPERIMENTS.md §Dry-run caveats).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs import registry
+from repro.configs.base import (GNNConfig, OneRecConfig, RecsysConfig,
+                                ShapeSpec, TransformerConfig)
+from repro.models.transformer import layer_plan
+
+
+def _mlp_flops(dims: Tuple[int, ...]) -> int:
+    return sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+# ---------------------------------------------------------------------------
+# LM transformers
+# ---------------------------------------------------------------------------
+
+
+def lm_step_flops(cfg: TransformerConfig, shape: ShapeSpec) -> Dict[str, float]:
+    B, S = shape.global_batch, shape.seq_len
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    p_attn = D * H * hd + 2 * D * K * hd + H * hd * D
+    p_dense = 3 * D * cfg.d_ff_for_dense
+    p_moe_active = 3 * D * cfg.d_expert * (cfg.top_k + cfg.n_shared_experts) \
+        + D * cfg.n_experts
+    n_moe = (cfg.n_layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.n_layers - n_moe
+    p_layers_active = (cfg.n_layers * p_attn + n_dense * p_dense
+                       + n_moe * p_moe_active)
+    p_head = D * cfg.vocab_size
+
+    def attn_flops(tokens: int, kv_len_full: float, kv_len_win: float) -> float:
+        total = 0.0
+        for spec in layer_plan(cfg):
+            for kind in spec.kinds:
+                kv = kv_len_win if kind.attn == "window" else kv_len_full
+                total += spec.n_periods * 4 * tokens * kv * H * hd
+        return total * B
+
+    if shape.kind == "train":
+        tokens = B * S
+        matmul = 6 * tokens * (p_layers_active + p_head)
+        attn = 3 * attn_flops(S, S / 2,
+                              min(cfg.sliding_window or S, S) / 2
+                              if cfg.sliding_window else S / 2)
+        n_active = p_layers_active + p_head
+        return {"model_flops": 6 * n_active * tokens,
+                "step_flops": matmul + attn}
+    if shape.kind == "prefill":
+        tokens = B * S
+        matmul = 2 * tokens * (p_layers_active + p_head)
+        attn = attn_flops(S, S / 2,
+                          min(cfg.sliding_window or S, S) / 2
+                          if cfg.sliding_window else S / 2)
+        return {"model_flops": 2 * (p_layers_active + p_head) * tokens,
+                "step_flops": matmul + attn}
+    # decode: one token against a seq_len KV cache
+    tokens = B
+    matmul = 2 * tokens * (p_layers_active + p_head)
+    attn = attn_flops(1, S, min(cfg.sliding_window or S, S)
+                      if cfg.sliding_window else S)
+    return {"model_flops": 2 * (p_layers_active + p_head) * tokens,
+            "step_flops": matmul + attn}
+
+
+def lm_weight_bytes(cfg: TransformerConfig, fp8: bool) -> float:
+    n = cfg.param_count_estimate()
+    return n * (1.0 if fp8 else 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Recsys
+# ---------------------------------------------------------------------------
+
+
+def recsys_step_flops(cfg: RecsysConfig, shape: ShapeSpec) -> Dict[str, float]:
+    d, L, NF = cfg.embed_dim, cfg.seq_len, cfg.n_sparse_fields
+    fam = cfg.family
+    B = shape.global_batch
+    N_cand = shape.n_candidates
+
+    if fam == "two_tower":
+        user_in = d + NF * d
+        per_user = _mlp_flops((user_in, *cfg.tower_mlp))
+        per_item = _mlp_flops((d, *cfg.tower_mlp))
+        dense_params = per_user / 2 + per_item / 2
+    elif fam == "din":
+        per_attn = L * _mlp_flops((4 * d, *cfg.attn_mlp, 1))
+        per_user = per_attn + _mlp_flops((2 * d + NF * d, *cfg.mlp, 1))
+        per_item = 0
+        dense_params = per_user / 2
+    elif fam == "dien":
+        g = cfg.gru_dim
+        per_gru = L * 2 * (3 * d * g + 3 * g * g)
+        per_augru = L * 2 * (3 * g * g + 3 * g * g)
+        per_user = per_gru + per_augru + _mlp_flops((g + d + NF * d,
+                                                     *cfg.mlp, 1))
+        per_item = 0
+        dense_params = per_user / 2
+    else:  # mind
+        per_caps = cfg.capsule_iters * (L * 2 * d * d
+                                        + 2 * cfg.n_interests * L * d * 2)
+        per_user = per_caps + cfg.n_interests * _mlp_flops(
+            (d + NF * d, d))
+        per_item = 0
+        dense_params = per_user / 2
+
+    if shape.kind == "train":
+        step = 3 * B * (per_user + per_item)
+        if fam in ("two_tower", "mind"):
+            step += 3 * 2 * B * B * (cfg.tower_mlp[-1] if fam == "two_tower"
+                                     else d)
+        return {"model_flops": step, "step_flops": step}
+    if shape.kind == "retrieval":
+        if fam == "two_tower":
+            step = per_user + N_cand * per_item + 2 * N_cand * cfg.tower_mlp[-1]
+        elif fam == "mind":
+            step = per_user + 2 * N_cand * d * cfg.n_interests
+        else:  # din / dien re-run target attention per candidate
+            step = N_cand * per_user
+        return {"model_flops": step, "step_flops": step}
+    step = B * (per_user + per_item)
+    return {"model_flops": step, "step_flops": step}
+
+
+def recsys_weight_bytes(cfg: RecsysConfig, fp8: bool) -> float:
+    table = cfg.n_items * cfg.embed_dim + \
+        cfg.n_sparse_fields * cfg.field_vocab * cfg.embed_dim
+    return table * 4.0  # tables stay f32 (policy)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+
+def gnn_step_flops(cfg: GNNConfig, shape: ShapeSpec) -> Dict[str, float]:
+    from repro.launch.steps import _gnn_cell_dims
+    N, E, dF, level, n_graphs = _gnn_cell_dims(shape)
+    d = cfg.d_hidden
+    per_edge = _mlp_flops((2 * d + 1, d, d)) + _mlp_flops((d, d, 1))
+    per_node = _mlp_flops((2 * d, d, d))
+    enc = _mlp_flops((dF, d))
+    head = _mlp_flops((d, d, 16))
+    fwd = N * enc + cfg.n_layers * (E * per_edge + N * per_node) \
+        + (n_graphs or N) * head
+    return {"model_flops": 3 * fwd, "step_flops": 3 * fwd}
+
+
+# ---------------------------------------------------------------------------
+# OneRec
+# ---------------------------------------------------------------------------
+
+
+def onerec_step_flops(cfg: OneRecConfig, shape: ShapeSpec) -> Dict[str, float]:
+    return lm_step_flops(cfg.transformer, shape)
+
+
+# ---------------------------------------------------------------------------
+# Minimum-HBM-traffic model (the roofline memory term)
+#
+# XLA-CPU "bytes accessed" counts every op's operands unfused — a pessimistic
+# upper bound irrelevant to TPU.  This model counts the traffic a well-fused
+# TPU pipeline must do: weight reads (per TP shard), optimizer state traffic,
+# residual/activation stream (c_layer fused passes per layer), attention
+# score/prob traffic, KV-cache reads, embedding-table gathers.
+# ---------------------------------------------------------------------------
+
+ACT_PASSES_TRAIN = 12    # residual-stream read/writes per layer, fwd+bwd+remat
+ACT_PASSES_FWD = 4
+
+
+def lm_memory_bytes(cfg: TransformerConfig, shape: ShapeSpec, n_dev: int,
+                    model_par: int, fp8: bool) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    N = cfg.param_count_estimate()
+    N_active = cfg.active_param_count_estimate()
+    wbytes = 1.0 if fp8 else 2.0
+    kvb = 1.0 if "float8" in getattr(cfg, "kv_cache_dtype", "bfloat16") \
+        else 2.0
+
+    if shape.kind == "train":
+        tokens_chip = B * S / n_dev
+        # bf16 weights read fwd+bwd (TP shard), grads + f32 adam m/v r/w on
+        # the (data x model)-sharded slice
+        w = (N / model_par) * 2 * 2 + (N / n_dev) * (4 + 4 + 16 + 4)
+        acts = tokens_chip * D * 2 * ACT_PASSES_TRAIN * cfg.n_layers
+        attn = 3 * 2 * (B / n_dev) * H * S * (S / 2) * 4 / 4  # probs bf16 r+w
+        return w + acts + attn
+    if shape.kind == "prefill":
+        tokens_chip = B * S / n_dev
+        w = (N / model_par) * wbytes
+        acts = tokens_chip * D * 2 * ACT_PASSES_FWD * cfg.n_layers
+        kv = 2 * cfg.n_layers * (B / n_dev) * S * K * hd * kvb
+        attn = 2 * (B / n_dev) * H * S * (S / 2) * 2 / 4
+        return w + acts + kv + attn
+    # decode: stream active weights + read the KV cache
+    w = (N_active if cfg.moe else N) / model_par * wbytes
+    kv_len = min(cfg.sliding_window or S, S) if cfg.sliding_window else S
+    n_global = cfg.n_layers // cfg.global_interval if cfg.global_interval \
+        else 0
+    n_local = cfg.n_layers - n_global if cfg.global_interval else 0
+    if cfg.global_interval:
+        kv_tokens = n_local * min(cfg.sliding_window, S) + n_global * S
+    else:
+        kv_tokens = cfg.n_layers * S
+    kv = 2 * (B / n_dev) * kv_tokens * K * hd * kvb
+    acts = (B / n_dev) * D * 2 * ACT_PASSES_FWD * cfg.n_layers
+    return w + kv + acts
+
+
+def recsys_memory_bytes(cfg: RecsysConfig, shape: ShapeSpec, n_dev: int
+                        ) -> float:
+    d, L, NF = cfg.embed_dim, cfg.seq_len, cfg.n_sparse_fields
+    B = max(shape.global_batch, 1)
+    N_cand = shape.n_candidates
+    rows = B / n_dev * (L + 1 + NF) + N_cand / n_dev
+    gather = rows * d * 4
+    dense_w = 4e6  # MLP weights, replicated, read once
+    if shape.kind == "train":
+        # dense AdamW touches EVERY table row (a real inefficiency this
+        # framework surfaces; see EXPERIMENTS.md §Perf notes)
+        table = (cfg.n_items + NF * cfg.field_vocab) * d
+        return gather * 3 + dense_w + table / n_dev * 4 * 6
+    return gather + dense_w
+
+
+def gnn_memory_bytes(cfg: GNNConfig, shape: ShapeSpec, n_dev: int) -> float:
+    from repro.launch.steps import _gnn_cell_dims
+    N, E, dF, level, n_graphs = _gnn_cell_dims(shape)
+    d = cfg.d_hidden
+    per_layer = (2 * E * d * 4          # gathered h_src/h_dst (bf16 r+w ~4B)
+                 + E * d * 4            # messages
+                 + N * d * 4)           # scatter target
+    return (N * dF * 4 + cfg.n_layers * per_layer * 3) / n_dev
+
+
+def cell_memory_bytes(arch: str, shape_name: str, n_dev: int,
+                      model_par: int = 16) -> float:
+    mod = registry.get_arch(arch)
+    cfg = mod.CONFIG
+    shape = mod.SHAPES[shape_name]
+    if mod.FAMILY == "lm":
+        return lm_memory_bytes(cfg, shape, n_dev, model_par,
+                               fp8=shape.kind in ("prefill", "decode"))
+    if mod.FAMILY == "recsys":
+        return recsys_memory_bytes(cfg, shape, n_dev)
+    if mod.FAMILY == "gnn":
+        return gnn_memory_bytes(cfg, shape, n_dev)
+    return lm_memory_bytes(cfg.transformer, shape, n_dev, model_par,
+                           fp8=shape.kind in ("prefill", "decode"))
+
+
+def cell_analytics(arch: str, shape_name: str) -> Dict[str, float]:
+    mod = registry.get_arch(arch)
+    cfg = mod.CONFIG
+    shape = mod.SHAPES[shape_name]
+    if mod.FAMILY == "lm":
+        out = lm_step_flops(cfg, shape)
+        out["weight_bytes"] = lm_weight_bytes(
+            cfg, fp8=shape.kind in ("prefill", "decode"))
+    elif mod.FAMILY == "recsys":
+        out = recsys_step_flops(cfg, shape)
+        out["weight_bytes"] = recsys_weight_bytes(
+            cfg, fp8=shape.kind != "train")
+    elif mod.FAMILY == "gnn":
+        out = gnn_step_flops(cfg, shape)
+        out["weight_bytes"] = 4e5
+    else:
+        out = onerec_step_flops(cfg, shape)
+        out["weight_bytes"] = lm_weight_bytes(
+            cfg.transformer, fp8=shape.kind in ("prefill", "decode"))
+    return out

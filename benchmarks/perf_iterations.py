@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> measure.
+
+Three cells (chosen per the assignment: worst roofline fraction /
+most collective-bound / most paper-representative):
+
+  A. deepseek-coder-33b train_4k  — baseline does NOT fit (176 GB/chip
+     temp): sequence-parallel residual stream (TRAIN_RULES_SP) + smaller
+     attention chunks.
+  B. gemma3-1b train_4k           — collective-bound 6:1: DP/FSDP-dominant
+     re-sharding (TRAIN_RULES_FSDP; 4 q-heads cannot feed TP-16).
+  C. onerec-v2 serve_b32 (paper)  — memory/launch-bound decode: fused
+     3-token generation (lax.scan decode), serving-replica mesh (TP-8,
+     32 independent replicas per pod) instead of whole-pod serving.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_iterations [--cell A|B|C]
+Writes results/perf/<cell>__<variant>.json (same schema as the dry-run).
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from repro.configs import registry
+from repro.distributed.sharding import RULE_SETS, use_mesh
+from repro.launch.dryrun import collective_bytes, shardings_for
+from repro.launch.steps import build_bundle
+from benchmarks.analytic import cell_analytics, cell_memory_bytes
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+OUT = "results/perf"
+
+
+def lower_and_measure(bundle, mesh, rules_name: str, label: str,
+                      arch: str, shape: str, model_par: int = 16,
+                      scale: float = 1.0) -> dict:
+    """``scale``: tokens-per-program multiplier for the analytic terms
+    (fused multi-token decode programs do `scale` steps of work)."""
+    rules = RULE_SETS[rules_name]
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        in_sh = shardings_for(bundle.args, bundle.arg_axes, mesh, rules)
+        jitted = jax.jit(bundle.fn, in_shardings=in_sh,
+                         donate_argnums=bundle.donate)
+        compiled = jitted.lower(*bundle.args).compile()
+    n_dev = mesh.size
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    ana = cell_analytics(arch, shape)
+    hlo_flops = float(cost.get("flops", 0.0))
+    corr = max(1.0, (scale * ana["step_flops"] / n_dev)
+               / max(hlo_flops, 1.0))
+    flops = hlo_flops * corr
+    mem_bytes = scale * cell_memory_bytes(arch, shape, n_dev,
+                                          model_par=model_par)
+    rec = {
+        "label": label, "arch": arch, "shape": shape, "n_devices": n_dev,
+        "rules": rules_name,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_chip": flops,
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": mem_bytes / HBM_BW,
+        "t_collective_s": coll["bytes_total"] / ICI_BW,
+        "collective_bytes": coll["bytes_total"],
+        "collective_counts": {k: v for k, v in coll.items()
+                              if k.startswith("count")},
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "model_flops": scale * ana["model_flops"],
+        "scale": scale,
+    }
+    rec["bound_s"] = max(rec["t_compute_s"], rec["t_memory_s"],
+                         rec["t_collective_s"])
+    rec["dominant"] = max(("compute", "memory", "collective"),
+                          key=lambda k: rec[f"t_{k}_s"])
+    rec["mfu_projected"] = rec["model_flops"] / (
+        n_dev * PEAK_FLOPS * rec["bound_s"])
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{arch}__{shape}__{label}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[perf] {arch}/{shape} {label:24s} comp={rec['t_compute_s']:.3e} "
+          f"mem={rec['t_memory_s']:.3e} coll={rec['t_collective_s']:.3e} "
+          f"dom={rec['dominant']:10s} bound={rec['bound_s']:.3e}s "
+          f"temp={rec['temp_bytes']/1e9:.1f}GB mfu={rec['mfu_projected']:.2%}",
+          flush=True)
+    return rec
+
+
+def mesh_2d(data, model):
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Cell A: deepseek-coder-33b train_4k
+# ---------------------------------------------------------------------------
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _patched(arch, **cfg_overrides):
+    """Temporarily override an arch's CONFIG (bundle build + analytics must
+    both see the override, so cells wrap the whole variant in this)."""
+    mod = registry.get_arch(arch)
+    orig = mod.CONFIG
+    try:
+        if cfg_overrides:
+            mod.CONFIG = dataclasses.replace(orig, **cfg_overrides)
+        yield
+    finally:
+        mod.CONFIG = orig
+
+
+def _with_cfg(arch, shape, **cfg_overrides):
+    """Fresh bundle with config overrides.  NOTE: bundles must be rebuilt
+    per variant — the trace (and the sharding-rule context it captured) is
+    cached on the function object."""
+    with _patched(arch, **cfg_overrides):
+        return build_bundle(arch, shape, abstract=True)
+
+
+def cell_a():
+    arch, shape = "deepseek-coder-33b", "train_4k"
+    mesh = mesh_2d(16, 16)
+    lower_and_measure(_with_cfg(arch, shape), mesh, "train", "v0_baseline",
+                      arch, shape)
+    # v1: sequence-parallel residual stream.
+    # Hypothesis: per-layer saved activations (B/16,4096,7168)bf16 x 62
+    # = 58 GB/chip shrink 16x to 3.6 GB; adds AG+RS per layer
+    # (~2 x act bytes / chip-step ~ 230 MB/layer) -> collective +~0.3s,
+    # temp should drop by tens of GB.
+    lower_and_measure(_with_cfg(arch, shape), mesh, "train_sp",
+                      "v1_seq_parallel", arch, shape)
+    # v2: + smaller attention chunk (512): chunk transient
+    # (B/chip,K,G,c,S) f32 halves.  Hypothesis: temp -c*S*f32 per layer.
+    lower_and_measure(_with_cfg(arch, shape, attn_chunk_size=512), mesh,
+                      "train_sp", "v2_sp_chunk512", arch, shape)
+
+
+# ---------------------------------------------------------------------------
+# Cell B: gemma3-1b train_4k
+# ---------------------------------------------------------------------------
+
+
+def cell_b():
+    arch, shape = "gemma3-1b", "train_4k"
+    mesh = mesh_2d(16, 16)
+    lower_and_measure(_with_cfg(arch, shape), mesh, "train", "v0_baseline",
+                      arch, shape)
+    # v1: FSDP/DP-dominant. Hypothesis: TP-16 is wasted on 4 q heads &
+    # d_ff 6912; per-layer TP all-reduces (~16x4096x1152x2 x4 x26
+    # ~ 15 GB/chip) vanish; weight AG+grad RS ~ 3 x 2 GB remain ->
+    # collective 0.78s -> ~0.15s; per-chip batch 16 -> 1.
+    lower_and_measure(_with_cfg(arch, shape), mesh, "train_fsdp", "v1_fsdp",
+                      arch, shape)
+    # v2: + no remat. Hypothesis (from v1's surprise): remat RE-RUNS the
+    # per-layer FSDP weight all-gathers in the backward pass; dropping it
+    # should cut collectives further at the cost of saved activations.
+    lower_and_measure(_with_cfg(arch, shape, remat=False), mesh,
+                      "train_fsdp", "v2_fsdp_noremat", arch, shape)
+    # v3: no-remat memory blowup fix: smaller attention chunks shrink the
+    # saved f32 score/prob transients. Hypothesis: temp 51 GB -> <16 GB
+    # with collectives still at the v2 level.
+    lower_and_measure(_with_cfg(arch, shape, remat=False,
+                                attn_chunk_size=512), mesh,
+                      "train_fsdp", "v3_fsdp_noremat_c512", arch, shape)
+    # v4: keep remat (v1), shrink attention chunks instead. Hypothesis:
+    # v1's 21 GB temp is chunk-scan f32 transients; c512 halves them ->
+    # fits 16 GB at v1's collective level.
+    lower_and_measure(_with_cfg(arch, shape, attn_chunk_size=512), mesh,
+                      "train_fsdp", "v4_fsdp_c512", arch, shape)
+
+
+# ---------------------------------------------------------------------------
+# Cell C: onerec-v2 serve_b32 (the paper's serving configuration)
+# ---------------------------------------------------------------------------
+
+
+def _onerec_fused_bundle(mesh_model: int):
+    """Decode bundle generating all 3 semantic-ID tokens in one program."""
+    from repro.launch.steps import StepBundle, cache_axes, params_axes, \
+        batch_axes, _maybe_quantize, _abstract
+    from repro.models import onerec as onerec_model
+    from repro.models import transformer as tfm
+    mod = registry.get_arch("onerec-v2")
+    cfg = mod.CONFIG
+    shape = mod.SHAPES["serve_b32"]
+    B = shape.global_batch
+    serve_tf = dataclasses.replace(cfg.transformer, remat=False)
+    init_fn = _maybe_quantize(
+        lambda: onerec_model.init_onerec(jax.random.PRNGKey(0), cfg), True)
+
+    def step(params, cache, batch, index):
+        return tfm.decode_fused(params["backbone"], batch["tokens"],
+                                serve_tf, cache, index, cfg.decode_len)
+
+    params = _abstract(init_fn)
+    cache = _abstract(lambda: onerec_model.init_cache(cfg, B))
+    batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    axes = (params_axes(params), cache_axes(cache),
+            batch_axes(batch, {"tokens": ("batch", "seq")}), ())
+    return StepBundle("onerec-v2", "serve_b32", "decode", step,
+                      (params, cache, batch, idx), axes, donate=(1,))
+
+
+def cell_c():
+    arch, shape = "onerec-v2", "serve_b32"
+    mesh = mesh_2d(16, 16)
+    b = build_bundle(arch, shape, abstract=True)   # fp8 by default
+    r0 = lower_and_measure(b, mesh, "infer", "v0_baseline_1tok", arch, shape)
+    # v1: fused 3-token generation. Hypothesis: per-item collective LAUNCH
+    # count drops ~3x (one program), bytes comparable (weights re-streamed
+    # per scan step); host round-trips eliminated.
+    bf = _onerec_fused_bundle(16)
+    r1 = lower_and_measure(bf, mesh, "infer", "v1_fused_3tok", arch, shape,
+                           scale=3.0)
+    # v2: serving-replica mesh — TP-8, one replica = 8 chips (the pod runs
+    # 32 independent replicas). Hypothesis: per-step weight stream/chip
+    # rises 2x (0.5B fp8 / 8), but collectives shrink (8-way TP on a 2k
+    # model) and per-chip throughput jumps ~
+    # (batch 32 / 8 chips) vs (batch 32 / 256 chips) = 8x items/s/chip.
+    mesh8 = mesh_2d(1, 8)
+    b8 = build_bundle(arch, shape, abstract=True)
+    r2 = lower_and_measure(b8, mesh8, "infer", "v2_replica_tp8", arch, shape,
+                           model_par=8)
+    bf8 = _onerec_fused_bundle(8)
+    r3 = lower_and_measure(bf8, mesh8, "infer", "v3_replica_fused", arch,
+                           shape, model_par=8, scale=3.0)
+    # per-chip throughput comparison (items/s/chip); fused programs cover
+    # all 3 tokens, per-token programs need 3 sequential launches
+    for r, n_tok in ((r0, 1), (r1, 3), (r2, 1), (r3, 3)):
+        items_s = 32 / (r["bound_s"] * (3 / n_tok))
+        print(f"   {r['label']:22s} -> {items_s:8.0f} items/s "
+              f"({items_s / r['n_devices']:7.1f} per chip), "
+              f"collective launches/item: "
+              f"{sum(r['collective_counts'].values()) * (3 / n_tok):.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Cell D (beyond-paper ablation): FP8 KV cache on the 32k-context decode —
+# the paper's Limitations name lower-precision exploration as open; at 32k
+# the KV read dominates the decode memory term.
+# ---------------------------------------------------------------------------
+
+
+def cell_d():
+    arch, shape = "llama3-8b", "decode_32k"
+    mesh = mesh_2d(16, 16)
+    lower_and_measure(_with_cfg(arch, shape), mesh, "infer",
+                      "v0_kv_bf16", arch, shape)
+    # Hypothesis: decode memory = weights (8B x 1B/16 = 0.5 GB) + KV read
+    # (32 layers x 8 kv x 128 x 32768 x B8/chip x 2 x 2B ~ 4.3 GB/chip):
+    # fp8 KV halves the dominant component -> memory term ~ -45%.
+    with _patched(arch, kv_cache_dtype="float8_e4m3fn"):
+        b = build_bundle(arch, shape, abstract=True)
+        lower_and_measure(b, mesh, "infer", "v1_kv_fp8", arch, shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=("A", "B", "C", "D", "all"),
+                    default="all")
+    args = ap.parse_args()
+    if args.cell in ("A", "all"):
+        cell_a()
+    if args.cell in ("B", "all"):
+        cell_b()
+    if args.cell in ("C", "all"):
+        cell_c()
+    if args.cell in ("D", "all"):
+        cell_d()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh):
+  compute term    = FLOPs_per_chip / 197 TFLOP/s   (bf16 MXU peak, v5e)
+  memory term     = bytes_per_chip / 819 GB/s      (HBM bw, v5e)
+  collective term = coll_bytes_per_chip / 50 GB/s  (per-link ICI, v5e)
+
+FLOPs/bytes sources: ``compiled.cost_analysis()`` per-chip numbers. XLA-CPU
+counts while(scan) bodies ONCE, so cells whose HLO FLOPs fall below the
+analytic attention-aware model are corrected by the structural factor
+``analytic/hlo`` applied to BOTH flops and bytes (the undercount lives in
+the same loop bodies); corrected and raw values are both reported.
+Collective bytes come from the partitioned HLO text with while-body
+multipliers (repro/launch/dryrun.py).
+
+MODEL_FLOPS = 6·N·D (train, N = active params for MoE) or 2·N·D
+(inference); the ratio MODEL_FLOPS / (chips x HLO_FLOPs) flags
+remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from benchmarks.analytic import cell_analytics, cell_memory_bytes  # noqa: E402
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    n_dev = rec["n_devices"]
+    ana = cell_analytics(arch, shape)
+
+    hlo_flops = rec["flops_per_chip"]
+    hlo_bytes = rec["bytes_per_chip"]
+    analytic_per_chip = ana["step_flops"] / n_dev
+    # scan-undercount correction (XLA-CPU counts while bodies once)
+    corr = max(1.0, analytic_per_chip / max(hlo_flops, 1.0))
+    flops = hlo_flops * corr
+    # memory term: min-traffic model for a fused TPU pipeline (the raw HLO
+    # "bytes accessed" is an unfused upper bound — kept for reference)
+    mem_bytes = cell_memory_bytes(arch, shape, n_dev)
+    coll = rec["collectives"]["bytes_total"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = mem_bytes / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = ana["model_flops"]
+    useful_ratio = model_flops / max(flops * n_dev, 1.0)
+    bound_time = max(terms.values())
+    roofline_frac = t_compute / bound_time if bound_time > 0 else 0.0
+
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "kind": rec["kind"], "n_devices": n_dev,
+        "note": rec.get("note", ""),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_per_chip_raw": hlo_flops,
+        "hlo_bytes_per_chip_raw": hlo_bytes,
+        "mem_bytes_per_chip_model": mem_bytes,
+        "flops_per_chip_corrected": flops,
+        "scan_correction": corr,
+        "useful_ratio": min(useful_ratio, 1.0),
+        "roofline_fraction": roofline_frac,
+        "temp_bytes_per_chip": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes", 0),
+    }
+
+
+_SUGGEST = {
+    ("compute",): "compute-bound: fp8/bf16 MXU utilization + fusion are the "
+                  "lever; good place to be",
+    ("memory",): "memory-bound: shrink bytes/step — fp8 weights, bf16 "
+                 "activations, larger per-chip batch, fuse epilogues",
+    ("collective",): "collective-bound: reshard to cut all-gathers "
+                     "(sequence-sharded activations), overlap collectives "
+                     "with compute, fp8 collective payloads",
+}
+
+
+def suggestion(row: Dict) -> str:
+    return _SUGGEST[(row["dominant"],)]
+
+
+def load_all(dryrun_dir: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict], mesh: str = "single") -> str:
+    hdr = (f"{'arch':22s} {'shape':14s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>6s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:14s} {r['t_compute_s']:9.2e} "
+            f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+            f"{r['dominant'][:6]:>6s} {r['useful_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.1f}%")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    print(format_table(rows, "single"))
+    print()
+    out = "results/roofline.json"
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark driver — one bench per paper table/figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows (after the human-readable
+sections).  Heavy at-scale numbers come from the dry-run artifacts
+(results/dryrun) produced by ``repro.launch.dryrun``; everything else runs
+live at reduced scale on CPU.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import (bench_breakdown, bench_distribution,
+                            bench_kernels, bench_latency_throughput)
+    from benchmarks import roofline as roofline_mod
+
+    print("=" * 72)
+    print("Figure 1 — distribution statistics across model families")
+    print("=" * 72)
+    rows += bench_distribution.run()
+
+    print("\n" + "=" * 72)
+    print("Kernels — validation + microbenchmarks")
+    print("=" * 72)
+    rows += bench_kernels.run()
+
+    print("\n" + "=" * 72)
+    print("§5.2 — serving latency / throughput (bf16 baseline vs fp8 stack)")
+    print("=" * 72)
+    rows += bench_latency_throughput.run()
+
+    print("\n" + "=" * 72)
+    print("Figure 3 — throughput-gain breakdown")
+    print("=" * 72)
+    rows += bench_breakdown.run()
+
+    print("\n" + "=" * 72)
+    print("Roofline (from multi-pod dry-run artifacts)")
+    print("=" * 72)
+    if os.path.isdir("results/dryrun"):
+        rl_rows = roofline_mod.load_all()
+        print(roofline_mod.format_table(rl_rows, "single"))
+        for r in rl_rows:
+            if r["mesh"] == "single":
+                rows.append(
+                    f"roofline/{r['arch']}/{r['shape']},"
+                    f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.0f},"
+                    f"dom={r['dominant']}")
+    else:
+        print("(no dry-run artifacts; run repro.launch.dryrun)")
+
+    print("\n" + "=" * 72)
+    print("CSV: name,us_per_call,derived")
+    print("=" * 72)
+    for row in rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Offline A/B evaluation (paper Table 1 analogue): FP8 vs BF16 serving on
+held-out synthetic interactions — recommendation metrics must be at parity.
+
+Trains a small OneRec on the semantic-ID stream, then serves the SAME
+held-out requests through both precision stacks and compares hit-rate /
+first-code agreement, the offline stand-ins for the paper's online
+App-Stay-Time / Watch-Time / etc. deltas.
+
+    PYTHONPATH=src python examples/ab_eval.py --steps 200
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.data.onerec_data import OneRecStreamConfig, SemanticIDStream
+from repro.models import onerec
+from repro.optim import OptimizerConfig, adamw_init, adamw_update
+from repro.serving import EngineConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--eval-batches", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_arch("onerec-v2").reduced_config()
+    stream = SemanticIDStream(OneRecStreamConfig(
+        codebook_size=cfg.transformer.vocab_size - 64,
+        history_len=cfg.history_len, global_batch=args.batch, n_interests=8))
+
+    params = onerec.init_onerec(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=10,
+                              total_steps=args.steps)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(onerec.train_loss)(params, batch,
+                                                            cfg)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return loss, params, opt
+
+    for i in range(args.steps):
+        b = stream.batch_at(i)
+        loss, params, opt = step(params, opt,
+                                 {k: jnp.asarray(v) for k, v in b.items()
+                                  if k != "target"})
+    print(f"trained {args.steps} steps, final loss {float(loss):.3f}")
+
+    def evaluate(use_fp8):
+        eng = ServingEngine(params, cfg, EngineConfig(batch_size=args.batch,
+                                                      use_fp8=use_fp8))
+        hits = n = 0
+        gen = []
+        for s in range(10_000, 10_000 + args.eval_batches):
+            r = stream.serve_request_at(s)
+            out = eng.generate_batch(r["tokens"], r["profile"])
+            hits += int((out[:, 0] == r["target"][:, 0]).sum())
+            n += out.shape[0]
+            gen.append(out)
+        return hits / n, np.concatenate(gen)
+
+    h_bf16, g_bf16 = evaluate(False)
+    h_fp8, g_fp8 = evaluate(True)
+    agree = float(np.mean(g_bf16 == g_fp8))
+    delta = (h_fp8 - h_bf16) / max(h_bf16, 1e-9) * 100
+
+    print("\nTable-1 analogue (offline A/B, held-out interactions):")
+    print(f"{'metric':28s} {'BF16':>8s} {'FP8':>8s} {'delta':>8s}")
+    print(f"{'hit-rate@1 (first code)':28s} {h_bf16:8.3f} {h_fp8:8.3f} "
+          f"{delta:+7.2f}%")
+    print(f"{'generated-token agreement':28s} {'':8s} {agree:8.3f}")
+    verdict = "PASS (no degradation)" if abs(delta) < 5.0 else "INVESTIGATE"
+    print(f"verdict: {verdict}  (paper's online deltas were within ±1% on "
+          f"all core metrics)")
+
+
+if __name__ == "__main__":
+    main()

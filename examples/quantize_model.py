@@ -1,0 +1,52 @@
+"""PTQ workflow example: checkpoint -> distribution analysis -> quantize ->
+save the (fp8, scale) deployment artifact -> verify.
+
+    PYTHONPATH=src python examples/quantize_model.py
+"""
+
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.registry import get_arch
+from repro.core import (PAPER_POLICY, collect_weight_stats,
+                        feasibility_verdict, quantize_params)
+from repro.models import onerec
+
+CKPT = "/tmp/quantize_example"
+
+cfg = get_arch("onerec-v2").reduced_config()
+params = onerec.init_onerec(jax.random.PRNGKey(0), cfg)
+
+# pretend this came from a training run
+shutil.rmtree(CKPT, ignore_errors=True)
+path = save_checkpoint(os.path.join(CKPT, "bf16"), 1000, params)
+print(f"source checkpoint: {path}")
+
+# 1. feasibility: distribution analysis (paper §3.2)
+restored, _ = load_checkpoint(path, jax.eval_shape(lambda: params))
+rep = collect_weight_stats(restored, "onerec-v2")
+print(rep.summary(), "->", feasibility_verdict(rep))
+
+# 2. PTQ (paper §4.1) + deployment artifact with (fp8, fp32-scale) pairs
+qparams, ptq = quantize_params(restored, PAPER_POLICY, with_report=True,
+                               compute_errors=True)
+print(ptq.summary())
+qpath = save_checkpoint(os.path.join(CKPT, "fp8"), 1000, qparams)
+print(f"fp8 deployment checkpoint: {qpath}")
+
+# 3. verify the artifact round-trips and serves
+q2, _ = load_checkpoint(qpath, jax.eval_shape(
+    lambda: quantize_params(params, PAPER_POLICY)))
+T = cfg.history_len * cfg.n_codebooks
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, T), 0,
+                                      cfg.vocab_size),
+         "profile": jax.random.normal(jax.random.PRNGKey(2),
+                                      (2, onerec.PROFILE_DIM))}
+lg1, _ = onerec.forward(qparams, batch, cfg)
+lg2, _ = onerec.forward(q2, batch, cfg)
+print("deployment artifact bitwise-faithful:",
+      bool(np.array_equal(np.asarray(lg1), np.asarray(lg2))))

@@ -1,0 +1,47 @@
+"""Quickstart: FP8 post-training quantization of OneRec-V2 in 30 lines.
+
+Builds a reduced OneRec-V2, quantizes it with the paper's §4.1 policy
+(per-channel weights x per-token dynamic activations on Linears, 1x128 /
+128x128 blocks on the MoE grouped GEMM), and compares BF16 vs FP8 inference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import PAPER_POLICY, collect_weight_stats, quantize_params
+from repro.models import onerec
+
+cfg = get_arch("onerec-v2").reduced_config()
+params = onerec.init_onerec(jax.random.PRNGKey(0), cfg)
+
+# 1. distribution analysis (paper §3.2): is this model fp8-friendly?
+report = collect_weight_stats(params, "onerec-v2-mini")
+print(report.summary())
+
+# 2. one-call PTQ (paper §4.1): weights -> (fp8, fp32 scale) pairs
+qparams, ptq_report = quantize_params(params, PAPER_POLICY,
+                                      with_report=True, compute_errors=True)
+print(ptq_report.summary())
+
+# 3. BF16 vs FP8 inference on the same inputs
+T = cfg.history_len * cfg.n_codebooks
+batch = {
+    "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, T), 0,
+                                 cfg.vocab_size),
+    "profile": jax.random.normal(jax.random.PRNGKey(2),
+                                 (4, onerec.PROFILE_DIM)),
+}
+logits_bf16, _ = onerec.forward(params, batch, cfg)
+logits_fp8, _ = onerec.forward(qparams, batch, cfg)
+
+a = np.asarray(logits_bf16, np.float32).ravel()
+b = np.asarray(logits_fp8, np.float32).ravel()
+cos = a @ b / (np.linalg.norm(a) * np.linalg.norm(b))
+print(f"BF16-vs-FP8 logit cosine similarity: {cos:.5f}")
+
+items = onerec.generate_items(qparams, batch, cfg)
+print(f"FP8-generated semantic-ID items:\n{np.asarray(items)}")

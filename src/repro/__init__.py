@@ -1,0 +1,19 @@
+"""RecoGEM-JAX: quantized inference framework for generative recommendation.
+
+Reproduction (and beyond-paper extension) of "Quantized Inference for
+OneRec-V2" (Kuaishou, 2026): an FP8 post-training-quantization framework plus
+an optimized, multi-pod inference/training infrastructure built on JAX
+(pjit/shard_map) with Pallas TPU kernels on the compute hot spots.
+"""
+
+__version__ = "1.0.0"
+
+from repro.core.quant import (  # noqa: F401
+    QuantizedTensor,
+    quantize_per_channel,
+    quantize_per_token,
+    quantize_blockwise,
+    fp8_linear,
+)
+from repro.core.policy import QuantPolicy  # noqa: F401
+from repro.core.ptq import quantize_params  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+)

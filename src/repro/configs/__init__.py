@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    GNNConfig,
+    OneRecConfig,
+    RecsysConfig,
+    ShapeSpec,
+    TransformerConfig,
+)
+from repro.configs.registry import ARCHS, get_arch, list_archs  # noqa: F401

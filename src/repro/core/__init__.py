@@ -1,0 +1,37 @@
+# The paper's primary contribution: the FP8 post-training-quantization
+# framework (quant primitives, PTQ pass, policy, distribution analysis).
+from repro.core.quant import (  # noqa: F401
+    E4M3,
+    E5M2,
+    FP8_MAX,
+    QuantizedTensor,
+    cast_to_fp8,
+    fp8_block_matmul,
+    fp8_grouped_matmul,
+    fp8_linear,
+    is_quantized,
+    matmul_any,
+    quant_error,
+    quantize_blockwise,
+    quantize_per_channel,
+    quantize_per_tensor,
+    quantize_per_token,
+)
+from repro.core.policy import (  # noqa: F401
+    BASELINE_POLICY,
+    PAPER_POLICY,
+    QuantPolicy,
+)
+from repro.core.ptq import (  # noqa: F401
+    PTQReport,
+    calibrate_activation_scales,
+    dequantize_params,
+    quantize_params,
+)
+from repro.core.stats import (  # noqa: F401
+    DistributionReport,
+    collect_activation_stats,
+    collect_weight_stats,
+    feasibility_verdict,
+    tensor_stats,
+)

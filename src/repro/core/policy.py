@@ -1,0 +1,98 @@
+"""Quantization policy: WHICH tensors get WHICH granularity (paper §4.1/§5.1).
+
+The paper quantizes only the computation-dominant operators — Linear layers
+(attention qkvo, dense-FFN linears) and the grouped GEMM of sparse-MoE
+experts — and leaves numerically sensitive / compute-light components
+(embeddings, norms, the MoE router, logits head) in high precision.
+
+Policies are declarative (path-glob based) so one policy covers the whole
+architecture zoo; per-arch configs may extend/override the default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Optional, Sequence, Tuple
+
+# Matches our param-naming convention (see repro/layers): every matmul weight
+# is a leaf called "kernel" inside a named projection module.
+DEFAULT_LINEAR_PATTERNS: Tuple[str, ...] = (
+    "*/attn/q_proj/kernel",
+    "*/attn/k_proj/kernel",
+    "*/attn/v_proj/kernel",
+    "*/attn/o_proj/kernel",
+    "*/mlp/gate/kernel",
+    "*/mlp/up/kernel",
+    "*/mlp/down/kernel",
+    "*/moe/shared/gate/kernel",
+    "*/moe/shared/up/kernel",
+    "*/moe/shared/down/kernel",
+    # recsys / onerec dense compute
+    "*/tower/*/kernel",
+    "*/interaction_mlp/*/kernel",
+    "*/score_mlp/*/kernel",
+)
+
+# The MoE grouped GEMM: stacked per-expert kernels, block-wise 1x128 / 128x128.
+DEFAULT_BLOCK_PATTERNS: Tuple[str, ...] = (
+    "*/moe/experts/gate",
+    "*/moe/experts/up",
+    "*/moe/experts/down",
+)
+
+# Never quantized (paper: "other numerically sensitive or less compute-
+# dominant components remain in their original precision").
+DEFAULT_EXCLUDE_PATTERNS: Tuple[str, ...] = (
+    "*embed*",
+    "*norm*",
+    "*/moe/router/*",
+    "*lm_head*",
+    "*bias*",
+    "*scale*",
+    "*/rotary/*",
+    "*augru*",       # DIEN recurrence: recurrent error accumulation
+    "*/coord_mlp/*",  # EGNN equivariant coordinate path
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Declarative FP8 PTQ policy."""
+
+    enabled: bool = True
+    fmt: str = "e4m3"                      # storage format
+    weight_granularity: str = "per_channel"
+    act_granularity: str = "per_token"     # dynamic, runtime amax (paper)
+    block: int = 128                       # MoE block granularity
+    linear_patterns: Tuple[str, ...] = DEFAULT_LINEAR_PATTERNS
+    block_patterns: Tuple[str, ...] = DEFAULT_BLOCK_PATTERNS
+    exclude_patterns: Tuple[str, ...] = DEFAULT_EXCLUDE_PATTERNS
+    # Minimum dims for block quantization to engage (both of the last two
+    # dims must be multiples of ``block``); linears fall back to per-channel.
+    min_dim: int = 2
+
+    def classify(self, path: str, ndim: int, shape: Sequence[int]) -> Optional[str]:
+        """Return 'linear' | 'block' | None for a param path."""
+        if not self.enabled or ndim < self.min_dim:
+            return None
+        if any(fnmatch.fnmatch(path, p) for p in self.exclude_patterns):
+            return None
+        if any(fnmatch.fnmatch(path, p) for p in self.block_patterns):
+            if shape[-1] % self.block == 0 and shape[-2] % self.block == 0:
+                return "block"
+            return "linear"  # paper's granularity needs alignment; degrade
+        if any(fnmatch.fnmatch(path, p) for p in self.linear_patterns):
+            return "linear"
+        return None
+
+    def replace(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper-faithful default: FP8 e4m3, per-channel W / per-token A on Linears,
+# 1x128 / 128x128 blocks on MoE grouped GEMM.
+PAPER_POLICY = QuantPolicy()
+
+# Everything in high precision — the FP16/BF16 baseline system.
+BASELINE_POLICY = QuantPolicy(enabled=False)

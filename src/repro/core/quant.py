@@ -1,0 +1,406 @@
+"""FP8 quantization primitives (the paper's §4.1 scheme).
+
+Implements the numerics of "Quantized Inference for OneRec-V2":
+
+  * Linear layers:   per-CHANNEL weight scales (offline, from the
+                     high-precision parameters) x per-TOKEN dynamic
+                     activation scales (runtime amax over the feature dim).
+  * MoE grouped GEMM: BLOCK-wise scales — activations ``1 x 128`` along the
+                     last dim, weights ``128 x 128``.
+  * Matmuls run in FP8 (e4m3) with FP32 accumulation and are cast back to
+    the high-precision compute dtype (bf16 on TPU) afterwards.
+  * Quantized weights are stored as ``(fp8 data, fp32 scale)`` pairs.
+
+Everything here is pure jnp and jit-safe; the Pallas kernels in
+``repro.kernels`` implement fused versions of the same contracts and are
+tested against these functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# FP8 formats
+# ---------------------------------------------------------------------------
+
+E4M3 = jnp.float8_e4m3fn
+E5M2 = jnp.float8_e5m2
+
+# e4m3fn has no inf; out-of-range casts produce NaN, so we always clamp to
+# the finite max before casting.
+FP8_MAX = {E4M3: 448.0, E5M2: 57344.0}
+
+DEFAULT_BLOCK = 128  # the paper's 1x128 / 128x128 block granularity
+_EPS = 1e-12
+
+
+def fp8_finfo_max(dtype) -> float:
+    return FP8_MAX[jnp.dtype(dtype).type if not isinstance(dtype, type) else dtype] \
+        if dtype in FP8_MAX else float(jnp.finfo(dtype).max)
+
+
+# ---------------------------------------------------------------------------
+# QuantizedTensor pytree
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """An fp8 tensor plus its fp32 scale(s).
+
+    ``granularity`` is one of:
+      * ``"per_tensor"``  — scale shape ``()``.
+      * ``"per_channel"`` — scale broadcastable against ``data`` with exactly
+        one non-singleton axis (the quantized-output-channel axis).
+      * ``"per_token"``   — scale has data's leading shape, last dim 1.
+      * ``"block"``       — 2-D blocked: ``data`` logically tiled in
+        ``block x block`` tiles (or ``1 x block`` for activations), scale has
+        one entry per tile.
+
+    Dequantized value == ``data.astype(f32) * broadcast(scale)``.
+    """
+
+    data: jax.Array          # fp8
+    scale: jax.Array         # fp32
+    granularity: str = "per_channel"
+    block: int = DEFAULT_BLOCK
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.granularity, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        return cls(data=data, scale=scale, granularity=aux[0], block=aux[1])
+
+    # -- helpers -------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def ndim(self):
+        return self.data.ndim
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        if self.granularity in ("block", "block_act"):
+            return _dequantize_block(self, dtype)
+        return (self.data.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def nbytes(self) -> int:
+        return int(np.prod(self.data.shape)) + 4 * int(np.prod(self.scale.shape))
+
+
+def is_quantized(x: Any) -> bool:
+    return isinstance(x, QuantizedTensor)
+
+
+# ---------------------------------------------------------------------------
+# Scale computation + casting
+# ---------------------------------------------------------------------------
+
+
+def _amax_to_scale(amax: jax.Array, fmt=E4M3) -> jax.Array:
+    """scale s.t. x/s fits the fp8 grid: s = amax / fp8_max (floored at eps)."""
+    return jnp.maximum(amax.astype(jnp.float32), _EPS) / FP8_MAX[fmt]
+
+
+def cast_to_fp8(x: jax.Array, scale: jax.Array, fmt=E4M3) -> jax.Array:
+    """Divide by scale, clamp into the finite fp8 range, round-to-nearest."""
+    fmax = FP8_MAX[fmt]
+    y = x.astype(jnp.float32) / scale
+    y = jnp.clip(y, -fmax, fmax)
+    return y.astype(fmt)
+
+
+def quantize_per_tensor(w: jax.Array, fmt=E4M3) -> QuantizedTensor:
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+    scale = _amax_to_scale(amax, fmt)
+    return QuantizedTensor(cast_to_fp8(w, scale, fmt), scale, "per_tensor")
+
+
+def quantize_per_channel(w: jax.Array, contract_axis: int = -2, fmt=E4M3) -> QuantizedTensor:
+    """Offline weight quantization, one scale per output channel (paper §4.1).
+
+    Reduces ONLY over the contraction (input) axis, so a scan-stacked kernel
+    ``(L, in, out)`` gets independent ``(L, 1, out)`` scales per layer.  The
+    scale folds out of the matmul: ``X @ (Wq * s) == (X @ Wq) * s``.
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=contract_axis, keepdims=True)
+    scale = _amax_to_scale(amax, fmt)
+    return QuantizedTensor(cast_to_fp8(w, scale, fmt), scale, "per_channel")
+
+
+def quantize_per_token(x: jax.Array, fmt=E4M3) -> QuantizedTensor:
+    """Runtime dynamic activation quantization: one scale per row/token.
+
+    Reduces over the last (feature) dim; any leading dims are "tokens".
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = _amax_to_scale(amax, fmt)
+    return QuantizedTensor(cast_to_fp8(x, scale, fmt), scale, "per_token")
+
+
+def _pad_to_multiple(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def quantize_blockwise(
+    w: jax.Array, block: int = DEFAULT_BLOCK, fmt=E4M3, act: bool = False
+) -> QuantizedTensor:
+    """Block-wise quantization (paper's MoE grouped-GEMM granularity).
+
+    * ``act=False`` (weights): ``block x block`` tiles over the LAST TWO dims;
+      leading dims (e.g. the expert dim of a stacked ``(E, in, out)`` tensor)
+      each get their own tile grid. Scale shape ``(..., in/b, out/b)``.
+    * ``act=True`` (activations): ``1 x block`` tiles along the last dim only.
+      Scale shape ``(..., tokens, in/b)``.
+
+    Shapes must be multiples of ``block`` (all production dims here are).
+    """
+    if act:
+        if w.shape[-1] % block:
+            raise ValueError(f"act dim {w.shape[-1]} not a multiple of {block}")
+        nb = w.shape[-1] // block
+        xb = w.reshape(*w.shape[:-1], nb, block)
+        amax = jnp.max(jnp.abs(xb.astype(jnp.float32)), axis=-1)          # (..., nb)
+        scale = _amax_to_scale(amax, fmt)                                  # (..., nb)
+        q = cast_to_fp8(xb, scale[..., None], fmt).reshape(w.shape)
+        return QuantizedTensor(q, scale, "block_act", block)
+
+    if w.ndim < 2:
+        raise ValueError("block weight quantization needs >=2 dims")
+    if w.shape[-1] % block or w.shape[-2] % block:
+        raise ValueError(f"weight dims {w.shape[-2:]} not multiples of {block}")
+    bi, bo = w.shape[-2] // block, w.shape[-1] // block
+    xb = w.reshape(*w.shape[:-2], bi, block, bo, block)
+    amax = jnp.max(jnp.abs(xb.astype(jnp.float32)), axis=(-3, -1))        # (..., bi, bo)
+    scale = _amax_to_scale(amax, fmt)
+    q = cast_to_fp8(xb, scale[..., :, None, :, None], fmt).reshape(w.shape)
+    return QuantizedTensor(q, scale, "block", block)
+
+
+def _dequantize_block(q: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    b = q.block
+    d = q.data.astype(jnp.float32)
+    if q.granularity == "block_act":  # activation: 1 x block tiles on last dim
+        nb = d.shape[-1] // b
+        xb = d.reshape(*d.shape[:-1], nb, b) * q.scale[..., None]
+        return xb.reshape(d.shape).astype(dtype)
+    bi, bo = d.shape[-2] // b, d.shape[-1] // b
+    xb = d.reshape(*d.shape[:-2], bi, b, bo, b) * q.scale[..., :, None, :, None]
+    return xb.reshape(d.shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# FP8 matmuls (XLA path; the Pallas kernels fuse the same math)
+# ---------------------------------------------------------------------------
+
+
+def fp8_linear(
+    x: jax.Array,
+    wq: QuantizedTensor,
+    *,
+    fmt=E4M3,
+    out_dtype=None,
+    precomputed_xq: Optional[QuantizedTensor] = None,
+) -> jax.Array:
+    """The paper's Linear-layer FP8 path (Fig. 2).
+
+    per-token dynamic act quant -> fp8 x fp8 dot with f32 accumulation ->
+    rescale by (act scale ⊗ channel scale) -> cast back to compute dtype.
+
+    ``wq`` must be per-channel over the OUTPUT axis of a ``(in, out)`` kernel
+    so both scales fold outside the dot.
+    """
+    out_dtype = out_dtype or x.dtype
+    if wq.granularity not in ("per_channel", "per_tensor"):
+        raise ValueError(f"fp8_linear needs per_channel/per_tensor weights, got {wq.granularity}")
+    xq = precomputed_xq if precomputed_xq is not None else quantize_per_token(x, fmt)
+    acc = jnp.dot(xq.data, wq.data, preferred_element_type=jnp.float32)
+    w_scale = wq.scale  # (1, out) or ()
+    if wq.granularity == "per_channel":
+        w_scale = wq.scale.reshape(-1)  # (out,)
+    out = acc * xq.scale * w_scale
+    return out.astype(out_dtype)
+
+
+def fp8_block_matmul(
+    x: jax.Array,
+    wq: QuantizedTensor,
+    *,
+    fmt=E4M3,
+    out_dtype=None,
+) -> jax.Array:
+    """Block-scaled matmul for MoE grouped GEMM (paper: 1x128 act, 128x128 w).
+
+    Block scales cannot fold outside a single dot, so the XLA path quantizes
+    both operands onto the fp8 grid and contracts per K-block with f32
+    accumulation, applying ``s_x[token, kb] * s_w[kb, nb]`` on each partial.
+    The Pallas kernel (``repro.kernels.fp8_gemm``) performs the identical
+    math with the accumulator resident in VMEM.
+    """
+    out_dtype = out_dtype or x.dtype
+    if wq.granularity != "block":
+        raise ValueError("fp8_block_matmul needs block-quantized weights")
+    b = wq.block
+    xq = quantize_blockwise(x, block=b, fmt=fmt, act=True)
+    K = x.shape[-1]
+    N = wq.data.shape[-1]
+    kb = K // b
+    # Fold each block scale into its (fp8-grid) operand, then ONE dot with
+    # f32 accumulation:  sum_k (x_qk * s_xk) . (w_qk * s_wk).  Mathematically
+    # identical to scaling the per-block partial products; on TPU v5e (no
+    # native fp8 MXU path) this bf16-scaled form IS the production lowering —
+    # fp8 serves as the storage/bandwidth format (DESIGN.md §3).
+    xd = (xq.data.reshape(*x.shape[:-1], kb, b).astype(jnp.float32)
+          * xq.scale[..., None]).astype(jnp.bfloat16).reshape(x.shape)
+    sw = jnp.repeat(jnp.repeat(wq.scale, b, axis=-2), b, axis=-1)
+    wd = (wq.data.astype(jnp.float32) * sw).astype(jnp.bfloat16)
+    out = jnp.dot(xd, wd, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+def fp8_grouped_matmul(
+    x: jax.Array,
+    wq: QuantizedTensor,
+    *,
+    fmt=E4M3,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped (per-expert) block-scaled GEMM: x (E, C, K) @ wq (E, K, N)."""
+    out_dtype = out_dtype or x.dtype
+    if wq.granularity != "block":
+        raise ValueError("fp8_grouped_matmul needs block-quantized weights")
+    b = wq.block
+    E, C, K = x.shape
+    N = wq.data.shape[-1]
+    kb = K // b
+    xq = quantize_blockwise(x, block=b, fmt=fmt, act=True)       # scale (E, C, kb)
+    xd = (xq.data.reshape(E, C, kb, b).astype(jnp.float32)
+          * xq.scale[..., None]).astype(jnp.bfloat16).reshape(E, C, K)
+    sw = jnp.repeat(jnp.repeat(wq.scale, b, axis=-2), b, axis=-1)  # (E, K, N)
+    wd = (wq.data.astype(jnp.float32) * sw).astype(jnp.bfloat16)
+    out = jnp.einsum("eck,ekn->ecn", xd, wd,
+                     preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# INT8 (beyond-paper: the Limitations section leaves the lower-precision
+# frontier unexplored; INT8 shares the scaling machinery, symmetric scheme)
+# ---------------------------------------------------------------------------
+
+INT8_MAX = 127.0
+
+
+def _amax_to_scale_int8(amax: jax.Array) -> jax.Array:
+    return jnp.maximum(amax.astype(jnp.float32), _EPS) / INT8_MAX
+
+
+def cast_to_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    y = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def quantize_per_channel_int8(w: jax.Array,
+                              contract_axis: int = -2) -> QuantizedTensor:
+    """Symmetric per-output-channel INT8 weights."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=contract_axis,
+                   keepdims=True)
+    scale = _amax_to_scale_int8(amax)
+    return QuantizedTensor(cast_to_int8(w, scale), scale, "per_channel")
+
+
+def quantize_per_token_int8(x: jax.Array) -> QuantizedTensor:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = _amax_to_scale_int8(amax)
+    return QuantizedTensor(cast_to_int8(x, scale), scale, "per_token")
+
+
+def int8_linear(x: jax.Array, wq: QuantizedTensor, *,
+                out_dtype=None) -> jax.Array:
+    """W8A8: int8 x int8 -> int32 accumulation, dequant epilogue."""
+    out_dtype = out_dtype or x.dtype
+    xq = quantize_per_token_int8(x)
+    acc = jnp.dot(xq.data, wq.data, preferred_element_type=jnp.int32)
+    w_scale = wq.scale.reshape(-1) if wq.granularity == "per_channel" \
+        else wq.scale
+    out = acc.astype(jnp.float32) * xq.scale * w_scale
+    return out.astype(out_dtype)
+
+
+def fp8_grouped_linear(
+    x: jax.Array,
+    wq: QuantizedTensor,
+    *,
+    fmt=E4M3,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped GEMM with per-channel weight scales (non-128-aligned fallback).
+
+    x (E, C, K) @ wq (E, K, N), scale (E, 1, N): both scales fold outside the
+    per-expert dot, so true fp8 operands + f32 accumulation are used.
+    """
+    out_dtype = out_dtype or x.dtype
+    if wq.data.dtype == jnp.int8:                       # W8A8 grouped
+        xq = quantize_per_token_int8(x)
+        acc = jnp.einsum("eck,ekn->ecn", xq.data, wq.data,
+                         preferred_element_type=jnp.int32
+                         ).astype(jnp.float32)
+    else:
+        xq = quantize_per_token(x, fmt)                 # scale (E, C, 1)
+        acc = jnp.einsum("eck,ekn->ecn", xq.data, wq.data,
+                         preferred_element_type=jnp.float32)
+    sw = wq.scale if wq.granularity == "per_channel" else \
+        jnp.reshape(wq.scale, (1, 1, 1))
+    out = acc * xq.scale * sw
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Convenience dispatch used by layers: dense() with either raw or fp8 kernels
+# ---------------------------------------------------------------------------
+
+
+def matmul_any(x: jax.Array, w, *, out_dtype=None) -> jax.Array:
+    """``x @ w`` where ``w`` is a raw array OR a QuantizedTensor.
+
+    This is the single dispatch point the whole model zoo funnels through,
+    so PTQ'ing a model == swapping leaves of its param pytree.
+    """
+    if isinstance(w, QuantizedTensor):
+        if w.granularity == "block":
+            return fp8_block_matmul(x, w, out_dtype=out_dtype or x.dtype)
+        if w.data.dtype == jnp.int8:
+            return int8_linear(x, w, out_dtype=out_dtype or x.dtype)
+        return fp8_linear(x, w, out_dtype=out_dtype or x.dtype)
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def quant_error(x: jax.Array, q: QuantizedTensor) -> jax.Array:
+    """Relative L2 quantization error (used by tests + distribution report)."""
+    xf = x.astype(jnp.float32)
+    err = jnp.linalg.norm(xf - q.dequantize()) / (jnp.linalg.norm(xf) + _EPS)
+    return err

@@ -1,0 +1,160 @@
+"""Distribution analysis of weights and activations (paper §3.2, Fig. 1).
+
+The paper's feasibility argument rests on measuring variance, AbsMax, and
+AbsP99 across all tensors of a model and comparing model families:
+classical ranking models (mean weight variance ~1e7) vs OneRec-V2 and LLMs
+(mean weight variance < 0.1).  This module reproduces that analysis for any
+param pytree / captured-activation dict in the framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantizedTensor
+
+
+@dataclasses.dataclass
+class TensorStats:
+    name: str
+    variance: float
+    absmax: float
+    absp99: float
+    numel: int
+
+    def row(self) -> str:
+        return (f"{self.name:60s} var={self.variance:12.4e} "
+                f"absmax={self.absmax:12.4e} absp99={self.absp99:12.4e}")
+
+
+def tensor_stats(name: str, x: jax.Array) -> TensorStats:
+    xf = np.asarray(x, dtype=np.float32).ravel()
+    if xf.size == 0:
+        return TensorStats(name, 0.0, 0.0, 0.0, 0)
+    ax = np.abs(xf)
+    return TensorStats(
+        name=name,
+        variance=float(np.var(xf)),
+        absmax=float(ax.max()),
+        absp99=float(np.percentile(ax, 99.0)),
+        numel=int(xf.size),
+    )
+
+
+@dataclasses.dataclass
+class DistributionReport:
+    """Mean variance / AbsMax / AbsP99 across all tensors (Fig. 1 metrics)."""
+
+    family: str
+    kind: str  # "weights" | "activations"
+    per_tensor: List[TensorStats]
+
+    @property
+    def mean_variance(self) -> float:
+        return float(np.mean([t.variance for t in self.per_tensor])) if self.per_tensor else 0.0
+
+    @property
+    def mean_absmax(self) -> float:
+        return float(np.mean([t.absmax for t in self.per_tensor])) if self.per_tensor else 0.0
+
+    @property
+    def mean_absp99(self) -> float:
+        return float(np.mean([t.absp99 for t in self.per_tensor])) if self.per_tensor else 0.0
+
+    def summary(self) -> str:
+        return (f"[{self.family}:{self.kind}] n={len(self.per_tensor)} "
+                f"mean_var={self.mean_variance:.4e} "
+                f"mean_absmax={self.mean_absmax:.4e} "
+                f"mean_absp99={self.mean_absp99:.4e}")
+
+    def csv_rows(self) -> List[str]:
+        return [
+            f"{self.family},{self.kind},mean_variance,{self.mean_variance:.6e}",
+            f"{self.family},{self.kind},mean_absmax,{self.mean_absmax:.6e}",
+            f"{self.family},{self.kind},mean_absp99,{self.mean_absp99:.6e}",
+        ]
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        key = getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))
+        out.append(str(key))
+    return "/".join(out)
+
+
+def collect_weight_stats(params: Any, family: str = "model",
+                         min_numel: int = 1) -> DistributionReport:
+    """Fig.-1 weight statistics over every floating leaf of a param pytree."""
+    rows: List[TensorStats] = []
+
+    def visit(path, leaf):
+        if isinstance(leaf, QuantizedTensor):
+            leaf = leaf.dequantize()
+        if not hasattr(leaf, "dtype") or not jnp.issubdtype(
+                jnp.asarray(leaf).dtype, jnp.floating):
+            return
+        if np.prod(np.shape(leaf)) < min_numel:
+            return
+        rows.append(tensor_stats(_path_str(path), leaf))
+
+    jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return DistributionReport(family, "weights", rows)
+
+
+def collect_activation_stats(taps: Mapping[str, jax.Array],
+                             family: str = "model") -> DistributionReport:
+    """Fig.-1 activation statistics over a dict of captured activations."""
+    rows = [tensor_stats(k, v) for k, v in sorted(taps.items())]
+    return DistributionReport(family, "activations", rows)
+
+
+# ---------------------------------------------------------------------------
+# Activation taps: models call ``tap(name, x)`` at key points; a bench
+# running EAGERLY (and with scan-unrolled layers) records concrete values.
+# Tracers (jit / scan traces) are ignored, so taps are free in production.
+# ---------------------------------------------------------------------------
+
+import contextlib
+
+_TAPS: Optional[Dict[str, Any]] = None
+
+
+def tap(name: str, x) -> None:
+    global _TAPS
+    if _TAPS is None:
+        return
+    if isinstance(x, jax.core.Tracer):
+        return
+    base = name
+    i = 0
+    while name in _TAPS:
+        i += 1
+        name = f"{base}.{i}"
+    _TAPS[name] = x
+
+
+@contextlib.contextmanager
+def capture_taps():
+    global _TAPS
+    prev = _TAPS
+    _TAPS = {}
+    try:
+        yield _TAPS
+    finally:
+        _TAPS = prev
+
+
+def feasibility_verdict(report: DistributionReport,
+                        var_threshold: float = 10.0,
+                        absmax_threshold: float = 100.0) -> str:
+    """The paper's qualitative read: controlled statistics => fp8-friendly."""
+    ok = (report.mean_variance < var_threshold
+          and report.mean_absmax < absmax_threshold)
+    return "fp8-friendly" if ok else "fp8-risky (wide dynamic range)"

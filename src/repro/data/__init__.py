@@ -1,0 +1,1 @@
+from repro.data.prefetch import ThreadedPrefetcher  # noqa: F401

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    INFER_RULES,
+    TRAIN_RULES,
+    constrain,
+    current_mesh,
+    logical_to_spec,
+    param_sharding,
+    use_mesh,
+)

@@ -1,0 +1,57 @@
+"""FP8 gradient compression with error feedback (beyond-paper distributed
+optimization, DESIGN.md §5).
+
+The cross-replica gradient all-reduce is the dominant DCN collective in
+multi-pod data parallelism.  We compress gradients to e4m3 with a per-tensor
+scale before the reduction (4x fewer bytes on the wire vs f32, 2x vs bf16)
+and keep the quantization residual locally, adding it back into the next
+step's gradient (error feedback — Seide et al. 2014, 1-bit SGD lineage) so
+the compression error doesn't bias convergence.
+
+Two entry points:
+  * ``ef_compress`` — pure pytree transform (usable on any gradient before
+    any reduction; this is what the train loop calls),
+  * ``compressed_psum`` — shard_map building block performing the psum on
+    dequantized-but-fp8-grid values (wire bytes modeled by the fp8 cast).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import E4M3, FP8_MAX, cast_to_fp8
+
+
+def ef_init(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+
+def _compress_leaf(g: jax.Array, r: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    gt = g.astype(jnp.float32) + r
+    amax = jnp.max(jnp.abs(gt))
+    scale = jnp.maximum(amax, 1e-30) / FP8_MAX[E4M3]
+    q = cast_to_fp8(gt, scale, E4M3)
+    ghat = q.astype(jnp.float32) * scale
+    return ghat.astype(g.dtype), gt - ghat
+
+
+def ef_compress(grads: Any, residuals: Any) -> Tuple[Any, Any]:
+    """(grads, residuals) -> (fp8-grid grads, new residuals)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [_compress_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compressed_psum(grads: Any, axis_name: str, residuals: Any
+                    ) -> Tuple[Any, Any]:
+    """shard_map body helper: error-feedback compress, then psum."""
+    ghat, new_res = ef_compress(grads, residuals)
+    reduced = jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis_name), ghat)
+    return reduced, new_res

@@ -1,0 +1,55 @@
+"""Elastic re-sharding: restore any checkpoint onto any mesh.
+
+Checkpoints store global logical arrays (repro/checkpoint), so scaling a
+job from N to M chips (or pods) is: build the target mesh, derive each
+leaf's NamedSharding from the same logical-axis rules, and ``device_put``
+the global value with that sharding.  Divisibility fix-ups happen in
+``logical_to_spec``/``_divides``, so a mesh whose axis sizes don't divide a
+dim simply drops that axis for that leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint.store import load_checkpoint
+from repro.distributed.sharding import (AxisRules, TRAIN_RULES, _divides,
+                                        infer_param_axes, logical_to_spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        key = getattr(k, "key", None)
+        if key is None:
+            key = getattr(k, "idx", getattr(k, "name", ""))
+        parts.append(str(key))
+    return "/".join(parts)
+
+
+def shardings_for_tree(tree: Any, mesh: Mesh,
+                       rules: Optional[AxisRules] = None) -> Any:
+    """NamedShardings for every leaf via the param-axis rules."""
+    rules = rules or TRAIN_RULES
+
+    def leaf_sharding(path, leaf):
+        axes = infer_param_axes(_path_str(path), jax.numpy.ndim(leaf))
+        spec = logical_to_spec(axes, rules=rules, mesh=mesh)
+        spec = _divides(mesh, spec, jax.numpy.shape(leaf))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, tree)
+
+
+def restore_elastic(ckpt_path: str, template: Any, mesh: Mesh,
+                    rules: Optional[AxisRules] = None) -> Tuple[Any, Dict]:
+    """Load a checkpoint onto ``mesh`` regardless of the mesh it was saved
+    from (the elastic-scaling path)."""
+    shardings = shardings_for_tree(template, mesh, rules)
+    with mesh:
+        tree, manifest = load_checkpoint(ckpt_path, template,
+                                         shardings=shardings)
+    return tree, manifest

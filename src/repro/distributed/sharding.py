@@ -1,0 +1,256 @@
+"""Logical-axis sharding (t5x/MaxText style).
+
+Model code names tensor axes logically (``'batch'``, ``'heads'``, ``'mlp'``,
+``'expert'``, ...) and calls :func:`constrain`; a rule set maps logical names
+to physical mesh axes.  Outside a mesh context everything is a no-op, so the
+exact same model code runs on one CPU device (smoke tests) and on a
+512-chip multi-pod mesh (dry-run / production).
+
+Physical mesh axes (see ``repro/launch/mesh.py``):
+  * ``pod``   — slowest axis, across pods (DCN), pure data parallelism.
+  * ``data``  — within-pod data parallelism / FSDP storage sharding.
+  * ``model`` — tensor/expert parallelism.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class AxisRules:
+    """Mapping logical axis name -> physical mesh axis (or tuple, or None)."""
+
+    def __init__(self, rules: Dict[str, MeshAxes]):
+        self.rules = dict(rules)
+
+    def physical(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def replace(self, **kw) -> "AxisRules":
+        out = dict(self.rules)
+        out.update(kw)
+        return AxisRules(out)
+
+
+# Training: Megatron TP over `model`, batch over (pod, data), FSDP storage
+# sharding of the non-TP weight axis over `data` (XLA SPMD inserts the
+# all-gathers), experts over `model` (EP).
+TRAIN_RULES = AxisRules({
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,            # residual stream between layers (SP variant)
+    "embed": None,
+    "embed_fsdp": "data",       # weight-storage-only sharding (ZeRO/FSDP)
+    "heads": "model",
+    "kv_heads": None,           # kv heads can be < TP degree (GQA): replicate
+    "head_dim": None,
+    "qkv_out": "model",         # flattened heads*head_dim projection outputs
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_ffn": None,
+    "capacity": None,
+    "kv_seq": None,
+    # recsys / gnn
+    "table_rows": ("data", "model"),
+    "table_dim": None,
+    "nodes": ("data", "model"),
+    "edges": ("data", "model"),
+    "candidates": ("data", "model"),
+    "feature": None,
+})
+
+# Inference: weights TP over `model`, replicated over data; batch over
+# (pod, data); long-context KV cache sharded along the sequence dim.
+INFER_RULES = TRAIN_RULES.replace(
+    embed_fsdp=None,
+    kv_seq="model",
+)
+
+# §Perf variant: Korthikanti-style sequence parallelism — the residual
+# stream between layers is sharded over `model` ('act_seq'); XLA inserts
+# the all-gather before TP matmuls and reduce-scatters after, and — the
+# point — the per-layer activations SAVED for the backward pass shrink by
+# the TP degree.  ('act_seq' is None in the base rules.)
+TRAIN_RULES_SP = TRAIN_RULES.replace(act_seq="model")
+
+# §Perf variant: FSDP/DP-dominant sharding for models too small to feed a
+# 16-wide TP group (gemma3-1b: 4 q heads).  No tensor parallelism; the
+# `model` axis carries extra DATA parallelism for activations and joins
+# `data` for parameter/optimizer storage sharding (ZeRO-3 style: XLA
+# all-gathers weights per layer, reduce-scatters gradients).
+TRAIN_RULES_FSDP = AxisRules({
+    **TRAIN_RULES.rules,
+    "batch": ("pod", "data", "model"),
+    "heads": None, "qkv_out": None, "mlp": None, "vocab": None,
+    "expert": None,
+    "embed_fsdp": ("data", "model"),
+    "act_seq": None,
+})
+
+RULE_SETS = {
+    "train": TRAIN_RULES,
+    "infer": INFER_RULES,
+    "train_sp": TRAIN_RULES_SP,
+    "train_fsdp": TRAIN_RULES_FSDP,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[AxisRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[AxisRules] = None):
+    """Activate a mesh + rule set for `constrain` within the block."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules or TRAIN_RULES
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _CTX.rules
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]],
+                    rules: Optional[AxisRules] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Build a PartitionSpec, dropping physical axes that don't divide."""
+    rules = rules or _CTX.rules or TRAIN_RULES
+    mesh = mesh or _CTX.mesh
+    used = set()
+    out = []
+    for ax in logical_axes:
+        phys = rules.physical(ax)
+        if phys is None:
+            out.append(None)
+            continue
+        phys_t = (phys,) if isinstance(phys, str) else tuple(phys)
+        phys_t = tuple(p for p in phys_t
+                       if p not in used and (mesh is None or p in mesh.axis_names))
+        for p in phys_t:
+            used.add(p)
+        if not phys_t:
+            out.append(None)
+        elif len(phys_t) == 1:
+            out.append(phys_t[0])
+        else:
+            out.append(phys_t)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _divides(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim."""
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        keep = []
+        quot = dim
+        for a in axes:
+            size = mesh.shape[a]
+            if quot % size == 0:
+                keep.append(a)
+                quot //= size
+        if not keep:
+            fixed.append(None)
+        elif len(keep) == 1:
+            fixed.append(keep[0])
+        else:
+            fixed.append(tuple(keep))
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return P(*fixed)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names; no-op without mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes)
+    spec = _divides(mesh, spec, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def infer_param_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a parameter leaf, from its pytree path.
+
+    Matches the framework's naming conventions (repro/layers); QuantizedTensor
+    children (data/scale) inherit the kernel's axes — ``_divides`` then drops
+    whatever doesn't fit the scale's reduced dims.
+    """
+    p = path.lower()
+
+    def ax(*names: Optional[str]) -> Tuple[Optional[str], ...]:
+        """Right-align the given axes to ndim (stacked leading dims -> None)."""
+        names_t = tuple(names)
+        if len(names_t) >= ndim:
+            return names_t[len(names_t) - ndim:]
+        return (None,) * (ndim - len(names_t)) + names_t
+
+    if "item_embed" in p or "field_embed" in p:
+        return ax("table_rows", None)
+    if "embed/table" in p:
+        return ax("vocab", "embed_fsdp")
+    if "lm_head" in p:
+        return ax("embed_fsdp", "vocab")
+    if "/experts/gate" in p or "/experts/up" in p:
+        return ax("expert", "embed_fsdp", "mlp")
+    if "/experts/down" in p:
+        return ax("expert", "mlp", "embed_fsdp")
+    if "router" in p:
+        return ax(None, None)
+    if any(f"{n}/kernel" in p for n in ("q_proj", "k_proj", "v_proj")):
+        return ax("embed_fsdp", "qkv_out")
+    if "o_proj/kernel" in p:
+        return ax("qkv_out", "embed_fsdp")
+    if any(f"{n}/kernel" in p for n in ("gate", "up")) and "mlp" in p or \
+            "shared/gate" in p or "shared/up" in p:
+        return ax("embed_fsdp", "mlp")
+    if "down/kernel" in p:
+        return ax("mlp", "embed_fsdp")
+    # small dense nets (recsys towers, gnn MLPs, routers, norms, biases):
+    # replicated — they are KB-scale.
+    return (None,) * ndim
+
+
+def param_sharding(logical_axes: Sequence[Optional[str]],
+                   shape: Tuple[int, ...],
+                   mesh: Optional[Mesh] = None,
+                   rules: Optional[AxisRules] = None) -> NamedSharding:
+    """NamedSharding for a parameter, with divisibility fixed up."""
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None, "param_sharding requires a mesh"
+    spec = logical_to_spec(logical_axes, rules=rules, mesh=mesh)
+    spec = _divides(mesh, spec, shape)
+    return NamedSharding(mesh, spec)

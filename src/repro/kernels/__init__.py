@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot spots the paper optimizes (§4.2):
+#   fp8_gemm          — fused per-row quantize + FP8 GEMM, f32 accumulation
+#   fp8_grouped_gemm  — block-scaled (1x128 / 128x128) MoE grouped GEMM
+#   radix_topk        — RadixTopK (TPU adaptation: histogram radix select)
+#   batch_attention   — large-batch short-context fused attention
+# Each: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper with
+# interpret-mode fallback on CPU), ref.py (pure-jnp oracle).

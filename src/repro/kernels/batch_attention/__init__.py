@@ -1,0 +1,1 @@
+from repro.kernels.batch_attention.ops import batch_attention  # noqa: F401

@@ -1,0 +1,107 @@
+"""Large-batch short-context fused attention (paper §4.2 "Attention
+optimization"), TPU adaptation.
+
+OneRec serving is batch-heavy (32-512 requests) with SHORT contexts
+(<= 512 semantic-ID tokens): the abundant parallel axis is (batch x
+kv-head), not sequence.  The kernel grids over (B, Kv, S-blocks) with the
+KV-sequence axis innermost/sequential — the Pallas grid pipeline overlaps
+the next KV tile's HBM->VMEM DMA with the current tile's compute, which is
+the TPU expression of the paper's "software pipelining".  Online softmax
+(m, l, acc f32 scratch) keeps one pass over KV; GQA is handled by folding
+the q-head group into the row dimension of the MXU dot.
+
+Masking uses explicit per-slot key positions (-1 = empty slot), matching
+the framework's ring-buffer KV caches, plus optional sliding window.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                 n_s: int, out_dtype):
+    """Blocks: q (1,1,G,T,hd); k/v (1,1,bs,hd); qpos (1,T); kpos (1,bs);
+    o (1,1,G,T,hd); scratch m/l (G*T, 1) f32, acc (G*T, hd) f32."""
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, T, hd = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    q = q_ref[0, 0].reshape(G * T, hd)
+    k = k_ref[0, 0]                                            # (bs, hd)
+    v = v_ref[0, 0]
+
+    scores = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale            # (G*T, bs)
+
+    qp = qpos_ref[0]                                           # (T,)
+    kp = kpos_ref[0]                                           # (bs,)
+    qp2 = jnp.broadcast_to(qp[None, :], (G, T)).reshape(G * T)
+    valid = (kp[None, :] >= 0) & (kp[None, :] <= qp2[:, None])
+    if window:
+        valid &= (qp2[:, None] - kp[None, :]) < window
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-20), 0.0)
+        o_ref[0, 0] = out.reshape(G, T, hd).astype(out_dtype)
+
+
+def batch_attention_pallas(q, k, v, q_pos, k_pos, *, scale: float,
+                           window: int = 0, block_s: int = 512,
+                           out_dtype=jnp.bfloat16, interpret: bool = False):
+    """q (B, Kv, G, T, hd); k/v (B, Kv, S, hd); q_pos (B, T); k_pos (B, S)."""
+    from jax.experimental.pallas import tpu as pltpu
+    Bb, Kv, G, T, hd = q.shape
+    S = k.shape[2]
+    bs = min(block_s, S)
+    assert S % bs == 0
+    n_s = S // bs
+    grid = (Bb, Kv, n_s)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, window=window,
+                          n_s=n_s, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, T, hd), lambda b, g, s: (b, g, 0, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, g, s: (b, g, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, g, s: (b, g, s, 0)),
+            pl.BlockSpec((1, T), lambda b, g, s: (b, 0)),
+            pl.BlockSpec((1, bs), lambda b, g, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, T, hd),
+                               lambda b, g, s: (b, g, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, Kv, G, T, hd), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * T, 1), jnp.float32),
+            pltpu.VMEM((G * T, 1), jnp.float32),
+            pltpu.VMEM((G * T, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, k_pos)

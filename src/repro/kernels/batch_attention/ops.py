@@ -1,0 +1,43 @@
+"""jit'd wrapper: (B, T, H, hd) GQA layout <-> kernel layout."""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batch_attention.kernel import batch_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "block_s", "out_dtype",
+                                   "interpret"))
+def _run(q, k, v, q_pos, k_pos, scale, window, block_s, out_dtype, interpret):
+    return batch_attention_pallas(q, k, v, q_pos, k_pos, scale=scale,
+                                  window=window, block_s=block_s,
+                                  out_dtype=out_dtype, interpret=interpret)
+
+
+def batch_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, k_pos: jax.Array, *,
+                    scale: float = 0.0, window: int = 0,
+                    block_s: int = 512) -> jax.Array:
+    """q (B, T, H, hd); k/v (B, S, Kv, hd); pos (B, T)/(B, S) -> (B, T, H*hd)."""
+    B, T, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = scale or 1.0 / math.sqrt(hd)
+    qk = q.reshape(B, T, Kv, G, hd).transpose(0, 2, 3, 1, 4)   # (B,Kv,G,T,hd)
+    kk = k.transpose(0, 2, 1, 3)                               # (B,Kv,S,hd)
+    vk = v.transpose(0, 2, 1, 3)
+    bs = min(block_s, S)
+    while S % bs and bs > 1:
+        bs //= 2
+    out = _run(qk, kk, vk, q_pos, k_pos, scale, window, bs,
+               jnp.bfloat16, not _on_tpu())
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H * hd)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the batch attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def batch_attention_ref(q, k, v, q_pos, k_pos, *, scale: float,
+                        window: int = 0, out_dtype=jnp.bfloat16):
+    """q (B, Kv, G, T, hd); k/v (B, Kv, S, hd); pos masks as in the kernel."""
+    scores = jnp.einsum("bkgth,bksh->bkgts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = (k_pos[:, None, :] >= 0) & \
+        (k_pos[:, None, :] <= q_pos[:, :, None])               # (B, T, S)
+    if window:
+        valid &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.any(valid[:, None, None], axis=-1, keepdims=True),
+                      probs, 0.0)
+    out = jnp.einsum("bkgts,bksh->bkgth", probs, v.astype(jnp.float32))
+    return out.astype(out_dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.fp8_gemm.ops import fp8_gemm  # noqa: F401

@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the fused fp8 GEMM kernel.
+
+On CPU (this container) the kernel body executes under ``interpret=True``;
+on TPU it compiles natively.  Leading batch dims are flattened into M.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.kernels.fp8_gemm.kernel import fp8_gemm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "out_dtype",
+                                   "interpret"))
+def _fp8_gemm(x, wq, sw, block_m, block_n, out_dtype, interpret):
+    return fp8_gemm_pallas(x, wq, sw, block_m=block_m, block_n=block_n,
+                           out_dtype=out_dtype, interpret=interpret)
+
+
+def fp8_gemm(x: jax.Array, w: QuantizedTensor, *, block_m: int = 128,
+             block_n: int = 128, out_dtype=None) -> jax.Array:
+    """x (..., K) @ per-channel-quantized w (K, N) -> (..., N)."""
+    assert w.granularity in ("per_channel", "per_tensor")
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, x.shape[-1])
+    sw = w.scale.reshape(1, -1) if w.granularity == "per_channel" else \
+        jnp.full((1, w.data.shape[-1]), w.scale, jnp.float32)
+    bm = block_m
+    while M % bm and bm > 1:
+        bm //= 2
+    out = _fp8_gemm(x2, w.data, sw, bm, block_n, out_dtype,
+                    not _on_tpu())
+    return out.reshape(*lead, -1)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused fp8 GEMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, fp8_linear
+
+
+def fp8_gemm_ref(x: jax.Array, wq: jax.Array, sw: jax.Array,
+                 out_dtype=jnp.bfloat16) -> jax.Array:
+    """Same contract as the kernel, via the core-library fp8 path."""
+    q = QuantizedTensor(data=wq, scale=sw, granularity="per_channel")
+    return fp8_linear(x, q, out_dtype=out_dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.fp8_grouped_gemm.ops import fp8_grouped_gemm  # noqa: F401

@@ -1,0 +1,77 @@
+"""Block-scaled FP8 grouped GEMM Pallas kernel (the paper's MoE path).
+
+Implements the exact §4.1 MoE scheme: activations quantized ``1 x 128``
+along the reduction dim, weights pre-quantized ``128 x 128``, FP8 multiplies
+with an f32 VMEM accumulator, per-block ``s_x[c, kb] * s_w[kb, nb]`` applied
+on each partial product — i.e. the accumulation is EXACTLY
+``sum_kb (Xq_kb . Wq_kb) * s_x * s_w`` as on Hopper; nothing is folded into
+bf16 operands (contrast the XLA fallback in ``repro.core.quant``).
+
+Grid: (E, C/bc, N/bn); the K loop is an in-body ``fori_loop`` over 128-wide
+slices of the VMEM-resident tiles (the Pallas grid pipeline plays the role
+of Hopper's TMA prefetch — DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FP8_MAX_E4M3 = 448.0
+B = 128  # the paper's block granularity
+
+
+def _grouped_kernel(x_ref, w_ref, sw_ref, o_ref, *, n_kb: int, out_dtype):
+    """Blocks (leading expert dim 1 squeezed):
+    x (bc, K) bf16; w (K, bn) e4m3; sw (n_kb, bn/B) f32; o (bc, bn)."""
+    x = x_ref[0]
+    w = w_ref[0]
+    sw = sw_ref[0]
+
+    def kb_step(kb, acc):
+        xb = jax.lax.dynamic_slice_in_dim(x, kb * B, B, 1)
+        xb = xb.astype(jnp.float32)                          # (bc, 128)
+        amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)  # 1 x 128 scales
+        sx = jnp.maximum(amax, 1e-12) / FP8_MAX_E4M3
+        xq = jnp.clip(xb / sx, -FP8_MAX_E4M3,
+                      FP8_MAX_E4M3).astype(jnp.float8_e4m3fn)
+        wb = jax.lax.dynamic_slice_in_dim(w, kb * B, B, 0)
+        part = jax.lax.dot_general(
+            xq, wb, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bc, bn) f32
+        swb = jax.lax.dynamic_slice_in_dim(sw, kb, 1, 0)     # (1, bn/B)
+        swb = jnp.repeat(swb, B, axis=1)                     # (1, bn)
+        return acc + part * sx * swb
+
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    acc = jax.lax.fori_loop(0, n_kb, kb_step, acc)
+    o_ref[0] = acc.astype(out_dtype)
+
+
+def fp8_grouped_gemm_pallas(x: jax.Array, wq: jax.Array, sw: jax.Array, *,
+                            block_c: int = 128, block_n: int = 128,
+                            out_dtype=jnp.bfloat16, interpret: bool = False):
+    """x (E, C, K) bf16 @ (wq (E, K, N) e4m3, sw (E, K/128, N/128) f32)."""
+    E, C, K = x.shape
+    _, K2, N = wq.shape
+    assert K == K2 and K % B == 0 and N % B == 0
+    bc = min(block_c, C)
+    bn = min(block_n, N)
+    assert C % bc == 0 and N % bn == 0 and bn % B == 0
+    n_kb = K // B
+    grid = (E, C // bc, N // bn)
+    return pl.pallas_call(
+        functools.partial(_grouped_kernel, n_kb=n_kb, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, K), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((1, K, bn), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, K // B, bn // B), lambda e, i, j: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bn), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), out_dtype),
+        interpret=interpret,
+    )(x, wq, sw)

@@ -1,0 +1,36 @@
+"""jit'd wrapper for the block-scaled grouped GEMM kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.kernels.fp8_grouped_gemm.kernel import fp8_grouped_gemm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_n", "out_dtype",
+                                   "interpret"))
+def _run(x, wq, sw, block_c, block_n, out_dtype, interpret):
+    return fp8_grouped_gemm_pallas(x, wq, sw, block_c=block_c,
+                                   block_n=block_n, out_dtype=out_dtype,
+                                   interpret=interpret)
+
+
+def fp8_grouped_gemm(x: jax.Array, w: QuantizedTensor, *,
+                     block_c: int = 128, block_n: int = 128,
+                     out_dtype=None) -> jax.Array:
+    """x (E, C, K) @ block-quantized w (E, K, N) -> (E, C, N)."""
+    assert w.granularity == "block" and w.block == 128
+    out_dtype = out_dtype or x.dtype
+    C = x.shape[1]
+    bc = block_c
+    while C % bc and bc > 1:
+        bc //= 2
+    return _run(x, w.data, w.scale, bc, block_n, out_dtype, not _on_tpu())

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: exact per-block-partial scaled accumulation.
+
+Unlike the XLA production fallback (which folds scales into bf16 operands),
+this oracle reproduces the kernel's accumulation order exactly:
+``out = sum_kb (Xq_kb . Wq_kb) * s_x[c,kb] * s_w[kb,nb]`` in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import quantize_blockwise
+
+B = 128
+
+
+def fp8_grouped_gemm_ref(x: jax.Array, wq: jax.Array, sw: jax.Array,
+                         out_dtype=jnp.bfloat16) -> jax.Array:
+    """x (E, C, K) bf16 @ (wq (E, K, N) e4m3, sw (E, K/B, N/B))."""
+    E, C, K = x.shape
+    N = wq.shape[-1]
+    kb, nb = K // B, N // B
+    xq = quantize_blockwise(x, block=B, act=True)            # scale (E, C, kb)
+    xd = xq.data.reshape(E, C, kb, B).astype(jnp.float32)
+    wd = wq.reshape(E, kb, B, nb, B).astype(jnp.float32)
+    # per-(kb, nb) partial products, scaled then accumulated in f32
+    part = jnp.einsum("eckb,ekbnm->ecknm", xd, wd)           # (E,C,kb,nb,B)
+    part = part * xq.scale[..., None, None] * sw[:, None, :, :, None]
+    out = jnp.sum(part, axis=2).reshape(E, C, N)
+    return out.astype(out_dtype)

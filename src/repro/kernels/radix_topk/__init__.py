@@ -1,0 +1,1 @@
+from repro.kernels.radix_topk.ops import radix_topk  # noqa: F401

@@ -1,0 +1,74 @@
+"""RadixTopK public op: 4 histogram rounds + threshold scan + fused emission.
+
+Returns (values, indices) of the row-wise top-k.  Within equal values the
+LOWEST indices win (same tie rule as ``jax.lax.top_k``); output is sorted by
+value descending (a cheap (B, k) sort at the end, k << V).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.radix_topk.kernel import (emit_pallas, hist_round_pallas,
+                                             monotone_u32)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _threshold_scan(hist: jax.Array, need: jax.Array):
+    """Per-row: smallest byte t with count-from-top C(t) >= need.
+
+    Returns (t, need') where need' = need - (C(t) - count[t]) is how many
+    elements must still be taken from within byte t.
+    """
+    c_top = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]        # C(t) inclusive
+    ge = c_top >= need                                        # (B, 256)
+    # the largest t with C(t) >= need
+    t = jnp.max(jnp.where(ge, jnp.arange(256, dtype=jnp.int32)[None, :], -1),
+                axis=1)
+    c_t = jnp.take_along_axis(c_top, t[:, None], axis=1)
+    cnt_t = jnp.take_along_axis(hist, t[:, None], axis=1)
+    need_new = need - (c_t - cnt_t)
+    return t.astype(jnp.uint32), need_new
+
+
+@partial(jax.jit, static_argnames=("k", "block_b", "block_v", "interpret"))
+def _radix_topk(x, k, block_b, block_v, interpret):
+    B, V = x.shape
+    u = monotone_u32(x)
+    prefix = jnp.zeros((B, 1), jnp.uint32)
+    need = jnp.full((B, 1), k, jnp.int32)
+    for shift in (24, 16, 8, 0):
+        hist = hist_round_pallas(u, prefix, shift=shift, block_b=block_b,
+                                 block_v=block_v, interpret=interpret)
+        t, need = _threshold_scan(hist, need)
+        prefix = prefix | (t[:, None] << jnp.uint32(shift))
+    # prefix == exact threshold value u*; need == ties still required at u*
+    vals, idx = emit_pallas(x, u, prefix, need, k, block_b=block_b,
+                            block_v=block_v, interpret=interpret)
+    order = jnp.argsort(-vals, axis=1, stable=True)
+    return (jnp.take_along_axis(vals, order, axis=1),
+            jnp.take_along_axis(idx, order, axis=1))
+
+
+def radix_topk(x: jax.Array, k: int, *, block_b: int = 8,
+               block_v: int = 2048) -> tuple[jax.Array, jax.Array]:
+    """Row-wise top-k of x (B, V) -> (values (B, k) f32, indices (B, k) i32)."""
+    B, V = x.shape
+    bv = min(block_v, V)
+    pad = (-V) % bv
+    if pad:
+        # pad with finite float32 min: -inf would produce 0 * -inf = NaN in
+        # the emission one-hot matmul
+        x = jnp.pad(x, ((0, 0), (0, pad)),
+                    constant_values=float(np.finfo(np.float32).min))
+    bb = min(block_b, B)
+    while B % bb and bb > 1:
+        bb //= 2
+    return _radix_topk(x, k, bb, bv, not _on_tpu())

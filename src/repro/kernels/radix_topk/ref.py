@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for RadixTopK: jax.lax.top_k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(x: jax.Array, k: int):
+    vals, idx = jax.lax.top_k(x.astype(jnp.float32), k)
+    return vals, idx.astype(jnp.int32)

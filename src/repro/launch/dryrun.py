@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+SPMD-partitions, and compiles on the production mesh, and extract the
+roofline terms from the compiled artifact.
+
+MUST be run as its own process (the device-count flag is locked at first
+jax init — smoke tests and benches keep seeing 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Outputs one JSON per cell under --out (default results/dryrun).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed.sharding import (INFER_RULES, TRAIN_RULES, _divides,
+                                        logical_to_spec, use_mesh)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_bundle
+
+# ---------------------------------------------------------------------------
+# HLO collective analysis
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "pred": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_BLOCK_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_CMP_RE = re.compile(
+    r"compare\(s32\[\]\s+%?[\w\.\-]+,\s*s32\[\]\s+%?([\w\.\-]+)\)")
+
+
+def _parse_blocks(hlo_text: str):
+    """Split HLO into named computation blocks."""
+    blocks = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        m = _BLOCK_RE.match(line.strip())
+        if m:
+            name = m.group(1)
+            buf = []
+            blocks[name] = buf
+        elif name is not None:
+            buf.append(line)
+    return blocks
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count of a scan-style while: the s32 constant fed to compare."""
+    consts = dict()
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        m = _CMP_RE.search(line)
+        if m and m.group(1) in consts:
+            return max(consts[m.group(1)], 1)
+    return max(list(consts.values()) + [1])
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective bytes, with while-loop (scan) bodies multiplied
+    by their trip count (XLA text reports loop bodies once).
+
+    Shapes in the compiled module are per-partition, so these are per-chip
+    bytes moved by each collective's output (all-gather result counts the
+    gathered bytes; all-reduce counts the reduced tensor).
+    """
+    blocks = _parse_blocks(hlo_text)
+
+    # block -> trip multiplier (nested loops multiply up the call chain)
+    mult = {name: 1 for name in blocks}
+    whiles = []
+    for name, lines in blocks.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                whiles.append((name, m.group(1), m.group(2)))
+    # propagate: a body's multiplier = caller's multiplier x its trip count.
+    for _ in range(4):  # few nesting levels suffice
+        for caller, cond, body in whiles:
+            if cond in blocks and body in blocks:
+                tc = _trip_count(blocks[cond])
+                mult[body] = mult.get(caller, 1) * tc
+                mult[cond] = mult[body]
+
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    raw = {k: 0 for k in _COLLECTIVES}
+    for name, lines in blocks.items():
+        m_blk = mult.get(name, 1)
+        for line in lines:
+            s = line.strip()
+            m = re.search(r"=\s+(.*?)\s+(" + "|".join(_COLLECTIVES)
+                          + r")(?:-start)?\(", s)
+            if not m or "-done(" in s:
+                continue
+            nbytes = _shape_bytes(m.group(1))
+            out[m.group(2)] += nbytes * m_blk
+            raw[m.group(2)] += nbytes
+            counts[m.group(2)] += 1
+    out_named = {f"bytes_{k.replace('-', '_')}": v for k, v in out.items()}
+    out_named.update({f"count_{k.replace('-', '_')}": v
+                      for k, v in counts.items()})
+    out_named["bytes_total"] = sum(out.values())
+    out_named["bytes_total_unscaled"] = sum(raw.values())
+    out_named["while_trip_counts"] = sorted(
+        {b: m for _, _, b in whiles for m in [mult.get(b, 1)]}.values(),
+        reverse=True)[:8]
+    return out_named
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(args, arg_axes, mesh, rules):
+    def leaf(ax_leaf, val_leaf):
+        spec = logical_to_spec(ax_leaf, rules=rules, mesh=mesh)
+        spec = _divides(mesh, spec, np.shape(val_leaf))
+        return NamedSharding(mesh, spec)
+
+    out = []
+    for ax, val in zip(arg_axes, args):
+        out.append(jax.tree_util.tree_map(
+            lambda a, v: leaf(a, v), ax, val,
+            is_leaf=lambda x: (isinstance(x, tuple)
+                               and all(isinstance(e, (str, type(None)))
+                                       for e in x))))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             fp8=None, force: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    mod = registry.get_arch(arch)
+    shape = mod.SHAPES[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind, "status": "ok"}
+    if shape.skip:
+        record.update(status="skipped", reason=shape.skip)
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    t0 = time.time()
+    try:
+        bundle = build_bundle(arch, shape_name, abstract=True, fp8=fp8)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = TRAIN_RULES if bundle.kind in ("train", "graph") \
+            else INFER_RULES
+        with use_mesh(mesh, rules):
+            in_sh = shardings_for(bundle.args, bundle.arg_axes, mesh, rules)
+            jitted = jax.jit(bundle.fn, in_shardings=in_sh,
+                             donate_argnums=bundle.donate)
+            lowered = jitted.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        n_dev = mesh.size
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_d[attr] = int(v)
+        coll = collective_bytes(compiled.as_text())
+
+        record.update(
+            n_devices=n_dev,
+            note=bundle.note,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_chip=float(cost.get("flops", 0.0)),
+            bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+            cost_analysis={k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))},
+            memory_analysis=mem_d,
+            collectives=coll,
+        )
+        print(f"[dryrun] {arch:>20s} {shape_name:>14s} {mesh_name:>6s} "
+              f"OK  lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"flops/chip={record['flops_per_chip']:.3e} "
+              f"coll={coll['bytes_total']:.3e}B", flush=True)
+    except Exception as e:  # noqa: BLE001
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch:>20s} {shape_name:>14s} {mesh_name:>6s} "
+              f"FAIL {type(e).__name__}: {e}", flush=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--fp8", dest="fp8", action="store_true", default=None)
+    ap.add_argument("--no-fp8", dest="fp8", action="store_false")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.list or args.all or args.arch is None:
+        for arch, mod in registry.ARCHS.items():
+            for shape in mod.SHAPES:
+                if args.arch and arch != args.arch:
+                    continue
+                cells.append((arch, shape))
+    else:
+        shapes = [args.shape] if args.shape else \
+            list(registry.get_arch(args.arch).SHAPES)
+        cells = [(args.arch, s) for s in shapes]
+
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            rec = run_cell(arch, shape, multi, args.out, fp8=args.fp8,
+                           force=args.force)
+            if rec["status"] == "error":
+                n_fail += 1
+    print(f"[dryrun] done; {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving launcher: OneRec-V2 generation with the optimized FP8 stack.
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests 64 \
+      [--no-fp8]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.data.onerec_data import OneRecStreamConfig, SemanticIDStream
+from repro.models import onerec as onerec_model
+from repro.serving import EngineConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--no-fp8", dest="fp8", action="store_false",
+                    default=True)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    mod = registry.get_arch("onerec-v2")
+    cfg = mod.reduced_config() if args.reduced else mod.CONFIG
+    batch = args.batch or cfg.serve_batch
+    params = onerec_model.init_onerec(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(params, cfg,
+                           EngineConfig(batch_size=batch, use_fp8=args.fp8))
+    stream = SemanticIDStream(OneRecStreamConfig(
+        codebook_size=cfg.transformer.vocab_size - 64,
+        history_len=cfg.history_len, global_batch=batch, seed=args.seed))
+    requests = []
+    step = 0
+    while len(requests) < args.requests:
+        r = stream.serve_request_at(step)
+        for i in range(r["tokens"].shape[0]):
+            requests.append({"tokens": r["tokens"][i],
+                             "profile": r["profile"][i]})
+        step += 1
+    requests = requests[:args.requests]
+    outs, stats = engine.serve_requests(requests)
+    print(f"[serve] fp8={args.fp8} requests={len(requests)} "
+          f"mean_latency={stats['mean_latency_s']*1e3:.1f}ms "
+          f"p99={stats['p99_latency_s']*1e3:.1f}ms "
+          f"throughput={stats['throughput_rps']:.1f} req/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,495 @@
+"""Step construction for every (architecture x input-shape) cell.
+
+``build_bundle(arch, shape)`` returns a :class:`StepBundle`: the jit-able
+step function, its (abstract or concrete) arguments, the logical-axis tree
+for every argument leaf (turned into NamedShardings by the dry-run), and
+donation info.  The same builders power the multi-pod dry-run, the per-arch
+smoke tests (with ``reduced=True`` + concrete inputs), and the benchmarks.
+
+Step signatures (uniform per kind):
+  train:      step(params, opt_state, batch)          -> (loss, params, opt)
+  prefill:    step(params, batch)                     -> (logits, cache)
+  decode:     step(params, cache, batch, index)       -> (logits, cache)
+  score:      step(params, batch)                     -> scores
+  retrieval:  step(params, batch)                     -> scores
+  graph:      step(params, opt_state, batch)          -> (loss, params, opt)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import (GNNConfig, OneRecConfig, RecsysConfig,
+                                ShapeSpec, TransformerConfig)
+from repro.core.policy import PAPER_POLICY, QuantPolicy
+from repro.core.ptq import quantize_params
+from repro.distributed.sharding import infer_param_axes
+from repro.models import gnn as gnn_model
+from repro.models import onerec as onerec_model
+from repro.models import recsys as recsys_model
+from repro.models import transformer as tfm
+from repro.optim import OptimizerConfig, adamw_init, adamw_update
+
+OPT_CFG = OptimizerConfig()
+
+
+@dataclasses.dataclass
+class StepBundle:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    arg_axes: Tuple[Any, ...]      # logical-axes tree matching args
+    donate: Tuple[int, ...] = ()
+    cfg: Any = None
+    note: str = ""
+
+
+# ---------------------------------------------------------------------------
+# axes helpers
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        key = getattr(k, "key", None)
+        if key is None:
+            key = getattr(k, "idx", getattr(k, "name", ""))
+        parts.append(str(key))
+    return "/".join(parts)
+
+
+def params_axes(tree):
+    """Logical axes for every leaf of a param/opt pytree (by path rules)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: infer_param_axes(_path_str(p), jnp.ndim(l)), tree)
+
+
+def batch_axes(tree, mapping: Dict[str, Tuple]):
+    """Axes for a flat batch dict by key name."""
+    return {k: mapping.get(k, (None,) * jnp.ndim(v)) for k, v in tree.items()}
+
+
+def cache_axes(cache):
+    def leaf_axes(path, leaf):
+        p = _path_str(path)
+        nd = jnp.ndim(leaf)
+        if p.endswith("pos"):
+            return (None,) * (nd - 1) + ("kv_seq",)
+        # k/v: (stack, B, S, Kv, hd)
+        return (None,) * (nd - 4) + ("batch", "kv_seq", "kv_heads", None)
+    return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+
+def _abstract(fn):
+    return jax.eval_shape(fn)
+
+
+def _maybe_quantize(init_fn, fp8: bool, policy: QuantPolicy = PAPER_POLICY):
+    if fp8:
+        return lambda: quantize_params(init_fn(), policy)
+    return init_fn
+
+
+# ---------------------------------------------------------------------------
+# LM transformer cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_bundle(arch: str, cfg: TransformerConfig, shape: ShapeSpec,
+               *, fp8: bool, abstract: bool, seed: int = 0) -> StepBundle:
+    key = jax.random.PRNGKey(seed)
+    B, S = shape.global_batch, shape.seq_len
+    init_fn = lambda: tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+
+    if shape.kind == "train":
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(tfm.train_loss)(
+                params, batch, cfg)
+            params, opt_state, metrics = adamw_update(
+                params, grads, opt_state, OPT_CFG)
+            return loss, params, opt_state
+
+        params = _abstract(init_fn) if abstract else init_fn()
+        opt = _abstract(lambda: adamw_init(params)) if abstract \
+            else adamw_init(params)
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32) if abstract else \
+            jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": tok, "labels": tok}
+        axes = (params_axes(params), params_axes(opt),
+                batch_axes(batch, {"tokens": ("batch", "seq"),
+                                   "labels": ("batch", "seq")}))
+        return StepBundle(arch, shape.name, "train", step,
+                          (params, opt, batch), axes, cfg=cfg)
+
+    q_init = _maybe_quantize(init_fn, fp8)
+    serve_cfg = dataclasses.replace(cfg, remat=False)
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            cache = tfm.init_kv_cache(serve_cfg, B, S)
+            logits, cache = tfm.prefill(params, batch["tokens"], serve_cfg,
+                                        cache)
+            return logits, cache
+
+        params = _abstract(q_init) if abstract else q_init()
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32) if abstract else \
+            jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": tok}
+        axes = (params_axes(params),
+                batch_axes(batch, {"tokens": ("batch", "seq")}))
+        return StepBundle(arch, shape.name, "prefill", step, (params, batch),
+                          axes, cfg=cfg, note="fp8" if fp8 else "bf16")
+
+    if shape.kind == "decode":
+        def step(params, cache, batch, index):
+            logits, cache = tfm.decode_step(params, batch["tokens"],
+                                            serve_cfg, cache, index)
+            return logits, cache
+
+        params = _abstract(q_init) if abstract else q_init()
+        cache_fn = lambda: tfm.init_kv_cache(serve_cfg, B, S)
+        cache = _abstract(cache_fn) if abstract else cache_fn()
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32) if abstract else \
+            jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        idx = jax.ShapeDtypeStruct((), jnp.int32) if abstract else \
+            jnp.int32(S - 1)
+        batch = {"tokens": tok}
+        axes = (params_axes(params), cache_axes(cache),
+                batch_axes(batch, {"tokens": ("batch", "seq")}), ())
+        return StepBundle(arch, shape.name, "decode", step,
+                          (params, cache, batch, idx), axes, donate=(1,),
+                          cfg=cfg, note="fp8" if fp8 else "bf16")
+
+    raise ValueError(f"unknown LM shape kind {shape.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+_RECSYS_BATCH_AXES = {
+    "hist_ids": ("batch", None),
+    "target_ids": ("batch",),
+    "field_ids": ("batch", None),
+    "labels": ("batch",),
+    "candidate_ids": ("candidates",),
+}
+
+
+def _recsys_inputs(cfg: RecsysConfig, B: int, *, n_candidates: int = 0,
+                   with_labels: bool, abstract: bool, key=None):
+    L, NF = cfg.seq_len, cfg.n_sparse_fields
+
+    def mk(shape, maxval):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+        return jax.random.randint(key, shape, 0, maxval)
+
+    batch = {
+        "hist_ids": mk((B, L), cfg.n_items),
+        "target_ids": mk((B,), cfg.n_items),
+        "field_ids": mk((B, NF), cfg.field_vocab),
+    }
+    if with_labels:
+        batch["labels"] = (jax.ShapeDtypeStruct((B,), jnp.float32) if abstract
+                           else jax.random.bernoulli(key, 0.3, (B,))
+                           .astype(jnp.float32))
+    if n_candidates:
+        batch["candidate_ids"] = mk((n_candidates,), cfg.n_items)
+    return batch
+
+
+def _recsys_bundle(arch: str, cfg: RecsysConfig, shape: ShapeSpec,
+                   *, fp8: bool, abstract: bool, seed: int = 0) -> StepBundle:
+    key = jax.random.PRNGKey(seed)
+    init_fn = lambda: recsys_model.init_recsys(jax.random.PRNGKey(0), cfg)
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(recsys_model.train_loss)(
+                params, batch, cfg)
+            params, opt_state, _ = adamw_update(params, grads, opt_state,
+                                                OPT_CFG)
+            return loss, params, opt_state
+
+        params = _abstract(init_fn) if abstract else init_fn()
+        opt = _abstract(lambda: adamw_init(params)) if abstract \
+            else adamw_init(params)
+        batch = _recsys_inputs(cfg, B, with_labels=True, abstract=abstract,
+                               key=key)
+        axes = (params_axes(params), params_axes(opt),
+                batch_axes(batch, _RECSYS_BATCH_AXES))
+        return StepBundle(arch, shape.name, "train", step,
+                          (params, opt, batch), axes, cfg=cfg)
+
+    q_init = _maybe_quantize(init_fn, fp8)
+    params = _abstract(q_init) if abstract else q_init()
+
+    if shape.kind == "score":
+        def step(params, batch):
+            return recsys_model.score(params, batch, cfg)
+        batch = _recsys_inputs(cfg, B, with_labels=False, abstract=abstract,
+                               key=key)
+    elif shape.kind == "retrieval":
+        def step(params, batch):
+            return recsys_model.retrieval_scores(params, batch, cfg)
+        batch = _recsys_inputs(cfg, B, n_candidates=shape.n_candidates,
+                               with_labels=False, abstract=abstract, key=key)
+    else:
+        raise ValueError(shape.kind)
+
+    axes = (params_axes(params), batch_axes(batch, _RECSYS_BATCH_AXES))
+    return StepBundle(arch, shape.name, shape.kind, step, (params, batch),
+                      axes, cfg=cfg, note="fp8" if fp8 else "bf16")
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _pad_graph(n: int, mult: int = 2048) -> int:
+    """Pad node/edge counts so the (data x model [x pod]) sharding divides.
+
+    Padding entries are masked (node_mask/edge_mask contract); the data
+    pipeline pads identically, so abstract and concrete shapes agree.
+    Small graphs stay unpadded (they are replicated anyway).
+    """
+    if n < mult:
+        return n
+    return ((n + mult - 1) // mult) * mult
+
+
+def _gnn_cell_dims(shape: ShapeSpec) -> Tuple[int, int, int, str, int]:
+    """(n_nodes, n_edges, d_feat, level, n_graphs) for a graph cell."""
+    if shape.name == "minibatch_lg" or shape.fanout:
+        seeds = shape.batch_nodes
+        n1 = seeds * shape.fanout[0]
+        n2 = n1 * shape.fanout[1]
+        return (_pad_graph(seeds + n1 + n2), _pad_graph(n1 + n2),
+                shape.d_feat, "node", 0)
+    if shape.global_batch:  # batched small graphs
+        n = shape.n_nodes * shape.global_batch
+        e = shape.n_edges * shape.global_batch
+        return _pad_graph(n), _pad_graph(e), shape.d_feat, "graph", \
+            shape.global_batch
+    return (_pad_graph(shape.n_nodes), _pad_graph(shape.n_edges),
+            shape.d_feat, "node", 0)
+
+
+def _gnn_bundle(arch: str, cfg: GNNConfig, shape: ShapeSpec, *,
+                abstract: bool, n_classes: int = 16,
+                seed: int = 0) -> StepBundle:
+    key = jax.random.PRNGKey(seed)
+    N, E, dF, level, n_graphs = _gnn_cell_dims(shape)
+    init_fn = lambda: gnn_model.init_egnn(jax.random.PRNGKey(0), cfg,
+                                          d_feat=dF, n_classes=n_classes)
+
+    loss_fn = partial(gnn_model.train_loss, cfg=cfg, level=level,
+                      n_graphs=n_graphs)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch))(params)
+        params, opt_state, _ = adamw_update(params, grads, opt_state, OPT_CFG)
+        return loss, params, opt_state
+
+    if abstract:
+        batch = {
+            "feat": jax.ShapeDtypeStruct((N, dF), jnp.float32),
+            "coord": jax.ShapeDtypeStruct((N, 3), jnp.float32),
+            "edges": jax.ShapeDtypeStruct((E, 2), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((E,), jnp.float32),
+            "node_mask": jax.ShapeDtypeStruct((N,), jnp.float32),
+            "labels": jax.ShapeDtypeStruct(
+                (n_graphs if level == "graph" else N,), jnp.int32),
+            "graph_ids": jax.ShapeDtypeStruct((N,), jnp.int32),
+        }
+    else:
+        batch = {
+            "feat": jax.random.normal(key, (N, dF)),
+            "coord": jax.random.normal(key, (N, 3)),
+            "edges": jax.random.randint(key, (E, 2), 0, N),
+            "edge_mask": jnp.ones((E,), jnp.float32),
+            "node_mask": jnp.ones((N,), jnp.float32),
+            "labels": jax.random.randint(
+                key, (n_graphs if level == "graph" else N,), 0, n_classes),
+            "graph_ids": (jnp.repeat(jnp.arange(n_graphs, dtype=jnp.int32),
+                                     N // max(n_graphs, 1))
+                          if level == "graph" else jnp.zeros((N,), jnp.int32)),
+        }
+    params = _abstract(init_fn) if abstract else init_fn()
+    opt = _abstract(lambda: adamw_init(params)) if abstract \
+        else adamw_init(params)
+    baxes = batch_axes(batch, {
+        "feat": ("nodes", None), "coord": ("nodes", None),
+        "edges": ("edges", None), "edge_mask": ("edges",),
+        "node_mask": ("nodes",),
+        "labels": (None,) if level == "graph" else ("nodes",),
+        "graph_ids": ("nodes",),
+    })
+    axes = (params_axes(params), params_axes(opt), baxes)
+    return StepBundle(arch, shape.name, "graph", step, (params, opt, batch),
+                      axes, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# OneRec cells (the paper's model)
+# ---------------------------------------------------------------------------
+
+
+def _onerec_bundle(arch: str, cfg: OneRecConfig, shape: ShapeSpec, *,
+                   fp8: bool, abstract: bool, seed: int = 0) -> StepBundle:
+    key = jax.random.PRNGKey(seed)
+    B = shape.global_batch
+    T = shape.seq_len
+    V = cfg.vocab_size
+    init_fn = lambda: onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+
+    def mk_tok(shape_):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape_, jnp.int32)
+        return jax.random.randint(key, shape_, 0, V)
+
+    def mk_prof():
+        if abstract:
+            return jax.ShapeDtypeStruct((B, onerec_model.PROFILE_DIM),
+                                        jnp.float32)
+        return jax.random.normal(key, (B, onerec_model.PROFILE_DIM))
+
+    if shape.kind == "train":
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(onerec_model.train_loss)(
+                params, batch, cfg)
+            params, opt_state, _ = adamw_update(params, grads, opt_state,
+                                                OPT_CFG)
+            return loss, params, opt_state
+
+        params = _abstract(init_fn) if abstract else init_fn()
+        opt = _abstract(lambda: adamw_init(params)) if abstract \
+            else adamw_init(params)
+        batch = {"tokens": mk_tok((B, T)), "profile": mk_prof(),
+                 "labels": mk_tok((B, T + 1))}
+        axes = (params_axes(params), params_axes(opt),
+                batch_axes(batch, {"tokens": ("batch", "seq"),
+                                   "profile": ("batch", None),
+                                   "labels": ("batch", "seq")}))
+        return StepBundle(arch, shape.name, "train", step,
+                          (params, opt, batch), axes, cfg=cfg)
+
+    q_init = _maybe_quantize(init_fn, fp8)
+    serve_tf = dataclasses.replace(cfg.transformer, remat=False)
+    serve_cfg = dataclasses.replace(cfg, transformer=serve_tf)
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            cache = onerec_model.init_cache(serve_cfg, B)
+            return onerec_model.prefill(params, batch, serve_cfg, cache)
+
+        params = _abstract(q_init) if abstract else q_init()
+        batch = {"tokens": mk_tok((B, T)), "profile": mk_prof()}
+        axes = (params_axes(params),
+                batch_axes(batch, {"tokens": ("batch", "seq"),
+                                   "profile": ("batch", None)}))
+        return StepBundle(arch, shape.name, "prefill", step, (params, batch),
+                          axes, cfg=cfg, note="fp8" if fp8 else "bf16")
+
+    # decode
+    def step(params, cache, batch, index):
+        return onerec_model.decode_step(params, batch["tokens"], serve_cfg,
+                                        cache, index)
+
+    params = _abstract(q_init) if abstract else q_init()
+    cache_fn = lambda: onerec_model.init_cache(serve_cfg, B)
+    cache = _abstract(cache_fn) if abstract else cache_fn()
+    idx = jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.int32(T - 1)
+    batch = {"tokens": mk_tok((B, 1))}
+    axes = (params_axes(params), cache_axes(cache),
+            batch_axes(batch, {"tokens": ("batch", "seq")}), ())
+    return StepBundle(arch, shape.name, "decode", step,
+                      (params, cache, batch, idx), axes, donate=(1,),
+                      cfg=cfg, note="fp8" if fp8 else "bf16")
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def build_bundle(arch: str, shape_name: str, *, reduced: bool = False,
+                 fp8: Optional[bool] = None, abstract: bool = True,
+                 shape_override: Optional[ShapeSpec] = None,
+                 seed: int = 0) -> StepBundle:
+    mod = registry.get_arch(arch)
+    cfg = mod.reduced_config() if reduced else mod.CONFIG
+    shape = shape_override or mod.SHAPES[shape_name]
+    if shape.skip:
+        raise ValueError(f"cell {arch}/{shape_name} is N/A: {shape.skip}")
+    if fp8 is None:
+        fp8 = getattr(cfg, "use_fp8", False) or mod.FAMILY in ("lm", "onerec")
+    if mod.FAMILY == "lm":
+        return _lm_bundle(arch, cfg, shape, fp8=fp8, abstract=abstract,
+                          seed=seed)
+    if mod.FAMILY == "recsys":
+        return _recsys_bundle(arch, cfg, shape, fp8=fp8, abstract=abstract,
+                              seed=seed)
+    if mod.FAMILY == "gnn":
+        n_classes = getattr(mod, "N_CLASSES", 16)
+        return _gnn_bundle(arch, cfg, shape, abstract=abstract,
+                           n_classes=n_classes, seed=seed)
+    if mod.FAMILY == "onerec":
+        return _onerec_bundle(arch, cfg, shape, fp8=fp8, abstract=abstract,
+                              seed=seed)
+    raise ValueError(f"unknown family {mod.FAMILY}")
+
+
+# Reduced-shape cells for CPU smoke testing (same kinds, tiny dims).
+SMOKE_SHAPES = {
+    "lm": {
+        "train": ShapeSpec("smoke_train", "train", seq_len=16, global_batch=2),
+        "prefill": ShapeSpec("smoke_prefill", "prefill", seq_len=16,
+                             global_batch=2),
+        "decode": ShapeSpec("smoke_decode", "decode", seq_len=32,
+                            global_batch=2),
+    },
+    "recsys": {
+        "train": ShapeSpec("smoke_train", "train", global_batch=8),
+        "score": ShapeSpec("smoke_score", "score", global_batch=8),
+        "retrieval": ShapeSpec("smoke_retrieval", "retrieval", global_batch=1,
+                               n_candidates=64),
+    },
+    "gnn": {
+        "graph": ShapeSpec("smoke_graph", "graph", n_nodes=40, n_edges=120,
+                           d_feat=16),
+        "molecule": ShapeSpec("smoke_molecule", "graph", n_nodes=10,
+                              n_edges=20, global_batch=4, d_feat=16),
+    },
+    "onerec": {
+        "train": ShapeSpec("smoke_train", "train", seq_len=27, global_batch=2),
+        "prefill": ShapeSpec("smoke_prefill", "prefill", seq_len=24,
+                             global_batch=2),
+        "decode": ShapeSpec("smoke_decode", "decode", seq_len=27,
+                            global_batch=2),
+    },
+}
+
+
+def smoke_bundles(arch: str, fp8: bool = False):
+    """Concrete reduced-config bundles covering every step kind of the arch."""
+    mod = registry.get_arch(arch)
+    fam = mod.FAMILY
+    out = []
+    for shape in SMOKE_SHAPES[fam].values():
+        out.append(build_bundle(arch, shape.name, reduced=True, fp8=fp8,
+                                abstract=False, shape_override=shape))
+    return out

@@ -1,0 +1,1 @@
+from repro.layers import attention, common, embedding, mlp, moe, norms, rotary  # noqa: F401

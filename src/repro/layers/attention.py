@@ -1,0 +1,266 @@
+"""GQA attention: full/sliding-window, chunked long-context, KV-cache decode.
+
+Design notes (DESIGN.md §3):
+  * Softmax and score accumulation in f32; projections in the compute dtype
+    (bf16) or through the FP8 path when the kernel leaves are quantized.
+  * Long sequences use a q-chunked scan (flash-style memory behavior, with
+    remat on the chunk body) — this is the XLA expression of the paper's
+    "software pipelining"; the Pallas kernel in ``repro/kernels/batch_attention``
+    implements the fused large-batch/short-context serving case.
+  * The KV cache carries an explicit per-slot ``pos`` array (−1 = empty),
+    which uniformly handles linear caches, sliding-window ring buffers, and
+    sharded-sequence decode masking.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import matmul_any
+from repro.distributed.sharding import constrain
+from repro.layers.common import dense_init
+from repro.layers.norms import rmsnorm_apply, rmsnorm_init
+from repro.layers.rotary import apply_rope
+
+NEG_INF = -2.0e38
+
+
+class AttnSpec(NamedTuple):
+    """Static attention hyperparameters for one layer."""
+
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: int = 0            # 0 => full (causal) attention
+    use_qk_norm: bool = False
+    softmax_scale: Optional[float] = None
+    chunk_size: int = 1024     # q-chunking threshold/size for long sequences
+    use_kernel: bool = False   # route decode through the Pallas kernel
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or 1.0 / math.sqrt(self.head_dim)
+
+
+def init_attention(key, d_model: int, spec: AttnSpec, *,
+                   stack: Tuple[int, ...] = (), dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    qkv_std = 1.0 / math.sqrt(d_model)
+    o_std = 1.0 / math.sqrt(spec.n_heads * spec.head_dim)
+    params = {
+        "q_proj": dense_init(kq, d_model, spec.n_heads * spec.head_dim,
+                             stack=stack, stddev=qkv_std, dtype=dtype),
+        "k_proj": dense_init(kk, d_model, spec.n_kv_heads * spec.head_dim,
+                             stack=stack, stddev=qkv_std, dtype=dtype),
+        "v_proj": dense_init(kv, d_model, spec.n_kv_heads * spec.head_dim,
+                             stack=stack, stddev=qkv_std, dtype=dtype),
+        "o_proj": dense_init(ko, spec.n_heads * spec.head_dim, d_model,
+                             stack=stack, stddev=o_std, dtype=dtype),
+    }
+    if spec.use_qk_norm:
+        params["q_norm"] = {"scale": jnp.ones((*stack, spec.head_dim), dtype)}
+        params["k_norm"] = {"scale": jnp.ones((*stack, spec.head_dim), dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, cache_len: int, spec: AttnSpec, *,
+               stack: Tuple[int, ...] = (), dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Cache slots: k/v (..., B, S, Kv, hd) + pos (..., S) with -1 = empty."""
+    return {
+        "k": jnp.zeros((*stack, batch, cache_len, spec.n_kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((*stack, batch, cache_len, spec.n_kv_heads, spec.head_dim), dtype),
+        "pos": jnp.full((*stack, cache_len), -1, jnp.int32),
+    }
+
+
+def cache_len_for(spec: AttnSpec, max_target_len: int) -> int:
+    if spec.window and spec.window < max_target_len:
+        return spec.window
+    return max_target_len
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q (B,T,K,G,hd) x k (B,S,K,hd) -> scores (B,K,G,T,S) in f32."""
+    return jnp.einsum("btkgh,bskh->bkgts", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_combine(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs (B,K,G,T,S) x v (B,S,K,hd) -> (B,T,K,G,hd)."""
+    return jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (empty-window corner): zero them out
+    return jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+
+
+def _causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """(T,S) mask: causal, plus sliding window when ``window > 0``."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _attend_block(q, k, v, q_pos, k_pos, spec: AttnSpec) -> jax.Array:
+    scores = _gqa_scores(q, k, spec.scale)
+    mask = _causal_mask(q_pos, k_pos, spec.window)
+    probs = _masked_softmax(scores, mask[None, None, None])
+    return _gqa_combine(probs, v)
+
+
+def _full_attention(q, k, v, positions, spec: AttnSpec) -> jax.Array:
+    """Materialized-scores path for short sequences."""
+    B, T = q.shape[0], q.shape[1]
+    G = spec.n_heads // spec.n_kv_heads
+    qh = q.reshape(B, T, spec.n_kv_heads, G, spec.head_dim)
+    return _attend_block(qh, k, v, positions, positions, spec).reshape(
+        B, T, spec.n_heads * spec.head_dim)
+
+
+def _chunked_attention(q, k, v, positions, spec: AttnSpec) -> jax.Array:
+    """Scan over q chunks; each chunk attends to the full K/V (f32 softmax).
+
+    Memory: O(chunk x S) scores instead of O(S^2); the chunk body is
+    rematerialized in the backward pass (flash-attention memory behavior).
+    """
+    B, T = q.shape[0], q.shape[1]
+    c = spec.chunk_size
+    nc = T // c
+    G = spec.n_heads // spec.n_kv_heads
+    qh = q.reshape(B, nc, c, spec.n_kv_heads, G, spec.head_dim)
+    qh = jnp.moveaxis(qh, 1, 0)                       # (nc, B, c, K, G, hd)
+    pos_c = positions.reshape(nc, c)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        qc, pc = xs
+        out = _attend_block(qc, k, v, pc, positions, spec)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, 0, (qh, pos_c))      # (nc, B, c, K, G, hd)
+    outs = jnp.moveaxis(outs, 0, 1)                   # (B, nc, c, K, G, hd)
+    return outs.reshape(B, T, spec.n_heads * spec.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Public layer API
+# ---------------------------------------------------------------------------
+
+
+def apply_attention(
+    params: dict,
+    x: jax.Array,
+    spec: AttnSpec,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    fill_cache: bool = False,
+    norm_eps: float = 1e-6,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One attention layer.
+
+    Modes:
+      * ``cache=None``                — training / scoring forward.
+      * ``cache, fill_cache=True``    — prefill: runs the full forward AND
+        writes the (window-truncated) K/V into the cache.
+      * ``cache, fill_cache=False``   — decode: ``x`` is (B, 1, D),
+        ``cache_index`` is the absolute position of the new token.
+    """
+    B, T, _ = x.shape
+    H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)
+
+    q = matmul_any(x, params["q_proj"]["kernel"]).reshape(B, T, H, hd)
+    k = matmul_any(x, params["k_proj"]["kernel"]).reshape(B, T, K, hd)
+    v = matmul_any(x, params["v_proj"]["kernel"]).reshape(B, T, K, hd)
+
+    if spec.use_qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, eps=norm_eps)
+        k = rmsnorm_apply(params["k_norm"], k, eps=norm_eps)
+
+    q = apply_rope(q, positions, theta=spec.rope_theta)
+    k = apply_rope(k, positions, theta=spec.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+
+    new_cache = None
+    if cache is not None and not fill_cache:
+        # ---- decode: write the new token, attend over the cache ----
+        S = cache["k"].shape[1]
+        idx = cache_index if cache_index is not None else jnp.int32(0)
+        slot = idx % S  # ring buffer for windowed layers; linear otherwise
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], idx[None].astype(jnp.int32), (slot,))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+        ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+        cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+        if ck.dtype != q.dtype:  # low-precision (fp8) KV cache: upcast reads
+            ck = ck.astype(q.dtype)
+            cv = cv.astype(q.dtype)
+        if spec.use_kernel:
+            # the paper's §4.2 batch-parallel fused attention kernel
+            from repro.kernels.batch_attention.ops import batch_attention
+            q_pos = jnp.broadcast_to(idx[None, None], (B, T)).astype(jnp.int32)
+            k_pos = jnp.broadcast_to(cpos[None, :], (B, S))
+            out = batch_attention(q, ck, cv, q_pos, k_pos,
+                                  scale=spec.scale, window=spec.window)
+            out = out.astype(x.dtype)
+        else:
+            G = H // K
+            qh = q.reshape(B, T, K, G, hd)
+            scores = _gqa_scores(qh, ck, spec.scale)          # (B,K,G,T,S)
+            valid = (cpos >= 0) & (cpos <= idx)
+            if spec.window:
+                valid &= (idx - cpos) < spec.window
+            probs = _masked_softmax(scores, valid[None, None, None, None, :])
+            out = _gqa_combine(probs, cv).reshape(B, T, H * hd)
+    else:
+        # ---- training / prefill forward ----
+        if T > 2 * spec.chunk_size and T % spec.chunk_size == 0:
+            out = _chunked_attention(q, k, v, positions, spec)
+        else:
+            out = _full_attention(q, k, v, positions, spec)
+        if cache is not None and fill_cache:
+            S = cache["k"].shape[1]
+            keep = min(S, T)
+            k_tail = k[:, T - keep:].astype(cache["k"].dtype)
+            v_tail = v[:, T - keep:].astype(cache["v"].dtype)
+            pos_tail = positions[T - keep:].astype(jnp.int32)
+            slots = pos_tail % S
+            ck = cache["k"].at[:, slots].set(k_tail)
+            cv = cache["v"].at[:, slots].set(v_tail)
+            cpos = cache["pos"].at[slots].set(pos_tail)
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    out = constrain(out, ("batch", "seq", "qkv_out"))
+    proj = matmul_any(out, params["o_proj"]["kernel"])
+    return constrain(proj, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,73 @@
+"""Shared layer utilities: dense projections, initializers, dtype policy.
+
+Every matmul weight is a leaf named ``kernel`` inside a named module dict —
+this naming IS the contract the PTQ policy matches against
+(``repro/core/policy.py``), so a quantized param pytree drops straight into
+the same apply functions via :func:`repro.core.quant.matmul_any`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, matmul_any
+
+
+def truncated_normal_init(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, *,
+               stack: Tuple[int, ...] = (),
+               stddev: Optional[float] = None,
+               dtype=jnp.float32) -> dict:
+    """A linear projection param dict: {"kernel": (*stack, in, out)}."""
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(in_dim)
+    kernel = truncated_normal_init(key, (*stack, in_dim, out_dim), stddev, dtype)
+    return {"kernel": kernel}
+
+
+def dense_apply(params: dict, x: jax.Array, *, out_dtype=None) -> jax.Array:
+    """``x @ kernel`` — kernel may be a raw array or a QuantizedTensor."""
+    return matmul_any(x, params["kernel"], out_dtype=out_dtype or x.dtype)
+
+
+def mlp_stack_init(key, dims: Sequence[int], *, dtype=jnp.float32) -> dict:
+    """An MLP tower {"0": dense, "1": dense, ...} of ``len(dims)-1`` layers."""
+    params = {}
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        params[str(i)] = dense_init(sub, dims[i], dims[i + 1], dtype=dtype)
+        params[str(i)]["bias"] = jnp.zeros((dims[i + 1],), dtype)
+    return params
+
+
+def mlp_stack_apply(params: dict, x: jax.Array, *,
+                    act=jax.nn.relu, final_act: bool = False) -> jax.Array:
+    n = len(params)
+    for i in range(n):
+        p = params[str(i)]
+        x = dense_apply(p, x) + p["bias"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def kernel_shape(w) -> Tuple[int, ...]:
+    return w.data.shape if isinstance(w, QuantizedTensor) else w.shape
+
+
+def param_count(params) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    total = 0
+    for leaf in leaves:
+        if isinstance(leaf, QuantizedTensor):
+            total += int(jnp.size(leaf.data))
+        else:
+            total += int(jnp.size(leaf))
+    return total

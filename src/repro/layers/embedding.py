@@ -1,0 +1,80 @@
+"""Embedding tables and EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag`` or CSR sparse — per the assignment,
+the bag lookup is built from ``jnp.take`` + ``jax.ops.segment_sum`` and IS
+part of the system (it is the recsys hot path).  Tables are row-shardable
+over ``(data, model)`` (see TRAIN_RULES["table_rows"]).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def init_embedding(key, vocab: int, dim: int, *, stddev: Optional[float] = None,
+                   dtype=jnp.float32) -> dict:
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(dim)
+    table = stddev * jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), dtype)
+    return {"table": table}
+
+
+def embed_lookup(params: dict, ids: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Plain gather; table row-sharded (SPMD turns this into a collective gather)."""
+    out = jnp.take(params["table"], ids, axis=0).astype(compute_dtype)
+    return out
+
+
+def embedding_bag(params: dict, ids: jax.Array, offsets_or_segments: jax.Array,
+                  *, n_bags: int, mode: str = "sum",
+                  weights: Optional[jax.Array] = None,
+                  compute_dtype=jnp.bfloat16) -> jax.Array:
+    """EmbeddingBag(sum|mean|max) over ragged id lists.
+
+    ``ids``: flat (nnz,) indices into the table.
+    ``offsets_or_segments``: (nnz,) segment id per entry (bag index).
+    """
+    seg = offsets_or_segments
+    vecs = jnp.take(params["table"], ids, axis=0).astype(jnp.float32)
+    if weights is not None:
+        vecs = vecs * weights.astype(jnp.float32)[:, None]
+    if mode == "sum":
+        out = jax.ops.segment_sum(vecs, seg, num_segments=n_bags)
+    elif mode == "mean":
+        s = jax.ops.segment_sum(vecs, seg, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(seg, jnp.float32), seg,
+                                  num_segments=n_bags)
+        out = s / jnp.maximum(cnt, 1.0)[:, None]
+    elif mode == "max":
+        out = jax.ops.segment_max(vecs, seg, num_segments=n_bags)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    return out.astype(compute_dtype)
+
+
+def multi_hot_bag(params: dict, ids: jax.Array, *, mode: str = "sum",
+                  pad_id: int = 0, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Fixed-width multi-hot lookup: ids (batch, n_per_bag), pad_id = empty.
+
+    The dense-batch fast path used by the recsys models (fields have a
+    bounded multiplicity); padding entries are masked out of the reduction.
+    """
+    vecs = jnp.take(params["table"], ids, axis=0).astype(jnp.float32)
+    mask = (ids != pad_id).astype(jnp.float32)[..., None]
+    vecs = vecs * mask
+    if mode == "sum":
+        out = jnp.sum(vecs, axis=-2)
+    elif mode == "mean":
+        out = jnp.sum(vecs, axis=-2) / jnp.maximum(jnp.sum(mask, axis=-2), 1.0)
+    elif mode == "max":
+        out = jnp.max(jnp.where(mask > 0, vecs, -jnp.inf), axis=-2)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    return out.astype(compute_dtype)

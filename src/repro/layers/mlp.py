@@ -1,0 +1,38 @@
+"""Dense gated-MLP (SwiGLU / GeGLU) feed-forward blocks."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import matmul_any
+from repro.distributed.sharding import constrain
+from repro.layers.common import dense_init
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, *,
+             stack: Tuple[int, ...] = (), dtype=jnp.float32) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(kg, d_model, d_ff, stack=stack, dtype=dtype),
+        "up": dense_init(ku, d_model, d_ff, stack=stack, dtype=dtype),
+        "down": dense_init(kd, d_ff, d_model, stack=stack, dtype=dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    fn = ACTIVATIONS[act]
+    g = matmul_any(x, params["gate"]["kernel"])
+    u = matmul_any(x, params["up"]["kernel"])
+    h = fn(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, ("batch", "seq", "mlp"))
+    out = matmul_any(h, params["down"]["kernel"])
+    return constrain(out, ("batch", "seq", "embed"))

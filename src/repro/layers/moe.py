@@ -1,0 +1,232 @@
+"""Sparse MoE with capacity-bounded dispatch and a grouped GEMM expert path.
+
+This is the layer the paper's block-wise FP8 scheme targets: the expert
+computation is expressed as a GROUPED GEMM over ``(E_local, capacity, d)``
+buffers, so the ``1x128`` activation / ``128x128`` weight block quantization
+(`repro.core.quant.fp8_grouped_matmul`) and the Pallas grouped kernel apply
+directly.
+
+Distribution (expert parallelism): activations are data-sharded over
+``(pod, data)`` and replicated over ``model``; experts are sharded over
+``model``.  Inside ``shard_map`` each model shard gathers only the token
+assignments routed to ITS experts into a fixed-capacity buffer, runs the
+grouped GEMM, scatters weighted results back, and a ``psum`` over ``model``
+combines expert contributions (same collective cost as a TP dense FFN).
+Routing is computed redundantly per model shard from replicated router
+weights, so no routing broadcast is needed.
+
+On a single device (smoke tests) the identical local function runs with all
+experts, no mesh required.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.quant import (QuantizedTensor, fp8_grouped_linear,
+                              fp8_grouped_matmul, matmul_any)
+from repro.distributed.sharding import (constrain, current_mesh,
+                                        logical_to_spec)
+from repro.layers.common import dense_init
+from repro.layers.mlp import ACTIVATIONS, apply_mlp, init_mlp
+
+
+class MoESpec(NamedTuple):
+    n_experts: int           # logical experts (may be < padded)
+    n_experts_padded: int    # padded to a multiple of the EP degree
+    top_k: int
+    d_model: int
+    d_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    norm_topk_prob: bool = False
+    router_jitter: float = 0.0
+
+
+def make_moe_spec(n_experts: int, top_k: int, d_model: int, d_expert: int,
+                  *, n_shared_experts: int = 0, capacity_factor: float = 1.25,
+                  act: str = "silu", norm_topk_prob: bool = False,
+                  ep_degree: int = 16) -> MoESpec:
+    padded = int(math.ceil(n_experts / ep_degree) * ep_degree)
+    return MoESpec(n_experts, padded, top_k, d_model, d_expert,
+                   n_shared_experts, capacity_factor, act, norm_topk_prob)
+
+
+def init_moe(key, spec: MoESpec, *, stack: Tuple[int, ...] = (),
+             dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, D, F = spec.n_experts_padded, spec.d_model, spec.d_expert
+    std_in, std_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+
+    def tn(k, shape, std):
+        return std * jax.random.truncated_normal(k, -2.0, 2.0, shape, dtype)
+
+    params = {
+        "router": {"kernel": tn(kr, (*stack, D, E), std_in)},
+        # stacked per-expert kernels == the grouped-GEMM operands.
+        "experts": {
+            "gate": tn(kg, (*stack, E, D, F), std_in),
+            "up": tn(ku, (*stack, E, D, F), std_in),
+            "down": tn(kd, (*stack, E, F, D), std_out),
+        },
+    }
+    if spec.n_shared_experts:
+        params["shared"] = init_mlp(
+            ks, D, spec.n_shared_experts * F, stack=stack, dtype=dtype)
+    return params
+
+
+def _grouped_matmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """x (E, C, K) @ w (E, K, N); w raw or QuantizedTensor (block preferred,
+    per-channel when dims aren't 128-aligned)."""
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, QuantizedTensor):
+        if w.granularity == "block":
+            return fp8_grouped_matmul(x, w, out_dtype=out_dtype)
+        return fp8_grouped_linear(x, w, out_dtype=out_dtype)
+    return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _grouped_ffn(buf: jax.Array, experts: dict, act: str) -> jax.Array:
+    """The grouped GEMM expert FFN (the paper's quantization target)."""
+    fn = ACTIVATIONS[act]
+    g = _grouped_matmul(buf, experts["gate"])
+    u = _grouped_matmul(buf, experts["up"])
+    h = fn(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return _grouped_matmul(h, experts["down"])
+
+
+def _capacity(n_tokens: int, spec: MoESpec, n_shards: int) -> int:
+    """Static per-expert capacity for the local token slab."""
+    t_loc = max(n_tokens // n_shards, 1)
+    c = int(math.ceil(t_loc * spec.top_k * spec.capacity_factor
+                      / spec.n_experts))
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+def _route(router_kernel, xt: jax.Array, spec: MoESpec):
+    """Router in f32. Returns (weights (T,k), experts (T,k))."""
+    logits = matmul_any(xt, router_kernel, out_dtype=jnp.float32)
+    logits = logits.astype(jnp.float32)
+    if spec.n_experts_padded > spec.n_experts:  # mask padded experts
+        pad = spec.n_experts_padded - spec.n_experts
+        bias = jnp.concatenate(
+            [jnp.zeros((spec.n_experts,)), jnp.full((pad,), -1e30)])
+        logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, spec.top_k)
+    if spec.norm_topk_prob:
+        topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+    return topv, topi
+
+
+def _moe_local(params: dict, xt: jax.Array, spec: MoESpec, *,
+               e_start, e_local: int, capacity: int) -> jax.Array:
+    """Per-shard MoE body: route -> dispatch -> grouped GEMM -> combine.
+
+    ``xt`` (T, D) is this shard's token slab (replicated over `model`);
+    ``e_start`` is the first expert owned by this shard (traced OK).
+    Output must still be psum'd over `model` by the caller when sharded.
+    """
+    T, D = xt.shape
+    k = spec.top_k
+    topv, topi = _route(params["router"]["kernel"], xt, spec)
+
+    flat_e = topi.reshape(-1)                               # (T*k,)
+    flat_w = topv.reshape(-1)
+    token_id = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    local = (flat_e >= e_start) & (flat_e < e_start + e_local)
+    le = jnp.where(local, flat_e - e_start, e_local)        # e_local = trash bin
+    oh = jax.nn.one_hot(le, e_local + 1, dtype=jnp.int32)   # (T*k, e_local+1)
+    pos = jnp.sum((jnp.cumsum(oh, axis=0) - 1) * oh, axis=1)
+    keep = local & (pos < capacity)
+    slot = jnp.where(keep, le * capacity + pos, e_local * capacity)
+
+    # dispatch: scatter token vectors into the fixed (E_loc*C [+1 trash], D) buffer
+    buf = jnp.zeros((e_local * capacity + 1, D), xt.dtype)
+    buf = buf.at[slot].set(xt[token_id], mode="drop",
+                           unique_indices=False)
+    grouped = buf[:-1].reshape(e_local, capacity, D)
+
+    h = _grouped_ffn(grouped, params["experts"], spec.act)  # (E_loc, C, D)
+
+    # combine: gather each kept assignment's output, weight, scatter-add
+    out_flat = h.reshape(e_local * capacity, D)
+    contrib = out_flat[jnp.minimum(slot, e_local * capacity - 1)]
+    contrib = contrib * (flat_w * keep).astype(contrib.dtype)[:, None]
+    y = jnp.zeros((T, D), xt.dtype).at[token_id].add(contrib)
+    return y
+
+
+def apply_moe(params: dict, x: jax.Array, spec: MoESpec) -> jax.Array:
+    """MoE FFN over x (B, S, D): EP via shard_map when a mesh is active."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    mesh = current_mesh()
+    ep_axes = ()
+    if mesh is not None:
+        ep_axes = tuple(a for a in ("model",) if a in mesh.axis_names
+                        and mesh.shape[a] > 1)
+    dp_axes = ()
+    if mesh is not None:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    if not ep_axes:
+        cap = _capacity(B * S, spec, 1)
+        y = _moe_local(params, xt, spec, e_start=jnp.int32(0),
+                       e_local=spec.n_experts_padded, capacity=cap)
+    else:
+        ep = mesh.shape["model"]
+        n_dp = 1
+        for a in dp_axes:
+            n_dp *= mesh.shape[a]
+        e_local = spec.n_experts_padded // ep
+        cap = _capacity(B * S, spec, n_dp)
+
+        def shard_body(router_k, experts, xt_loc):
+            e_start = jax.lax.axis_index("model") * e_local
+            p = {"router": {"kernel": router_k}, "experts": experts}
+            y = _moe_local(p, xt_loc, spec, e_start=e_start,
+                           e_local=e_local, capacity=cap)
+            return jax.lax.psum(y, "model")
+
+        # tokens sharded over the dp axes, replicated over `model`;
+        # experts sharded over `model` (leading E axis of every leaf —
+        # QuantizedTensor data AND scale both lead with E, so one spec
+        # per QuantizedTensor node broadcasts correctly to its children).
+        token_spec = P(dp_axes if dp_axes else None)
+        expert_spec = jax.tree_util.tree_map(
+            lambda _: P("model"), params["experts"],
+            is_leaf=lambda v: isinstance(v, QuantizedTensor) or hasattr(v, "shape"))
+        y = jax.shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(P(), expert_spec, token_spec),
+            out_specs=token_spec,
+            check_vma=False,
+        )(params["router"]["kernel"], params["experts"], xt)
+
+    out = y.reshape(B, S, D)
+    if spec.n_shared_experts:
+        out = out + apply_mlp(params["shared"], x, act=spec.act)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def load_balance_loss(params: dict, x: jax.Array, spec: MoESpec) -> jax.Array:
+    """Auxiliary load-balancing loss (Switch-style f_i * P_i)."""
+    xt = x.reshape(-1, spec.d_model)
+    logits = matmul_any(xt, params["router"]["kernel"], out_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, topi = jax.lax.top_k(probs, spec.top_k)
+    frac = jnp.mean(jax.nn.one_hot(topi, spec.n_experts_padded), axis=(0, 1))
+    return spec.n_experts_padded * jnp.sum(frac * jnp.mean(probs, axis=0))

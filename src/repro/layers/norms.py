@@ -1,0 +1,36 @@
+"""Normalization layers. Kept in high precision per the paper's policy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-6,
+                  zero_centered: bool = False) -> jax.Array:
+    """RMSNorm in f32 (``zero_centered`` = gemma-style ``(1 + scale)``)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    scale = 1.0 + scale if zero_centered else scale
+    return (y * scale).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

@@ -1,0 +1,1 @@
+from repro.models import gnn, onerec, recsys, transformer  # noqa: F401

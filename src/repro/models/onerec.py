@@ -1,0 +1,180 @@
+"""OneRec-V2-style generative recommender (the paper's §5.1 model).
+
+A fat-MoE decoder-only transformer over a semantic-ID vocabulary: the user's
+behavior history is a sequence of semantic-ID tokens (3 codebook levels per
+item) with a learned profile-feature prefix token; recommendation = decoding
+the next item's 3 tokens (beam / top-k search over the codebooks).
+
+Envelope matches the paper: ~4B backbone params, ~0.5B activated per token,
+batch-32 short-context serving.  The FP8 PTQ policy covers qkvo, dense FFN
+and the MoE grouped GEMM, exactly as in §4.1.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OneRecConfig
+from repro.core.quant import matmul_any
+from repro.layers.common import dense_init
+from repro.models import transformer as tfm
+
+PROFILE_DIM = 64  # stub modality frontend: precomputed profile features
+
+
+def init_onerec(key, cfg: OneRecConfig, dtype=jnp.float32) -> dict:
+    kb, kp = jax.random.split(key)
+    return {
+        "backbone": tfm.init_transformer(kb, cfg.transformer, dtype),
+        "profile_proj": dense_init(kp, PROFILE_DIM, cfg.transformer.d_model,
+                                   dtype=dtype),
+    }
+
+
+def _embed_with_profile(params, tokens, profile, cfg: OneRecConfig,
+                        compute_dtype=jnp.bfloat16):
+    """[profile token] + semantic-ID token embeddings."""
+    tok_emb = tfm.embed_tokens(params["backbone"], tokens, cfg.transformer,
+                               compute_dtype)
+    prof = matmul_any(profile.astype(compute_dtype),
+                      params["profile_proj"]["kernel"])
+    return jnp.concatenate([prof[:, None, :], tok_emb], axis=1)
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
+            *, cache: Optional[dict] = None,
+            cache_index: Optional[jax.Array] = None,
+            fill_cache: bool = False):
+    """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM)."""
+    if cache is not None and not fill_cache:
+        # decode: single new token, profile already in the cache
+        return tfm.forward(params["backbone"], batch["tokens"],
+                           cfg.transformer, cache=cache,
+                           cache_index=cache_index)
+    embeds = _embed_with_profile(params, batch["tokens"], batch["profile"], cfg)
+    return tfm.forward(params["backbone"], batch["tokens"], cfg.transformer,
+                       inputs_embeds=embeds, cache=cache,
+                       fill_cache=fill_cache)
+
+
+def train_loss(params, batch, cfg: OneRecConfig) -> jax.Array:
+    """Next-token CE over the target item's semantic-ID tokens.
+
+    ``labels`` (B, T+1) aligned with [profile, tokens...]; history positions
+    are masked (-1), only the final ``decode_len`` target tokens count.
+    """
+    logits, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: OneRecConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return tfm.init_kv_cache(cfg.transformer, batch,
+                             cfg.context_len + 1, dtype)
+
+
+def prefill(params, batch, cfg: OneRecConfig, cache: dict):
+    """Encode [profile + history]; returns last logits + filled cache."""
+    logits, new_cache = forward(params, batch, cfg, cache=cache,
+                                fill_cache=True)
+    return logits[:, -1], new_cache
+
+
+def decode_step(params, tokens, cfg: OneRecConfig, cache: dict,
+                index: jax.Array):
+    """One semantic-ID decode step: tokens (B, 1) at absolute ``index``."""
+    logits, new_cache = tfm.forward(params["backbone"], tokens,
+                                    cfg.transformer, cache=cache,
+                                    cache_index=index)
+    return logits[:, -1], new_cache
+
+
+def beam_generate(params, batch, cfg: OneRecConfig, *,
+                  beam_width: int = 0, topk_fn=None) -> Tuple[jax.Array,
+                                                              jax.Array]:
+    """OneRec-style beam search over the semantic-ID codebooks.
+
+    Returns (items (B, W, decode_len), log-probs (B, W)) sorted by beam
+    score.  ``beam_width=1`` reduces to greedy.  The KV cache is replicated
+    per beam after prefill (batch axis B -> B*W), so each decode step is a
+    single batched program — the large-batch regime the fused attention
+    kernel targets.
+    """
+    topk_fn = topk_fn or (lambda x, k: jax.lax.top_k(x, k))
+    W = beam_width or cfg.beam_width
+    B = batch["tokens"].shape[0]
+    V = cfg.vocab_size
+    cache = init_cache(cfg, B)
+    logits, cache = prefill(params, batch, cfg, cache)       # (B, V)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    # seed beams from the prefill logits
+    top_lp, top_ids = topk_fn(logp, W)                       # (B, W)
+    beams = top_ids[..., None].astype(jnp.int32)             # (B, W, 1)
+    scores = top_lp                                          # (B, W)
+
+    # replicate the cache along the batch axis: (..., B, ...) -> (B*W)
+    def rep(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] != B:  # stacked (L, B, ...)
+            return jnp.repeat(leaf, W, axis=1)
+        return leaf
+    cache = jax.tree_util.tree_map(
+        lambda l: jnp.repeat(l, W, axis=1) if l.ndim >= 4 else l, cache)
+
+    index = jnp.int32(batch["tokens"].shape[1] + 1)
+    for _ in range(cfg.decode_len - 1):
+        tok = beams[..., -1].reshape(B * W, 1)
+        logits, cache = decode_step(params, tok, cfg, cache, index)
+        index = index + 1
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        logp = logp.reshape(B, W, V)
+        cand = scores[..., None] + logp                      # (B, W, V)
+        flat = cand.reshape(B, W * V)
+        scores, flat_ids = topk_fn(flat, W)                  # (B, W)
+        parent = (flat_ids // V).astype(jnp.int32)
+        token = (flat_ids % V).astype(jnp.int32)
+        beams = jnp.concatenate(
+            [jnp.take_along_axis(beams, parent[..., None], axis=1),
+             token[..., None]], axis=-1)
+        # re-gather each beam's cache rows to follow its parent
+        gather_ids = (jnp.arange(B)[:, None] * W + parent).reshape(-1)
+        cache = jax.tree_util.tree_map(
+            lambda l: jnp.take(l, gather_ids, axis=1) if l.ndim >= 4 else l,
+            cache)
+    return beams, scores
+
+
+def generate_items(params, batch, cfg: OneRecConfig, *,
+                   topk_fn=None) -> jax.Array:
+    """Greedy/top-k generation of one item (= ``decode_len`` tokens).
+
+    ``topk_fn(logits, k)`` is injected by the serving engine so it can swap
+    the RadixTopK kernel in; defaults to ``jax.lax.top_k``.
+    """
+    topk_fn = topk_fn or (lambda x, k: jax.lax.top_k(x, k))
+    B = batch["tokens"].shape[0]
+    cache = init_cache(cfg, B)
+    logits, cache = prefill(params, batch, cfg, cache)
+    start = batch["tokens"].shape[1] + 1  # +1 profile token
+    out_tokens = []
+    index = jnp.int32(start)
+    for _ in range(cfg.decode_len):
+        _, top_ids = topk_fn(logits, 1)
+        nxt = top_ids[:, :1].astype(jnp.int32)
+        out_tokens.append(nxt)
+        logits, cache = decode_step(params, nxt, cfg, cache, index)
+        index = index + 1
+    return jnp.concatenate(out_tokens, axis=1)  # (B, decode_len)

@@ -1,0 +1,417 @@
+"""Classical recommender architectures: two-tower, MIND, DIN, DIEN.
+
+These are the paper's *contrast class*: traditional fine-grained-ranking
+models with huge sparse embedding tables and small dense nets.  The paper's
+FP8 scheme applies only to their dense MLP compute (policy default); the
+embedding path (the real hot spot — built here from ``jnp.take`` +
+``segment_sum``, since JAX has no native EmbeddingBag) stays high-precision.
+
+All four families share one input contract:
+  batch = {
+    "hist_ids":   (B, L) int32   — behavior history, 0 = padding
+    "target_ids": (B,)   int32   — candidate item
+    "field_ids":  (B, n_fields)  — user categorical profile
+    "labels":     (B,)   float32 — click label (train)
+  }
+Scoring entry points:
+  * ``score(params, batch, cfg)``            — pointwise CTR / similarity
+  * ``retrieval_scores(params, batch, cfg)`` — one user vs N candidates
+  * ``train_loss(params, batch, cfg)``
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.core.quant import matmul_any
+from repro.core.stats import tap as stats_tap
+from repro.distributed.sharding import constrain
+from repro.layers.common import dense_init, mlp_stack_apply, mlp_stack_init
+from repro.layers.embedding import init_embedding, multi_hot_bag
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _init_tables(key, cfg: RecsysConfig, dtype=jnp.float32) -> dict:
+    ki, kf = jax.random.split(key)
+    # classical ranking models have notoriously wide weight ranges; we init
+    # tables at unit-ish std (vs 1/sqrt(d) for the transformer) so the Fig.-1
+    # contrast is reproducible from the framework itself.
+    return {
+        "item_embed": {"table": jax.random.normal(
+            ki, (cfg.n_items, cfg.embed_dim), dtype)},
+        "field_embed": {"table": jax.random.normal(
+            kf, (cfg.n_sparse_fields * cfg.field_vocab, cfg.embed_dim), dtype)},
+    }
+
+
+def _field_vecs(params, field_ids: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """(B, n_fields) -> (B, n_fields*d). Fused table with per-field offsets."""
+    offsets = (jnp.arange(cfg.n_sparse_fields, dtype=jnp.int32)
+               * cfg.field_vocab)
+    vecs = jnp.take(params["field_embed"]["table"],
+                    field_ids + offsets[None, :], axis=0)
+    return vecs.reshape(field_ids.shape[0], -1).astype(jnp.bfloat16)
+
+
+def _hist_vecs(params, hist_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(B, L) -> embeddings (B, L, d) bf16 + mask (B, L) f32."""
+    vecs = jnp.take(params["item_embed"]["table"], hist_ids, axis=0)
+    stats_tap("hist_embed", vecs)
+    mask = (hist_ids != 0).astype(jnp.float32)
+    return vecs.astype(jnp.bfloat16), mask
+
+
+def _target_vecs(params, target_ids: jax.Array) -> jax.Array:
+    return jnp.take(params["item_embed"]["table"], target_ids,
+                    axis=0).astype(jnp.bfloat16)
+
+
+def _bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval  [Yi et al., RecSys'19]
+# ---------------------------------------------------------------------------
+
+
+def init_two_tower(key, cfg: RecsysConfig, dtype=jnp.float32) -> dict:
+    kt, ku, ki = jax.random.split(key, 3)
+    params = _init_tables(kt, cfg, dtype)
+    d = cfg.embed_dim
+    user_in = d + cfg.n_sparse_fields * d          # pooled history + fields
+    params["user_tower"] = {"tower": mlp_stack_init(
+        ku, (user_in, *cfg.tower_mlp), dtype=dtype)}
+    params["item_tower"] = {"tower": mlp_stack_init(
+        ki, (d, *cfg.tower_mlp), dtype=dtype)}
+    return params
+
+
+def _two_tower_user(params, batch, cfg) -> jax.Array:
+    hist, mask = _hist_vecs(params, batch["hist_ids"])
+    pooled = (jnp.sum(hist * mask[..., None].astype(hist.dtype), axis=1)
+              / jnp.maximum(mask.sum(1), 1.0)[:, None].astype(hist.dtype))
+    u_in = jnp.concatenate(
+        [pooled, _field_vecs(params, batch["field_ids"], cfg)], axis=-1)
+    u = mlp_stack_apply(params["user_tower"]["tower"], u_in)
+    return u / (jnp.linalg.norm(u.astype(jnp.float32), axis=-1,
+                                keepdims=True).astype(u.dtype) + 1e-6)
+
+
+def _two_tower_item(params, item_ids) -> jax.Array:
+    v = mlp_stack_apply(params["item_tower"]["tower"], _target_vecs(params, item_ids))
+    return v / (jnp.linalg.norm(v.astype(jnp.float32), axis=-1,
+                                keepdims=True).astype(v.dtype) + 1e-6)
+
+
+def two_tower_score(params, batch, cfg) -> jax.Array:
+    u = _two_tower_user(params, batch, cfg)
+    v = _two_tower_item(params, batch["target_ids"])
+    return jnp.sum(u.astype(jnp.float32) * v.astype(jnp.float32), axis=-1)
+
+
+def two_tower_train_loss(params, batch, cfg, temperature: float = 0.05) -> jax.Array:
+    """In-batch sampled softmax (each row's target = positive)."""
+    u = _two_tower_user(params, batch, cfg)
+    v = _two_tower_item(params, batch["target_ids"])
+    logits = (u.astype(jnp.float32) @ v.astype(jnp.float32).T) / temperature
+    logits = constrain(logits, ("batch", "candidates"))
+    labels = jnp.arange(logits.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def two_tower_retrieval(params, batch, cfg) -> jax.Array:
+    """One user against candidate_ids (N,): a single batched GEMM, no loop."""
+    u = _two_tower_user(params, batch, cfg)            # (1, d_out)
+    cands = _two_tower_item(params, batch["candidate_ids"])  # (N, d_out)
+    cands = constrain(cands, ("candidates", None))
+    return (u.astype(jnp.float32) @ cands.astype(jnp.float32).T)[0]  # (N,)
+
+
+# ---------------------------------------------------------------------------
+# DIN: target attention over behavior history  [arXiv:1706.06978]
+# ---------------------------------------------------------------------------
+
+
+def init_din(key, cfg: RecsysConfig, dtype=jnp.float32) -> dict:
+    ka, km, kt = jax.random.split(key, 3)
+    params = _init_tables(kt, cfg, dtype)
+    d = cfg.embed_dim
+    params["attn"] = {"attn_mlp": mlp_stack_init(
+        ka, (4 * d, *cfg.attn_mlp, 1), dtype=dtype)}
+    score_in = d + d + cfg.n_sparse_fields * d   # pooled + target + fields
+    params["score"] = {"score_mlp": mlp_stack_init(
+        km, (score_in, *cfg.mlp, 1), dtype=dtype)}
+    return params
+
+
+def _din_attention(params, hist, mask, target) -> jax.Array:
+    """DIN local activation unit -> weighted-sum pooled history (B, d)."""
+    t = jnp.broadcast_to(target[:, None, :], hist.shape)
+    feats = jnp.concatenate([hist, t, hist * t, hist - t], axis=-1)
+    w = mlp_stack_apply(params["attn"]["attn_mlp"], feats)[..., 0]
+    w = w.astype(jnp.float32) + (mask - 1.0) * 1e9
+    w = jax.nn.softmax(w, axis=-1) * mask
+    return jnp.einsum("bl,bld->bd", w.astype(hist.dtype), hist)
+
+
+def din_score(params, batch, cfg) -> jax.Array:
+    hist, mask = _hist_vecs(params, batch["hist_ids"])
+    target = _target_vecs(params, batch["target_ids"])
+    pooled = _din_attention(params, hist, mask, target)
+    stats_tap("din_pooled", pooled)
+    x = jnp.concatenate(
+        [pooled, target, _field_vecs(params, batch["field_ids"], cfg)], axis=-1)
+    out = mlp_stack_apply(params["score"]["score_mlp"], x)[..., 0]
+    stats_tap("din_logit", out)
+    return out
+
+
+def din_train_loss(params, batch, cfg) -> jax.Array:
+    return _bce_loss(din_score(params, batch, cfg), batch["labels"])
+
+
+def din_retrieval(params, batch, cfg) -> jax.Array:
+    """One user vs N candidates: vectorized target attention (no loop)."""
+    hist, mask = _hist_vecs(params, batch["hist_ids"])          # (1, L, d)
+    cands = _target_vecs(params, batch["candidate_ids"])        # (N, d)
+    cands = constrain(cands, ("candidates", None))
+    hist_n = jnp.broadcast_to(hist, (cands.shape[0], *hist.shape[1:]))
+    mask_n = jnp.broadcast_to(mask, (cands.shape[0], mask.shape[1]))
+    pooled = _din_attention(params, hist_n, mask_n, cands)
+    fields = _field_vecs(params, batch["field_ids"], cfg)
+    fields_n = jnp.broadcast_to(fields, (cands.shape[0], fields.shape[-1]))
+    x = jnp.concatenate([pooled, cands, fields_n], axis=-1)
+    return mlp_stack_apply(params["score"]["score_mlp"], x)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN: GRU interest extraction + AUGRU interest evolution [arXiv:1809.03672]
+# ---------------------------------------------------------------------------
+
+
+def _gru_init(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    s_in, s_h = 1.0 / math.sqrt(d_in), 1.0 / math.sqrt(d_h)
+    return {
+        "wx": {"kernel": s_in * jax.random.truncated_normal(
+            k1, -2, 2, (d_in, 3 * d_h), dtype)},
+        "wh": {"kernel": s_h * jax.random.truncated_normal(
+            k2, -2, 2, (d_h, 3 * d_h), dtype)},
+        "bias": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    """GRU / AUGRU cell (CuDNN variant; AUGRU: update gate scaled by ``att``).
+
+    r = σ(x Wr + h Ur);  u = σ(x Wu + h Uu);
+    c = tanh(x Wc + r ⊙ (h Uc));  h' = (1-u) h + u c
+    """
+    xg = matmul_any(x, p["wx"]["kernel"], out_dtype=jnp.float32) \
+        + p["bias"].astype(jnp.float32)
+    hg = matmul_any(h, p["wh"]["kernel"], out_dtype=jnp.float32)
+    xr, xu, xc = jnp.split(xg, 3, axis=-1)
+    hr, hu, hc = jnp.split(hg, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    u = jax.nn.sigmoid(xu + hu)
+    c = jnp.tanh(xc + r * hc)
+    if att is not None:
+        u = u * att[..., None]
+    h_new = (1.0 - u) * h.astype(jnp.float32) + u * c
+    return h_new.astype(h.dtype)
+
+
+def init_dien(key, cfg: RecsysConfig, dtype=jnp.float32) -> dict:
+    kt, k1, k2, km = jax.random.split(key, 4)
+    params = _init_tables(kt, cfg, dtype)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    params["gru"] = _gru_init(k1, d, g, dtype)
+    params["augru"] = _gru_init(k2, g, g, dtype)
+    score_in = g + d + cfg.n_sparse_fields * d
+    params["score"] = {"score_mlp": mlp_stack_init(
+        km, (score_in, *cfg.mlp, 1), dtype=dtype)}
+    return params
+
+
+def _dien_interest(params, hist, mask, cfg) -> jax.Array:
+    """First GRU pass over history -> interest states (B, L, g)."""
+    B = hist.shape[0]
+    h0 = jnp.zeros((B, cfg.gru_dim), jnp.bfloat16)
+
+    def step(h, xs):
+        x_t, m_t = xs
+        h_new = _gru_cell(params["gru"], h, x_t)
+        h = jnp.where(m_t[:, None] > 0, h_new, h)
+        return h, h
+
+    xs = (jnp.moveaxis(hist, 1, 0), jnp.moveaxis(mask, 1, 0))
+    _, states = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(states, 0, 1)                   # (B, L, g)
+
+
+def dien_score(params, batch, cfg) -> jax.Array:
+    hist, mask = _hist_vecs(params, batch["hist_ids"])
+    target = _target_vecs(params, batch["target_ids"])
+    interests = _dien_interest(params, hist, mask, cfg)  # (B, L, g)
+    # attention of target on interest states (dot in embed space via proj-free
+    # truncation: pad/trim target to gru_dim)
+    tproj = jnp.pad(target, ((0, 0), (0, max(0, cfg.gru_dim - cfg.embed_dim))
+                             ))[:, :cfg.gru_dim]
+    att = jnp.einsum("blg,bg->bl", interests.astype(jnp.float32),
+                     tproj.astype(jnp.float32))
+    att = jax.nn.softmax(att + (mask - 1.0) * 1e9, axis=-1) * mask
+
+    B = hist.shape[0]
+    h0 = jnp.zeros((B, cfg.gru_dim), jnp.bfloat16)
+
+    def step(h, xs):
+        s_t, a_t, m_t = xs
+        h_new = _gru_cell(params["augru"], h, s_t, att=a_t)
+        h = jnp.where(m_t[:, None] > 0, h_new, h)
+        return h, None
+
+    xs = (jnp.moveaxis(interests, 1, 0), jnp.moveaxis(att, 1, 0),
+          jnp.moveaxis(mask, 1, 0))
+    h_final, _ = jax.lax.scan(step, h0, xs)
+    x = jnp.concatenate(
+        [h_final, target, _field_vecs(params, batch["field_ids"], cfg)], axis=-1)
+    return mlp_stack_apply(params["score"]["score_mlp"], x)[..., 0]
+
+
+def dien_train_loss(params, batch, cfg) -> jax.Array:
+    return _bce_loss(dien_score(params, batch, cfg), batch["labels"])
+
+
+def dien_retrieval(params, batch, cfg) -> jax.Array:
+    """One user vs N candidates: GRU pass shared, AUGRU vectorized over N."""
+    hist, mask = _hist_vecs(params, batch["hist_ids"])      # (1, L, d)
+    interests = _dien_interest(params, hist, mask, cfg)     # (1, L, g)
+    cands = _target_vecs(params, batch["candidate_ids"])    # (N, d)
+    cands = constrain(cands, ("candidates", None))
+    N = cands.shape[0]
+    batch_n = {
+        "hist_ids": jnp.broadcast_to(batch["hist_ids"],
+                                     (N, batch["hist_ids"].shape[1])),
+        "target_ids": batch["candidate_ids"],
+        "field_ids": jnp.broadcast_to(batch["field_ids"],
+                                      (N, batch["field_ids"].shape[1])),
+    }
+    return dien_score(params, batch_n, cfg)
+
+
+# ---------------------------------------------------------------------------
+# MIND: multi-interest capsule routing  [arXiv:1904.08030]
+# ---------------------------------------------------------------------------
+
+
+def init_mind(key, cfg: RecsysConfig, dtype=jnp.float32) -> dict:
+    kt, kb, km = jax.random.split(key, 3)
+    params = _init_tables(kt, cfg, dtype)
+    d = cfg.embed_dim
+    params["capsule"] = {"bilinear": dense_init(kb, d, d, dtype=dtype)}
+    user_in = d + cfg.n_sparse_fields * d
+    params["proj"] = {"tower": mlp_stack_init(km, (user_in, d), dtype=dtype)}
+    return params
+
+
+def _squash(v: jax.Array) -> jax.Array:
+    n2 = jnp.sum(jnp.square(v), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, batch, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic (B2I) routing -> K interest capsules (B, K, d)."""
+    hist, mask = _hist_vecs(params, batch["hist_ids"])
+    B, L, d = hist.shape
+    K = cfg.n_interests
+    low = matmul_any(hist, params["capsule"]["bilinear"]["kernel"],
+                     out_dtype=jnp.float32)               # (B, L, d)
+    # deterministic fixed init of routing logits (paper: random init, frozen)
+    b = jnp.sin(jnp.arange(L, dtype=jnp.float32)[None, :, None]
+                * (1.0 + jnp.arange(K, dtype=jnp.float32)[None, None, :]))
+    b = jnp.broadcast_to(b, (B, L, K))
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=-1) * mask[..., None]  # (B, L, K)
+        caps = _squash(jnp.einsum("blk,bld->bkd", w, low))
+        b = b + jnp.einsum("bkd,bld->blk", caps, low)
+    fields = _field_vecs(params, batch["field_ids"], cfg).astype(jnp.float32)
+    caps = caps + mlp_stack_apply(
+        params["proj"]["tower"],
+        jnp.concatenate([caps,
+                         jnp.broadcast_to(fields[:, None, :],
+                                          (B, K, fields.shape[-1]))], axis=-1)
+        .astype(jnp.bfloat16)).astype(jnp.float32)
+    return caps, mask
+
+
+def mind_score(params, batch, cfg) -> jax.Array:
+    """Label-aware max over interests."""
+    caps, _ = mind_interests(params, batch, cfg)
+    target = _target_vecs(params, batch["target_ids"]).astype(jnp.float32)
+    scores = jnp.einsum("bkd,bd->bk", caps, target)
+    return jnp.max(scores, axis=-1)
+
+
+def mind_train_loss(params, batch, cfg) -> jax.Array:
+    """Sampled softmax with in-batch negatives, label-aware interest pick."""
+    caps, _ = mind_interests(params, batch, cfg)
+    targets = _target_vecs(params, batch["target_ids"]).astype(jnp.float32)
+    scores = jnp.einsum("bkd,nd->bkn", caps, targets)     # (B, K, B)
+    best = jnp.max(scores, axis=1)                        # (B, B)
+    best = constrain(best, ("batch", "candidates"))
+    labels = jnp.arange(best.shape[0])
+    logp = jax.nn.log_softmax(best, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def mind_retrieval(params, batch, cfg) -> jax.Array:
+    caps, _ = mind_interests(params, batch, cfg)          # (1, K, d)
+    cands = _target_vecs(params, batch["candidate_ids"]).astype(jnp.float32)
+    cands = constrain(cands, ("candidates", None))
+    return jnp.max(jnp.einsum("kd,nd->kn", caps[0], cands), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Family dispatch
+# ---------------------------------------------------------------------------
+
+INIT = {"two_tower": init_two_tower, "mind": init_mind,
+        "din": init_din, "dien": init_dien}
+SCORE = {"two_tower": two_tower_score, "mind": mind_score,
+         "din": din_score, "dien": dien_score}
+TRAIN_LOSS = {"two_tower": two_tower_train_loss, "mind": mind_train_loss,
+              "din": din_train_loss, "dien": dien_train_loss}
+RETRIEVAL = {"two_tower": two_tower_retrieval, "mind": mind_retrieval,
+             "din": din_retrieval, "dien": dien_retrieval}
+
+
+def init_recsys(key, cfg: RecsysConfig, dtype=jnp.float32) -> dict:
+    return INIT[cfg.family](key, cfg, dtype)
+
+
+def score(params, batch, cfg: RecsysConfig) -> jax.Array:
+    return SCORE[cfg.family](params, batch, cfg)
+
+
+def train_loss(params, batch, cfg: RecsysConfig) -> jax.Array:
+    return TRAIN_LOSS[cfg.family](params, batch, cfg)
+
+
+def retrieval_scores(params, batch, cfg: RecsysConfig) -> jax.Array:
+    return RETRIEVAL[cfg.family](params, batch, cfg)

@@ -1,0 +1,379 @@
+"""Decoder-only transformer LM (dense + MoE), scan-stacked.
+
+Layers are grouped into homogeneous "stacks" (periods of a repeating layer
+pattern) and executed with ``jax.lax.scan`` over weights stacked on a leading
+axis — HLO size (and SPMD-partitioning time) is depth-independent, which is
+what makes 33B/512-chip compilation tractable.  Heterogeneous patterns
+(gemma3's 5 local : 1 global) become multi-position periods.
+
+Supports: GQA, sliding-window + global interleave, RoPE (dual theta),
+QK-norm, sandwich norms, tied embeddings, MoE with shared experts, leading
+dense layers, KV-cache prefill/decode — i.e. every assigned LM arch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.core.quant import matmul_any
+from repro.core.stats import tap as stats_tap
+from repro.distributed.sharding import constrain
+from repro.layers.attention import (AttnSpec, apply_attention, cache_len_for,
+                                    init_attention, init_cache)
+from repro.layers.common import dense_init
+from repro.layers.mlp import apply_mlp, init_mlp
+from repro.layers.moe import MoESpec, apply_moe, init_moe, make_moe_spec
+from repro.layers.norms import rmsnorm_apply, rmsnorm_init
+
+
+class LayerKind(NamedTuple):
+    attn: str           # "full" | "window"
+    ffn: str            # "dense" | "moe"
+
+
+class StackSpec(NamedTuple):
+    n_periods: int
+    kinds: Tuple[LayerKind, ...]
+
+
+def layer_plan(cfg: TransformerConfig) -> List[StackSpec]:
+    """Decompose the layer list into scan-able homogeneous stacks."""
+    plan: List[StackSpec] = []
+    n = cfg.n_layers
+    if cfg.moe and cfg.n_dense_layers:
+        plan.append(StackSpec(cfg.n_dense_layers, (LayerKind("full", "dense"),)))
+        n -= cfg.n_dense_layers
+    ffn = "moe" if cfg.moe else "dense"
+    if cfg.global_interval and cfg.sliding_window:
+        period = cfg.global_interval
+        kinds = tuple(LayerKind("window", ffn) for _ in range(period - 1)) \
+            + (LayerKind("full", ffn),)
+        n_full = n // period
+        rem = n - n_full * period
+        if n_full:
+            plan.append(StackSpec(n_full, kinds))
+        if rem:
+            plan.append(StackSpec(1, tuple(LayerKind("window", ffn)
+                                           for _ in range(rem))))
+    elif cfg.sliding_window:
+        plan.append(StackSpec(n, (LayerKind("window", ffn),)))
+    else:
+        plan.append(StackSpec(n, (LayerKind("full", ffn),)))
+    return [s for s in plan if s.n_periods > 0 and s.kinds]
+
+
+def attn_spec_for(cfg: TransformerConfig, kind: LayerKind) -> AttnSpec:
+    window = cfg.sliding_window if kind.attn == "window" else 0
+    theta = cfg.rope_theta
+    if kind.attn == "window" and cfg.rope_theta_local:
+        theta = cfg.rope_theta_local
+    return AttnSpec(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=theta, window=window, use_qk_norm=cfg.use_qk_norm,
+        chunk_size=cfg.attn_chunk_size,
+        use_kernel=cfg.use_attention_kernel)
+
+
+def moe_spec_for(cfg: TransformerConfig) -> MoESpec:
+    return make_moe_spec(
+        cfg.n_experts, cfg.top_k, cfg.d_model, cfg.d_expert,
+        n_shared_experts=cfg.n_shared_experts,
+        capacity_factor=cfg.capacity_factor, act=cfg.act,
+        norm_topk_prob=cfg.norm_topk_prob, ep_degree=cfg.ep_degree)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: TransformerConfig, kind: LayerKind,
+                stack: Tuple[int, ...], dtype) -> dict:
+    ka, km, ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "attn_norm": {"scale": _norm_scale(stack, cfg, dtype)},
+        "attn": init_attention(ka, cfg.d_model, attn_spec_for(cfg, kind),
+                               stack=stack, dtype=dtype),
+        "mlp_norm": {"scale": _norm_scale(stack, cfg, dtype)},
+    }
+    if kind.ffn == "moe":
+        p["moe"] = init_moe(km, moe_spec_for(cfg), stack=stack, dtype=dtype)
+        if cfg.shared_expert_gate:
+            p["moe"]["shared_gate"] = dense_init(ks, cfg.d_model, 1,
+                                                 stack=stack, dtype=dtype)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff_for_dense,
+                            stack=stack, dtype=dtype)
+    if cfg.use_post_norm:
+        p["post_attn_norm"] = {"scale": _norm_scale(stack, cfg, dtype)}
+        p["post_mlp_norm"] = {"scale": _norm_scale(stack, cfg, dtype)}
+    return p
+
+
+def _norm_scale(stack, cfg, dtype):
+    init = jnp.zeros if cfg.zero_centered_norm else jnp.ones
+    return init((*stack, cfg.d_model), dtype)
+
+
+def init_transformer(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": {"table": (1.0 / math.sqrt(cfg.d_model))
+                  * jax.random.truncated_normal(
+                      keys[0], -2.0, 2.0, (cfg.vocab_size, cfg.d_model), dtype)},
+        "stacks": {},
+        "final_norm": {"scale": _norm_scale((), cfg, dtype)},
+    }
+    for si, spec in enumerate(layer_plan(cfg)):
+        stack_params = {}
+        for pi, kind in enumerate(spec.kinds):
+            sub = jax.random.fold_in(keys[1], si * 64 + pi)
+            stack_params[f"p{pi}"] = _init_layer(
+                sub, cfg, kind, (spec.n_periods,), dtype)
+        params["stacks"][str(si)] = stack_params
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[2], cfg.d_model, cfg.vocab_size,
+                                       dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
+                 kind: LayerKind, positions, cache_lp, cache_index,
+                 fill_cache: bool):
+    h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
+                      zero_centered=cfg.zero_centered_norm)
+    attn_out, new_cache = apply_attention(
+        lp["attn"], h, attn_spec_for(cfg, kind), positions=positions,
+        cache=cache_lp, cache_index=cache_index, fill_cache=fill_cache,
+        norm_eps=cfg.norm_eps)
+    if cfg.use_post_norm:
+        attn_out = rmsnorm_apply(lp["post_attn_norm"], attn_out,
+                                 eps=cfg.norm_eps,
+                                 zero_centered=cfg.zero_centered_norm)
+    x = x + attn_out
+    h = rmsnorm_apply(lp["mlp_norm"], x, eps=cfg.norm_eps,
+                      zero_centered=cfg.zero_centered_norm)
+    if kind.ffn == "moe":
+        ff = apply_moe(lp["moe"], h, moe_spec_for(cfg))
+        if cfg.shared_expert_gate and "shared_gate" in lp["moe"]:
+            g = jax.nn.sigmoid(matmul_any(
+                h, lp["moe"]["shared_gate"]["kernel"], out_dtype=jnp.float32))
+            ff = ff * g.astype(ff.dtype)
+    else:
+        ff = apply_mlp(lp["mlp"], h, act=cfg.act)
+    if cfg.use_post_norm:
+        ff = rmsnorm_apply(lp["post_mlp_norm"], ff, eps=cfg.norm_eps,
+                           zero_centered=cfg.zero_centered_norm)
+    return x + ff, new_cache
+
+
+def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
+                 spec: StackSpec, positions, cache_stack, cache_index,
+                 fill_cache: bool, unroll: bool = False):
+    """scan over the stacked periods of one homogeneous stack."""
+
+    def body(carry, xs):
+        lp_all, cache_all = xs
+        h = carry
+        new_caches = {}
+        for pi, kind in enumerate(spec.kinds):
+            key = f"p{pi}"
+            c_lp = cache_all.get(key) if cache_all else None
+            h, nc = _apply_layer(lp_all[key], h, cfg, kind, positions,
+                                 c_lp, cache_index, fill_cache)
+            # layer-boundary residual sharding: no-op under the base rules;
+            # under TRAIN_RULES_SP this seq-shards the saved activations
+            h = constrain(h, ("batch", "act_seq", "embed"))
+            stats_tap(f"layer_out/{key}", h)
+            if nc is not None:
+                new_caches[key] = nc
+        return h, new_caches
+
+    xs = (stack_params, cache_stack if cache_stack is not None else
+          {})
+    if unroll:  # eager python loop (distribution-analysis / taps path)
+        caches = []
+        for i in range(spec.n_periods):
+            xs_i = jax.tree_util.tree_map(lambda p: p[i], xs)
+            x, nc = body(x, xs_i)
+            caches.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *cs: jnp.stack(cs), *caches) if caches[0] else {}
+        return x, (new_cache if new_cache else None)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    # scan needs every xs leaf to lead with n_periods; empty cache dict is fine
+    x, new_cache = jax.lax.scan(body, x, xs, length=spec.n_periods)
+    return x, (new_cache if new_cache else None)
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def logits_from_hidden(params: dict, x: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = matmul_any(x, params["embed"]["table"].T,
+                            out_dtype=jnp.float32)
+    else:
+        logits = matmul_any(x, params["lm_head"]["kernel"],
+                            out_dtype=jnp.float32)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: TransformerConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    fill_cache: bool = False,
+    compute_dtype=jnp.bfloat16,
+    inputs_embeds: Optional[jax.Array] = None,
+    unroll_layers: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """tokens (B, T) -> (logits (B, T, V) f32, new_cache)."""
+    if inputs_embeds is not None:
+        x = constrain(inputs_embeds.astype(compute_dtype),
+                      ("batch", "seq", "embed"))
+    else:
+        x = embed_tokens(params, tokens, cfg, compute_dtype)
+    stats_tap("embed_out", x)
+    T = x.shape[1]
+    if positions is None:
+        if cache is not None and not fill_cache and cache_index is not None:
+            positions = cache_index[None] if cache_index.ndim == 0 \
+                else cache_index
+        else:
+            positions = jnp.arange(T, dtype=jnp.int32)
+
+    new_cache: Dict[str, Any] = {"stacks": {}} if cache is not None else None
+    for si, spec in enumerate(layer_plan(cfg)):
+        key = str(si)
+        c_stack = cache["stacks"][key] if cache is not None else None
+        x, nc = _apply_stack(params["stacks"][key], x, cfg, spec, positions,
+                             c_stack, cache_index, fill_cache,
+                             unroll=unroll_layers)
+        if new_cache is not None:
+            new_cache["stacks"][key] = nc
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                      zero_centered=cfg.zero_centered_norm)
+    stats_tap("final_hidden", x)
+    logits = logits_from_hidden(params, x, cfg)
+    stats_tap("logits", logits)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.kv_cache_dtype)
+    cache: Dict[str, Any] = {"stacks": {}}
+    for si, spec in enumerate(layer_plan(cfg)):
+        stack_cache = {}
+        for pi, kind in enumerate(spec.kinds):
+            aspec = attn_spec_for(cfg, kind)
+            clen = cache_len_for(aspec, max_len)
+            stack_cache[f"p{pi}"] = init_cache(
+                batch, clen, aspec, stack=(spec.n_periods,), dtype=dtype)
+        cache["stacks"][str(si)] = stack_cache
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Task-level steps (assembled by launch/ and serving/)
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params: dict, batch: Dict[str, jax.Array],
+               cfg: TransformerConfig) -> jax.Array:
+    """Next-token cross entropy; labels < 0 are masked.
+
+    With ``cfg.aux_loss_weight > 0`` a Switch-style load-balance auxiliary
+    loss over every MoE router is added (computed on the embedded inputs as
+    a proxy for per-layer activations — standard practice keeps this term
+    cheap rather than exact)."""
+    logits, _ = forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.moe and cfg.aux_loss_weight > 0.0:
+        from repro.layers.moe import load_balance_loss
+        spec = moe_spec_for(cfg)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        aux = 0.0
+        n = 0
+        for si, sspec in enumerate(layer_plan(cfg)):
+            for pi, kind in enumerate(sspec.kinds):
+                if kind.ffn != "moe":
+                    continue
+                lp = params["stacks"][str(si)][f"p{pi}"]["moe"]
+                lp0 = jax.tree_util.tree_map(lambda p: p[0], lp)
+                aux = aux + load_balance_loss(lp0, x, spec)
+                n += 1
+        loss = loss + cfg.aux_loss_weight * aux / max(n, 1)
+    return loss
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+            cache: dict) -> Tuple[jax.Array, dict]:
+    """Run the prompt, fill the cache; returns last-position logits."""
+    logits, new_cache = forward(params, tokens, cfg, cache=cache,
+                                fill_cache=True)
+    return logits[:, -1], new_cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+                cache: dict, index: jax.Array) -> Tuple[jax.Array, dict]:
+    """One decode step: tokens (B, 1) at absolute position ``index``."""
+    logits, new_cache = forward(params, tokens, cfg, cache=cache,
+                                cache_index=index)
+    return logits[:, -1], new_cache
+
+
+def decode_fused(params: dict, first_tokens: jax.Array,
+                 cfg: TransformerConfig, cache: dict, index: jax.Array,
+                 n_steps: int) -> Tuple[jax.Array, dict]:
+    """§Perf: greedy-generate ``n_steps`` tokens inside ONE program.
+
+    A ``lax.scan`` over decode steps removes the per-token host dispatch and
+    per-token collective launch overhead of step-at-a-time serving (the
+    OneRec item = 3 semantic-ID tokens decodes as one fused program).
+    Returns (tokens (B, n_steps), cache).
+    """
+
+    def body(carry, _):
+        tok, cache, idx = carry
+        logits, cache = forward(params, tok, cfg, cache=cache,
+                                cache_index=idx)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return (nxt, cache, idx + 1), tok[:, 0]
+
+    (_, cache, _), toks = jax.lax.scan(
+        body, (first_tokens, cache, index), None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), cache

@@ -1,0 +1,144 @@
+"""OneRec serving engine: the system whose latency/throughput the paper
+measures (§5.2).
+
+Design (RecoGEM adapted to JAX/TPU, DESIGN.md §3):
+  * ONE jitted program per phase (prefill, decode) — no multi-stage
+    conversion pipeline; quantize + GEMM + epilogues fuse under XLA exactly
+    as the paper's unified TensorRT graph does,
+  * KV-cache slots live on device and are DONATED between decode steps
+    (the zero-copy idiom),
+  * request batching: requests accumulate into fixed-size batches (the
+    paper serves batch 32); the engine pads the tail batch,
+  * FP8 PTQ params (policy-driven) or BF16 baseline params — same engine,
+    so the §5.2 A/B is a one-flag switch,
+  * top-k candidate selection via RadixTopK (kernel) or lax.top_k
+    (XLA fallback; interpret-mode Pallas is too slow on CPU for benches).
+
+Generation: ``decode_len`` semantic-ID tokens per request (one item),
+greedy or top-k sampled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OneRecConfig
+from repro.core.policy import BASELINE_POLICY, PAPER_POLICY
+from repro.core.ptq import quantize_params
+from repro.models import onerec as onerec_model
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_size: int = 32
+    use_fp8: bool = True
+    topk: int = 8
+    use_radix_topk: bool = False   # Pallas kernel (TPU); lax.top_k otherwise
+    greedy: bool = True
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: OneRecConfig, engine_cfg: EngineConfig):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        policy = PAPER_POLICY if engine_cfg.use_fp8 else BASELINE_POLICY
+        self.params = quantize_params(params, policy)
+        self._build()
+        self.metrics: Dict[str, List[float]] = {"latency_s": [],
+                                                "batch_size": []}
+
+    # -- compiled phases ------------------------------------------------------
+
+    def _build(self):
+        cfg = self.cfg
+        B = self.ecfg.batch_size
+
+        if self.ecfg.use_radix_topk:
+            from repro.kernels.radix_topk import radix_topk
+            topk_fn = lambda logits, k: radix_topk(logits, k)
+        else:
+            topk_fn = lambda logits, k: jax.lax.top_k(logits, k)
+        self._topk_fn = topk_fn
+
+        @jax.jit
+        def prefill_fn(params, tokens, profile):
+            cache = onerec_model.init_cache(cfg, B)
+            logits, cache = onerec_model.prefill(
+                params, {"tokens": tokens, "profile": profile}, cfg, cache)
+            return logits, cache
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_fn(params, cache, tokens, index):
+            return onerec_model.decode_step(params, tokens, cfg, cache, index)
+
+        @jax.jit
+        def select_fn(logits):
+            vals, idx = topk_fn(logits, self.ecfg.topk)
+            return vals, idx
+
+        self._prefill = prefill_fn
+        self._decode = decode_fn
+        self._select = select_fn
+
+    # -- serving --------------------------------------------------------------
+
+    def generate_batch(self, tokens: np.ndarray, profile: np.ndarray
+                       ) -> np.ndarray:
+        """One fully-batched request: history tokens (B, H*3) -> item codes
+        (B, decode_len)."""
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        B, T = tokens.shape
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                      jnp.asarray(profile))
+        index = jnp.int32(T + 1)  # +1 profile prefix token
+        out = []
+        for _ in range(cfg.decode_len):
+            vals, idx = self._select(logits)
+            nxt = idx[:, :1].astype(jnp.int32)  # greedy = top-1 of top-k
+            out.append(nxt)
+            logits, cache = self._decode(self.params, cache, nxt, index)
+            index = index + 1
+        result = np.asarray(jnp.concatenate(out, axis=1))
+        jax.block_until_ready(result)
+        dt = time.perf_counter() - t0
+        self.metrics["latency_s"].append(dt)
+        self.metrics["batch_size"].append(B)
+        return result
+
+    def serve_requests(self, requests: List[Dict[str, np.ndarray]]
+                       ) -> Tuple[List[np.ndarray], Dict[str, float]]:
+        """Assemble requests into fixed-size batches (padding the tail)."""
+        B = self.ecfg.batch_size
+        outputs: List[np.ndarray] = []
+        t0 = time.perf_counter()
+        for i in range(0, len(requests), B):
+            chunk = requests[i:i + B]
+            n = len(chunk)
+            tokens = np.stack([r["tokens"] for r in chunk])
+            profile = np.stack([r["profile"] for r in chunk])
+            if n < B:  # pad tail batch
+                tokens = np.concatenate(
+                    [tokens, np.repeat(tokens[-1:], B - n, 0)])
+                profile = np.concatenate(
+                    [profile, np.repeat(profile[-1:], B - n, 0)])
+            out = self.generate_batch(tokens, profile)
+            outputs.extend(list(out[:n]))
+        wall = time.perf_counter() - t0
+        stats = {
+            "n_requests": float(len(requests)),
+            "wall_s": wall,
+            "throughput_rps": len(requests) / wall,
+            "mean_latency_s": float(np.mean(self.metrics["latency_s"])),
+            "p99_latency_s": float(np.percentile(
+                self.metrics["latency_s"], 99)),
+        }
+        return outputs, stats

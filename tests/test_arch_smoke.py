@@ -1,0 +1,44 @@
+"""Per-architecture smoke: reduced config, one step of every kind on CPU,
+shape + finiteness asserts. Covers all 10 assigned archs + the paper's
+OneRec-V2 (deliverable f)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import list_archs
+from repro.launch.steps import smoke_bundles
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch):
+    fp8 = arch != "egnn"  # FP8 inapplicable to EGNN (DESIGN.md §4)
+    for b in smoke_bundles(arch, fp8=fp8):
+        out = b.fn(*b.args)
+        first = out[0] if isinstance(out, tuple) else out
+        arr = np.asarray(jnp.asarray(first, jnp.float32))
+        assert np.all(np.isfinite(arr)), (arch, b.shape)
+        if b.kind == "train":
+            assert arr.shape == ()   # scalar loss
+            loss2 = b.fn(*b.args)[0] if isinstance(out, tuple) else out
+            # deterministic step
+            np.testing.assert_allclose(np.asarray(loss2), arr, rtol=1e-5)
+        elif b.kind in ("prefill", "decode"):
+            assert arr.ndim == 2     # (B, V) logits
+        elif b.kind in ("score", "retrieval"):
+            assert arr.ndim == 1     # (B,) / (N,) scores
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen2-moe-a2.7b", "egnn",
+                                  "din", "onerec-v2"])
+def test_full_configs_construct(arch):
+    """The FULL configs must at least build abstract step bundles
+    (allocation-free) for every non-skipped shape."""
+    from repro.configs.registry import get_arch
+    from repro.launch.steps import build_bundle
+    mod = get_arch(arch)
+    for name, shape in mod.SHAPES.items():
+        if shape.skip:
+            continue
+        b = build_bundle(arch, name, abstract=True)
+        assert b.args and b.arg_axes

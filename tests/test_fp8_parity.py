@@ -1,0 +1,72 @@
+"""FP8 vs BF16 output parity (the paper's Table-1 'no degradation' claim,
+offline version): quantized inference must agree with the high-precision
+baseline to within fp8 noise on every model family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core.policy import PAPER_POLICY
+from repro.core.ptq import quantize_params
+from repro.models import onerec as onerec_model
+from repro.models import recsys as recsys_model
+from repro.models import transformer as tfm
+
+
+def _cos(a, b):
+    a = np.asarray(a, np.float32).ravel()
+    b = np.asarray(b, np.float32).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+
+
+def test_lm_logits_parity():
+    cfg = get_arch("qwen2-moe-a2.7b").reduced_config()
+    params = tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, PAPER_POLICY)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    lg_bf, _ = tfm.forward(params, tokens, cfg)
+    lg_q, _ = tfm.forward(qparams, tokens, cfg)
+    assert _cos(lg_bf, lg_q) > 0.99
+    # greedy agreement on a RANDOM-INIT model is weak evidence (near-uniform
+    # logits flip argmax under any noise); the trained-model hit-rate parity
+    # test in test_system.py carries the paper's Table-1 claim.
+    agree = np.mean(np.argmax(np.asarray(lg_bf), -1)
+                    == np.argmax(np.asarray(lg_q), -1))
+    assert agree > 0.5
+
+
+def test_onerec_generation_parity():
+    cfg = get_arch("onerec-v2").reduced_config()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, PAPER_POLICY)
+    T = cfg.history_len * cfg.n_codebooks
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, T), 0,
+                                          cfg.vocab_size),
+             "profile": jax.random.normal(jax.random.PRNGKey(2),
+                                          (4, onerec_model.PROFILE_DIM))}
+    items_bf = np.asarray(onerec_model.generate_items(params, batch, cfg))
+    items_q = np.asarray(onerec_model.generate_items(qparams, batch, cfg))
+    agree = np.mean(items_bf == items_q)
+    assert agree > 0.7, f"generated-token agreement {agree}"
+
+
+def test_recsys_score_parity():
+    cfg = get_arch("din").reduced_config()
+    params = recsys_model.init_recsys(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, PAPER_POLICY)
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "hist_ids": jax.random.randint(key, (32, cfg.seq_len), 0, cfg.n_items),
+        "target_ids": jax.random.randint(key, (32,), 0, cfg.n_items),
+        "field_ids": jax.random.randint(key, (32, cfg.n_sparse_fields), 0,
+                                        cfg.field_vocab),
+    }
+    s_bf = recsys_model.score(params, batch, cfg)
+    s_q = recsys_model.score(qparams, batch, cfg)
+    assert _cos(s_bf, s_q) > 0.98
+    # ranking order largely preserved (pairwise concordance)
+    a, b = np.asarray(s_bf), np.asarray(s_q)
+    conc = np.mean((a[:, None] > a[None, :]) == (b[:, None] > b[None, :]))
+    assert conc > 0.92

@@ -1,0 +1,116 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import quantize_blockwise, quantize_per_channel
+from repro.kernels.batch_attention.ops import batch_attention
+from repro.kernels.batch_attention.ref import batch_attention_ref
+from repro.kernels.fp8_gemm.ops import fp8_gemm
+from repro.kernels.fp8_gemm.ref import fp8_gemm_ref
+from repro.kernels.fp8_grouped_gemm.ops import fp8_grouped_gemm
+from repro.kernels.fp8_grouped_gemm.ref import fp8_grouped_gemm_ref
+from repro.kernels.radix_topk.ops import radix_topk
+from repro.kernels.radix_topk.ref import topk_ref
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 128), (256, 512, 384),
+                                   (8, 128, 256), (64, 1024, 128)])
+@pytest.mark.parametrize("xdtype", [jnp.bfloat16, jnp.float32])
+def test_fp8_gemm_sweep(M, K, N, xdtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), xdtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    wq = quantize_per_channel(w)
+    out_k = np.asarray(fp8_gemm(x, wq), np.float32)
+    out_r = np.asarray(fp8_gemm_ref(x, wq.data, wq.scale.reshape(1, -1)),
+                       np.float32)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-2,
+                               atol=2e-2 * np.abs(out_r).max())
+
+
+def test_fp8_gemm_batched_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 128), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+    out = fp8_gemm(x, quantize_per_channel(w))
+    assert out.shape == (2, 8, 64)
+
+
+@pytest.mark.parametrize("E,C,K,N", [(2, 64, 128, 128), (4, 128, 256, 384),
+                                     (1, 256, 512, 128)])
+def test_fp8_grouped_gemm_sweep(E, C, K, N):
+    x = jax.random.normal(jax.random.PRNGKey(0), (E, C, K), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (E, K, N)) * 0.7
+    wq = quantize_blockwise(w)
+    out_k = np.asarray(fp8_grouped_gemm(x, wq), np.float32)
+    out_r = np.asarray(fp8_grouped_gemm_ref(x, wq.data, wq.scale), np.float32)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-2,
+                               atol=2e-2 * np.abs(out_r).max())
+
+
+@pytest.mark.parametrize("B,V,k", [(4, 1024, 8), (8, 4000, 16), (2, 257, 4),
+                                   (16, 8192, 64)])
+def test_radix_topk_sweep(B, V, k):
+    x = jax.random.normal(jax.random.PRNGKey(B + V), (B, V)) * 7
+    v1, i1 = radix_topk(x, k)
+    v2, i2 = topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=0, atol=0)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_radix_topk_ties_and_negatives():
+    x = jnp.array([[5.0, -1.0, 5.0, 5.0, 2.0, -3.0, 2.0, 0.0]])
+    v1, i1 = radix_topk(x, 5)
+    v2, i2 = topk_ref(x, 5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    xn = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (3, 513)))
+    v1, _ = radix_topk(xn, 7)
+    v2, _ = topk_ref(xn, 7)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+
+
+@pytest.mark.parametrize("B,T,H,Kv,hd,S,window", [
+    (4, 1, 8, 2, 64, 256, 0),       # GQA decode
+    (2, 1, 4, 4, 32, 512, 0),       # MHA decode
+    (2, 64, 8, 2, 64, 64, 0),       # short prefill
+    (2, 1, 4, 1, 64, 512, 64),      # windowed decode
+])
+def test_batch_attention_sweep(B, T, H, Kv, hd, S, window):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, hd), jnp.bfloat16)
+    if T == 1:
+        q_pos = jnp.full((B, 1), S // 2, jnp.int32)
+    else:
+        q_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out_k = batch_attention(q, k, v, q_pos, k_pos, window=window,
+                            block_s=128)
+    G = H // Kv
+    qr = q.reshape(B, T, Kv, G, hd).transpose(0, 2, 3, 1, 4)
+    out_r = batch_attention_ref(qr, k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), q_pos, k_pos,
+                                scale=1 / np.sqrt(hd), window=window)
+    out_r = out_r.transpose(0, 3, 1, 2, 4).reshape(B, T, H * hd)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=0.05)
+
+
+def test_batch_attention_ring_buffer_mask():
+    """Empty slots (pos = -1) must not contribute."""
+    B, S, Kv, hd = 2, 128, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, 4, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, hd), jnp.bfloat16)
+    kp = jnp.where(jnp.arange(S) % 2 == 0, -1, jnp.arange(S)).astype(jnp.int32)
+    k_pos = jnp.broadcast_to(kp[None], (B, S))
+    q_pos = jnp.full((B, 1), S, jnp.int32)
+    out = batch_attention(q, k, v, q_pos, k_pos, block_s=64)
+    # zeroing the masked slots must not change the result
+    mask = (kp >= 0).astype(k.dtype)[None, :, None, None]
+    out2 = batch_attention(q, k * mask, v * mask, q_pos, k_pos, block_s=64)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out2, np.float32), atol=0.02)

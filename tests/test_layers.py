@@ -1,0 +1,216 @@
+"""Layer-level invariants: MoE dispatch, embedding bag, attention cache."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import moe as moe_lib
+from repro.layers.embedding import embedding_bag, init_embedding, multi_hot_bag
+from repro.layers.mlp import ACTIVATIONS
+from repro.configs.base import TransformerConfig
+from repro.models import transformer as tfm
+
+
+def test_moe_matches_dense_reference():
+    """Capacity-unconstrained MoE == explicit per-token expert sum."""
+    spec = moe_lib.make_moe_spec(4, 2, 32, 64, capacity_factor=64.0,
+                                 ep_degree=4)
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    out = moe_lib.apply_moe(params, x, spec)
+
+    # dense reference: every token through every chosen expert
+    xt = np.asarray(x.reshape(-1, 32), np.float32)
+    topv, topi = moe_lib._route(params["router"]["kernel"],
+                                jnp.asarray(xt), spec)
+    topv, topi = np.asarray(topv), np.asarray(topi)
+    g = np.asarray(params["experts"]["gate"], np.float32)
+    u = np.asarray(params["experts"]["up"], np.float32)
+    d = np.asarray(params["experts"]["down"], np.float32)
+    act = lambda z: z / (1 + np.exp(-z))
+    ref = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        for j in range(spec.top_k):
+            e = topi[t, j]
+            h = act(xt[t] @ g[e]) * (xt[t] @ u[e])
+            ref[t] += topv[t, j] * (h @ d[e])
+    out_f = np.asarray(out.reshape(-1, 32), np.float32)
+    np.testing.assert_allclose(out_f, ref, rtol=0.1,
+                               atol=0.05 * np.abs(ref).max())
+
+
+def test_moe_capacity_drops_monotone():
+    """Tiny capacity must drop tokens (output norm shrinks), never NaN."""
+    spec_big = moe_lib.make_moe_spec(4, 2, 16, 32, capacity_factor=64.0,
+                                     ep_degree=4)
+    spec_small = spec_big._replace(capacity_factor=0.05)
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), spec_big)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 16))
+    out_big = moe_lib.apply_moe(params, x, spec_big)
+    out_small = moe_lib.apply_moe(params, x, spec_small)
+    assert np.all(np.isfinite(np.asarray(out_small, np.float32)))
+    assert np.linalg.norm(np.asarray(out_small, np.float32)) < \
+        np.linalg.norm(np.asarray(out_big, np.float32))
+
+
+def test_moe_padded_experts_never_selected():
+    spec = moe_lib.make_moe_spec(3, 2, 16, 32, ep_degree=4)  # pad 3 -> 4
+    assert spec.n_experts_padded == 4
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    _, topi = moe_lib._route(params["router"]["kernel"], x, spec)
+    assert int(np.asarray(topi).max()) < 3
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(st.integers(2, 30), st.integers(2, 10),
+                  st.sampled_from(["sum", "mean", "max"]))
+def test_embedding_bag_vs_onehot_oracle(nnz, n_bags, mode):
+    key = jax.random.PRNGKey(nnz * 31 + n_bags)
+    vocab, dim = 17, 8
+    params = init_embedding(key, vocab, dim)
+    ids = jax.random.randint(key, (nnz,), 0, vocab)
+    seg = jnp.sort(jax.random.randint(key, (nnz,), 0, n_bags))
+    out = np.asarray(embedding_bag(params, ids, seg, n_bags=n_bags,
+                                   mode=mode), np.float32)
+    table = np.asarray(params["table"], np.float32)
+    ref = np.zeros((n_bags, dim), np.float32)
+    for b in range(n_bags):
+        rows = table[np.asarray(ids)[np.asarray(seg) == b]]
+        if len(rows) == 0:
+            continue
+        if mode == "sum":
+            ref[b] = rows.sum(0)
+        elif mode == "mean":
+            ref[b] = rows.mean(0)
+        else:
+            ref[b] = rows.max(0)
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-2)
+
+
+def test_multi_hot_bag_padding():
+    params = init_embedding(jax.random.PRNGKey(0), 10, 4)
+    ids = jnp.array([[1, 2, 0], [3, 0, 0]])  # 0 = pad
+    out = np.asarray(multi_hot_bag(params, ids, mode="sum"), np.float32)
+    table = np.asarray(params["table"], np.float32)
+    np.testing.assert_allclose(out[0], table[1] + table[2], rtol=2e-2,
+                               atol=1e-2)
+    np.testing.assert_allclose(out[1], table[3], rtol=2e-2, atol=1e-2)
+
+
+def test_decode_matches_full_forward():
+    """Token-by-token decode == teacher-forced forward (greedy parity)."""
+    cfg = TransformerConfig(
+        name="t", n_layers=3, d_model=48, n_heads=4, n_kv_heads=2,
+        head_dim=12, d_ff=96, vocab_size=128, max_seq_len=32, remat=False,
+        sliding_window=8, global_interval=3)
+    params = tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128)
+    full_logits, _ = tfm.forward(params, tokens, cfg)
+
+    cache = tfm.init_kv_cache(cfg, 2, 32)
+    lg, cache = tfm.prefill(params, tokens[:, :6], cfg, cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full_logits[:, 5]),
+                               rtol=5e-2, atol=5e-2)
+    for t in range(6, 12):
+        lg, cache = tfm.decode_step(params, tokens[:, t:t + 1], cfg, cache,
+                                    jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]),
+            rtol=5e-2, atol=5e-2)
+
+
+def test_attention_kernel_integration():
+    """cfg.use_attention_kernel routes decode through the Pallas kernel;
+    results must match the XLA decode path."""
+    import dataclasses
+    cfg = TransformerConfig(
+        name="k", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=128, max_seq_len=64, remat=False)
+    cfgk = dataclasses.replace(cfg, use_attention_kernel=True)
+    params = tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128)
+
+    def run(c):
+        cache = tfm.init_kv_cache(c, 2, 16)
+        lg, cache = tfm.prefill(params, tokens[:, :8], c, cache)
+        outs = [np.asarray(lg)]
+        for t in range(8, 12):
+            lg, cache = tfm.decode_step(params, tokens[:, t:t + 1], c,
+                                        cache, jnp.int32(t))
+            outs.append(np.asarray(lg))
+        return np.stack(outs)
+
+    np.testing.assert_allclose(run(cfg), run(cfgk), atol=0.05)
+
+
+def test_activation_calibration():
+    """EMA-of-amax calibration (optional static-scale mode)."""
+    from repro.core.ptq import calibrate_activation_scales
+    from repro.core.quant import FP8_MAX, E4M3
+
+    def apply_fn(params, batch):
+        h = batch @ params["w"]
+        return h, {"hidden": h}
+
+    params = {"w": jnp.eye(4) * 2.0}
+    batches = [jnp.full((2, 4), float(i + 1)) for i in range(5)]
+    scales = calibrate_activation_scales(apply_fn, params, batches,
+                                         momentum=0.5)
+    assert "hidden" in scales
+    # the EMA of amax(2,4,6,8,10) with m=.5 -> scale = ema/448
+    assert 6.0 / FP8_MAX[E4M3] < float(scales["hidden"]) <= 10.0 / 448.0
+
+
+def test_fp8_kv_cache_parity():
+    """Beyond-paper FP8 KV cache: decode logits must track the bf16 cache."""
+    import dataclasses
+    cfg = TransformerConfig(
+        name="kv8", n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        head_dim=12, d_ff=96, vocab_size=128, max_seq_len=32, remat=False)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="float8_e4m3fn")
+    params = tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 128)
+
+    def run(c):
+        cache = tfm.init_kv_cache(c, 2, 16)
+        lg, cache = tfm.prefill(params, tokens[:, :6], c, cache)
+        outs = [lg]
+        for t in range(6, 10):
+            lg, cache = tfm.decode_step(params, tokens[:, t:t + 1], c,
+                                        cache, jnp.int32(t))
+            outs.append(lg)
+        return np.stack([np.asarray(o) for o in outs])
+
+    bf16 = run(cfg)
+    fp8 = run(cfg8)
+    assert tfm.init_kv_cache(cfg8, 2, 16)["stacks"]["0"]["p0"]["k"].dtype \
+        == jnp.float8_e4m3fn
+    cos = np.sum(bf16 * fp8) / (np.linalg.norm(bf16) * np.linalg.norm(fp8))
+    assert cos > 0.98, cos
+    agree = np.mean(np.argmax(bf16, -1) == np.argmax(fp8, -1))
+    assert agree > 0.5
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Decoding past the window length must match a full forward."""
+    cfg = TransformerConfig(
+        name="w", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+        head_dim=16, d_ff=64, vocab_size=64, max_seq_len=64, remat=False,
+        sliding_window=4)
+    params = tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+    T = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0, 64)
+    full_logits, _ = tfm.forward(params, tokens, cfg)
+    cache = tfm.init_kv_cache(cfg, 1, T)   # window < T => ring buffer len 4
+    assert cache["stacks"]["0"]["p0"]["k"].shape[2] == 4
+    lg, cache = tfm.prefill(params, tokens[:, :8], cfg, cache)
+    for t in range(8, T):
+        lg, cache = tfm.decode_step(params, tokens[:, t:t + 1], cfg, cache,
+                                    jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]),
+            rtol=6e-2, atol=6e-2)

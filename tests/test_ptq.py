@@ -1,0 +1,77 @@
+"""PTQ pass + policy tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BASELINE_POLICY, PAPER_POLICY, QuantizedTensor,
+                        dequantize_params, is_quantized, quantize_params)
+
+
+def _fake_params(key=jax.random.PRNGKey(0)):
+    return {
+        "embed": {"table": jax.random.normal(key, (64, 16))},
+        "stacks": {"0": {"p0": {
+            "attn": {"q_proj": {"kernel": jax.random.normal(key, (2, 16, 32))},
+                     "o_proj": {"kernel": jax.random.normal(key, (2, 32, 16))}},
+            "attn_norm": {"scale": jnp.ones((2, 16))},
+            "moe": {
+                "router": {"kernel": jax.random.normal(key, (2, 16, 4))},
+                "experts": {"gate": jax.random.normal(key, (2, 4, 128, 128)),
+                            "up": jax.random.normal(key, (2, 4, 128, 128)),
+                            "down": jax.random.normal(key, (2, 4, 128, 128))},
+                "shared": {"gate": {"kernel": jax.random.normal(key, (2, 16, 32))},
+                           "up": {"kernel": jax.random.normal(key, (2, 16, 32))},
+                           "down": {"kernel": jax.random.normal(key, (2, 32, 16))}},
+            },
+        }}},
+        "lm_head": {"kernel": jax.random.normal(key, (16, 64))},
+    }
+
+
+def test_policy_coverage():
+    qp, rep = quantize_params(_fake_params(), PAPER_POLICY, with_report=True)
+    l0 = qp["stacks"]["0"]["p0"]
+    # quantized: qkvo, MoE experts (block), shared experts
+    assert is_quantized(l0["attn"]["q_proj"]["kernel"])
+    assert is_quantized(l0["attn"]["o_proj"]["kernel"])
+    assert l0["moe"]["experts"]["gate"].granularity == "block"
+    assert is_quantized(l0["moe"]["shared"]["gate"]["kernel"])
+    # NOT quantized: embeddings, norms, router, lm_head
+    assert not is_quantized(qp["embed"]["table"])
+    assert not is_quantized(qp["lm_head"]["kernel"])
+    assert not is_quantized(l0["attn_norm"]["scale"])
+    assert not is_quantized(l0["moe"]["router"]["kernel"])
+    # q, o, 3 grouped expert kernels, 3 shared-expert kernels
+    assert rep.n_quantized == 8
+    assert rep.bytes_after < 0.3 * rep.bytes_before
+
+
+def test_baseline_policy_noop():
+    params = _fake_params()
+    qp = quantize_params(params, BASELINE_POLICY)
+    assert not any(isinstance(l, QuantizedTensor)
+                   for l in jax.tree_util.tree_leaves(
+                       qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+
+
+def test_dequantize_roundtrip_structure():
+    params = _fake_params()
+    qp = quantize_params(params, PAPER_POLICY)
+    dq = dequantize_params(qp, jnp.float32)
+    assert jax.tree_util.tree_structure(dq) == \
+        jax.tree_util.tree_structure(params)
+    # dequantized weights close to originals
+    a = np.asarray(dq["stacks"]["0"]["p0"]["attn"]["q_proj"]["kernel"])
+    b = np.asarray(params["stacks"]["0"]["p0"]["attn"]["q_proj"]["kernel"])
+    assert np.linalg.norm(a - b) / np.linalg.norm(b) < 0.04
+
+
+def test_quantize_params_traceable():
+    """PTQ must be jax-traceable (eval_shape'd by the dry-run)."""
+    shapes = jax.eval_shape(lambda: quantize_params(_fake_params(),
+                                                    PAPER_POLICY))
+    q = shapes["stacks"]["0"]["p0"]["moe"]["experts"]["gate"]
+    assert q.data.shape == (2, 4, 128, 128)
+    assert q.data.dtype == jnp.float8_e4m3fn
+    assert q.scale.shape == (2, 4, 1, 1)
