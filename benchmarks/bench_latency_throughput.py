@@ -1,15 +1,22 @@
-"""Paper §5.2: end-to-end serving latency + throughput, FP16(BF16) baseline
-vs the optimized FP8 stack.
+"""Paper §5.2: end-to-end serving latency + throughput.
 
-Two measurements:
-  1. CPU wall-clock on the reduced OneRec-V2 (real execution of the full
-     engine; CPU has no fp8 compute units, so the quantization win does NOT
-     show in wall time — the number that matters on CPU is that the fp8
-     path is correct and the engine overheads are identical),
-  2. the TPU-v5e projection from the dry-run artifacts: serve latency =
+Three measurements:
+  1. FP16(BF16) baseline vs the optimized FP8 stack on the uniform batch-32
+     style workload (CPU wall-clock, reduced OneRec-V2; CPU has no fp8
+     compute units so the quantization win does NOT show in wall time — the
+     number that matters on CPU is that the fp8 path is correct and the
+     engine overheads are identical),
+  2. scheduler A/B on a RAGGED workload (mixed history lengths, request
+     count not a multiple of the batch): continuous slot-based batching vs
+     the fixed-batch reference — per-request p50/p99 latency and
+     slot-occupancy utilization, the serving-infrastructure half of the
+     paper's headline gain,
+  3. the TPU-v5e projection from the dry-run artifacts: serve latency =
      dominant roofline term of (prefill + decode_len x decode) for the FULL
-     4B/0.5B model at batch 32, bf16 vs fp8 — this is the §5.2 analogue
+     4B/0.5B model at batch 32, bf16 vs fp8 — the §5.2 analogue
      (the paper: 139 ms -> 70 ms, throughput 205 -> 394).
+
+Results are also written to ``results/bench_latency_throughput.json``.
 """
 
 from __future__ import annotations
@@ -22,40 +29,62 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 
 import jax  # noqa: E402
-import numpy as np  # noqa: E402
 
-from benchmarks.analytic import cell_memory_bytes, cell_analytics  # noqa: E402
+from benchmarks.analytic import cell_analytics  # noqa: E402
 from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 from repro.configs import registry  # noqa: E402
-from repro.data.onerec_data import (OneRecStreamConfig,  # noqa: E402
-                                    SemanticIDStream)
+from repro.configs.base import OneRecConfig, TransformerConfig  # noqa: E402
+from repro.launch.serve import build_requests  # noqa: E402
 from repro.models import onerec as onerec_model  # noqa: E402
 from repro.serving import EngineConfig, ServingEngine  # noqa: E402
 
+JSON_OUT = "results/bench_latency_throughput.json"
+
 
 def measured_cpu(n_requests: int = 32, batch: int = 8):
+    """bf16 vs fp8 on the uniform workload (fixed mode, paper batch setting)."""
     cfg = registry.get_arch("onerec-v2").reduced_config()
     params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
-    stream = SemanticIDStream(OneRecStreamConfig(
-        codebook_size=cfg.transformer.vocab_size - 64,
-        history_len=cfg.history_len, global_batch=batch))
-    requests = []
-    step = 0
-    while len(requests) < n_requests:
-        r = stream.serve_request_at(step)
-        requests += [{"tokens": r["tokens"][i], "profile": r["profile"][i]}
-                     for i in range(r["tokens"].shape[0])]
-        step += 1
-    requests = requests[:n_requests]
-
+    requests = build_requests(cfg, n_requests, batch, seed=0, ragged=False)
     out = {}
     for name, fp8 in (("bf16", False), ("fp8", True)):
-        eng = ServingEngine(params, cfg, EngineConfig(batch_size=batch,
-                                                      use_fp8=fp8))
+        eng = ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, use_fp8=fp8, mode="fixed"))
         eng.serve_requests(requests[:batch])  # warmup/compile
-        eng.metrics["latency_s"].clear()
         _, stats = eng.serve_requests(requests)
         out[name] = stats
+    return out
+
+
+def _bench_cfg() -> OneRecConfig:
+    """Scheduler-A/B config: reduced-family backbone but long enough ragged
+    histories (24..192 tokens) that prefill compute dominates dispatch."""
+    return OneRecConfig(
+        name="onerec-v2-bench",
+        history_len=64,
+        transformer=TransformerConfig(
+            name="onerec-v2-bench-backbone",
+            n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, head_dim=16,
+            d_ff=256, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=128, capacity_factor=1.5, ep_degree=4,
+            max_seq_len=256, remat=False),
+        serve_batch=8, beam_width=4)
+
+
+def measured_scheduler_ab(n_requests: int = 30, batch: int = 8):
+    """Continuous slot-based batching vs fixed-batch reference, fp8 stack,
+    ragged arrivals (mixed history lengths, n not a multiple of batch)."""
+    assert n_requests % batch != 0, "ragged workload must leave a tail batch"
+    cfg = _bench_cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    requests = build_requests(cfg, n_requests, batch, seed=0, ragged=True)
+    out = {}
+    for mode in ("continuous", "fixed"):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, use_fp8=True, mode=mode))
+        eng.serve_requests(requests)          # warmup/compile
+        _, stats = eng.serve_requests(requests)
+        out[mode] = stats
     return out
 
 
@@ -98,20 +127,47 @@ def projected_tpu(dryrun_dir="results/dryrun",
 
 def run() -> list:
     rows = []
+    report = {}
+
     cpu = measured_cpu()
+    report["fp8_ab_uniform"] = cpu
     m_bf, m_f8 = cpu["bf16"], cpu["fp8"]
-    print(f"\n[CPU wall, reduced model] bf16: "
-          f"{m_bf['mean_latency_s']*1e3:.1f} ms/batch, "
+    print(f"\n[CPU wall, reduced model, fixed batch] bf16: "
+          f"{m_bf['mean_latency_s']*1e3:.1f} ms/req, "
           f"{m_bf['throughput_rps']:.1f} req/s | fp8: "
-          f"{m_f8['mean_latency_s']*1e3:.1f} ms/batch, "
+          f"{m_f8['mean_latency_s']*1e3:.1f} ms/req, "
           f"{m_f8['throughput_rps']:.1f} req/s "
           f"(CPU executes fp8 via emulation — no wall-time win expected)")
     rows.append(f"serve_cpu/bf16_latency,"
                 f"{m_bf['mean_latency_s']*1e6:.0f},")
     rows.append(f"serve_cpu/fp8_latency,{m_f8['mean_latency_s']*1e6:.0f},")
 
+    ab = measured_scheduler_ab()
+    report["scheduler_ab_ragged"] = ab
+    c, f = ab["continuous"], ab["fixed"]
+    print(f"[scheduler A/B, ragged histories, fp8] "
+          f"fixed: {f['throughput_rps']:.1f} req/s, "
+          f"mean {f['mean_latency_s']*1e3:.0f} ms, "
+          f"p50 {f['p50_latency_s']*1e3:.0f} ms, "
+          f"p99 {f['p99_latency_s']*1e3:.0f} ms | "
+          f"continuous: {c['throughput_rps']:.1f} req/s, "
+          f"mean {c['mean_latency_s']*1e3:.0f} ms, "
+          f"p50 {c['p50_latency_s']*1e3:.0f} ms, "
+          f"p99 {c['p99_latency_s']*1e3:.0f} ms | "
+          f"occupancy {c['slot_occupancy']:.2f} | "
+          f"throughput +{100*(c['throughput_rps']/f['throughput_rps']-1):.0f}% "
+          f"latency {100*(c['mean_latency_s']/f['mean_latency_s']-1):+.0f}%")
+    rows.append(f"serve_sched/fixed_mean_latency,"
+                f"{f['mean_latency_s']*1e6:.0f},")
+    rows.append(f"serve_sched/continuous_mean_latency,"
+                f"{c['mean_latency_s']*1e6:.0f},"
+                f"x{f['mean_latency_s']/c['mean_latency_s']:.2f}")
+    rows.append(f"serve_sched/continuous_throughput_gain,0,"
+                f"{c['throughput_rps']/f['throughput_rps']:.2f}x")
+
     proj = projected_tpu()
     if proj:
+        report["tpu_projection"] = proj
         lb, lf = proj["bf16"]["latency_s"], proj["fp8"]["latency_s"]
         tb = proj["bf16"]["throughput_rps"]
         tf = proj["fp8"]["throughput_rps"]
@@ -127,6 +183,11 @@ def run() -> list:
     else:
         print("[TPU projection] dry-run artifacts missing; run "
               "repro.launch.dryrun first")
+
+    os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
+    with open(JSON_OUT, "w") as fh:
+        json.dump(report, fh, indent=1)
+    print(f"[bench] wrote {JSON_OUT}")
     return rows
 
 

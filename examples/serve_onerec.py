@@ -1,7 +1,9 @@
-"""Serving example: batched request serving through the optimized FP8 stack
-(§5.2 setting — batch-32 short-context generative recommendation).
+"""Serving example: continuous-batching request serving through the
+optimized FP8 stack (§5.2 setting — short-context generative
+recommendation with a slot-based KV cache; pass ``--mode fixed`` for the
+paper's padded fixed-batch measurement mode).
 
-    PYTHONPATH=src python examples/serve_onerec.py --requests 96
+    PYTHONPATH=src python examples/serve_onerec.py --requests 96 --ragged
 """
 
 import argparse
@@ -9,7 +11,7 @@ import argparse
 import jax
 
 from repro.configs.registry import get_arch
-from repro.data.onerec_data import OneRecStreamConfig, SemanticIDStream
+from repro.launch.serve import build_requests
 from repro.models import onerec
 from repro.serving import EngineConfig, ServingEngine
 
@@ -18,31 +20,29 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=0)
+    ap.add_argument("--mode", choices=("continuous", "fixed"),
+                    default="continuous")
+    ap.add_argument("--ragged", action="store_true")
     ap.add_argument("--no-fp8", dest="fp8", action="store_false",
                     default=True)
     args = ap.parse_args()
 
     cfg = get_arch("onerec-v2").reduced_config()
     params = onerec.init_onerec(jax.random.PRNGKey(0), cfg)
-    stream = SemanticIDStream(OneRecStreamConfig(
-        codebook_size=cfg.transformer.vocab_size - 64,
-        history_len=cfg.history_len, global_batch=args.batch))
+    requests = build_requests(cfg, args.requests, args.batch, seed=0,
+                              ragged=args.ragged)
 
-    requests = []
-    step = 0
-    while len(requests) < args.requests:
-        r = stream.serve_request_at(step)
-        requests += [{"tokens": r["tokens"][i], "profile": r["profile"][i]}
-                     for i in range(r["tokens"].shape[0])]
-        step += 1
-
-    engine = ServingEngine(params, cfg, EngineConfig(batch_size=args.batch,
-                                                     use_fp8=args.fp8))
-    outs, stats = engine.serve_requests(requests[:args.requests])
-    print(f"fp8={args.fp8} served {len(outs)} requests | "
-          f"mean latency {stats['mean_latency_s']*1e3:.1f} ms/batch | "
+    engine = ServingEngine(params, cfg, EngineConfig(
+        batch_size=args.batch, use_fp8=args.fp8, mode=args.mode,
+        n_slots=args.slots))
+    outs, stats = engine.serve_requests(requests)
+    print(f"mode={args.mode} fp8={args.fp8} served {len(outs)} requests | "
+          f"per-request mean {stats['mean_latency_s']*1e3:.1f} ms | "
+          f"p50 {stats['p50_latency_s']*1e3:.1f} ms | "
           f"p99 {stats['p99_latency_s']*1e3:.1f} ms | "
-          f"{stats['throughput_rps']:.1f} req/s")
+          f"{stats['throughput_rps']:.1f} req/s | "
+          f"slot occupancy {stats['slot_occupancy']:.2f}")
     print("sample recommendation (semantic-ID codes):", outs[0])
 
 

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Fast CI gate: full-suite collection + the tier-1 (fast) subset.
+#
+# tier1 == everything not marked `slow` (the arch-zoo smoke, dry-run
+# subprocess, and trained system-parity tests take minutes; the fast subset
+# runs in ~2 minutes).  Run the full suite before merging:
+#   PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[check] collection (all tests must import everywhere)"
+python -m pytest -q --collect-only >/dev/null
+
+echo "[check] tier-1 fast subset"
+python -m pytest -q -m "not slow" "$@"

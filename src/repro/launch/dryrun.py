@@ -211,6 +211,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
         n_dev = mesh.size
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         mem = compiled.memory_analysis()
         mem_d = {}
         for attr in ("argument_size_in_bytes", "output_size_in_bytes",

@@ -1,7 +1,8 @@
-"""Serving launcher: OneRec-V2 generation with the optimized FP8 stack.
+"""Serving launcher: OneRec-V2 generation with the optimized FP8 stack and
+the continuous-batching slot engine.
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 64 \
-      [--no-fp8]
+      [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged]
 """
 
 from __future__ import annotations
@@ -17,6 +18,26 @@ from repro.models import onerec as onerec_model
 from repro.serving import EngineConfig, ServingEngine
 
 
+def build_requests(cfg, n_requests: int, batch: int, seed: int,
+                   ragged: bool):
+    stream = SemanticIDStream(OneRecStreamConfig(
+        codebook_size=cfg.transformer.vocab_size - 64,
+        history_len=cfg.history_len, global_batch=batch, seed=seed))
+    rng = np.random.default_rng(seed)
+    requests = []
+    step = 0
+    while len(requests) < n_requests:
+        r = stream.serve_request_at(step)
+        for i in range(r["tokens"].shape[0]):
+            tokens = r["tokens"][i]
+            if ragged:  # mixed history lengths: truncate to a random prefix
+                n_items = int(rng.integers(2, cfg.history_len + 1))
+                tokens = tokens[:n_items * cfg.n_codebooks]
+            requests.append({"tokens": tokens, "profile": r["profile"][i]})
+        step += 1
+    return requests[:n_requests]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true")
@@ -24,6 +45,12 @@ def main():
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--no-fp8", dest="fp8", action="store_false",
                     default=True)
+    ap.add_argument("--mode", choices=("continuous", "fixed"),
+                    default="continuous")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="KV-slot pool size (0 => batch size)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="mixed history lengths")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -31,24 +58,19 @@ def main():
     cfg = mod.reduced_config() if args.reduced else mod.CONFIG
     batch = args.batch or cfg.serve_batch
     params = onerec_model.init_onerec(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServingEngine(params, cfg,
-                           EngineConfig(batch_size=batch, use_fp8=args.fp8))
-    stream = SemanticIDStream(OneRecStreamConfig(
-        codebook_size=cfg.transformer.vocab_size - 64,
-        history_len=cfg.history_len, global_batch=batch, seed=args.seed))
-    requests = []
-    step = 0
-    while len(requests) < args.requests:
-        r = stream.serve_request_at(step)
-        for i in range(r["tokens"].shape[0]):
-            requests.append({"tokens": r["tokens"][i],
-                             "profile": r["profile"][i]})
-        step += 1
-    requests = requests[:args.requests]
+    engine = ServingEngine(params, cfg, EngineConfig(
+        batch_size=batch, use_fp8=args.fp8, mode=args.mode,
+        n_slots=args.slots))
+    requests = build_requests(cfg, args.requests, batch, args.seed,
+                              args.ragged)
     outs, stats = engine.serve_requests(requests)
-    print(f"[serve] fp8={args.fp8} requests={len(requests)} "
-          f"mean_latency={stats['mean_latency_s']*1e3:.1f}ms "
-          f"p99={stats['p99_latency_s']*1e3:.1f}ms "
+    print(f"[serve] mode={args.mode} fp8={args.fp8} "
+          f"requests={len(requests)} slots={int(stats['n_slots'])} "
+          f"occupancy={stats['slot_occupancy']:.2f}")
+    print(f"[serve] per-request latency: "
+          f"mean={stats['mean_latency_s']*1e3:.1f}ms "
+          f"p50={stats['p50_latency_s']*1e3:.1f}ms "
+          f"p99={stats['p99_latency_s']*1e3:.1f}ms | "
           f"throughput={stats['throughput_rps']:.1f} req/s")
 
 

@@ -75,12 +75,23 @@ def init_attention(key, d_model: int, spec: AttnSpec, *,
 
 
 def init_cache(batch: int, cache_len: int, spec: AttnSpec, *,
-               stack: Tuple[int, ...] = (), dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
-    """Cache slots: k/v (..., B, S, Kv, hd) + pos (..., S) with -1 = empty."""
+               stack: Tuple[int, ...] = (), dtype=jnp.bfloat16,
+               per_slot: bool = False) -> Dict[str, jax.Array]:
+    """Cache slots: k/v (..., B, S, Kv, hd) + pos with -1 = empty.
+
+    ``per_slot=False``: one shared ``pos`` (..., S) — every batch row is at
+    the same decode depth (the classic lock-step cache).
+
+    ``per_slot=True``: ``pos`` is (..., B, S) — each batch row ("slot") keeps
+    its own occupancy, so requests at different sequence lengths / decode
+    depths coexist in one batch.  This is the layout the continuous-batching
+    serving engine uses.
+    """
+    pos_shape = (*stack, batch, cache_len) if per_slot else (*stack, cache_len)
     return {
         "k": jnp.zeros((*stack, batch, cache_len, spec.n_kv_heads, spec.head_dim), dtype),
         "v": jnp.zeros((*stack, batch, cache_len, spec.n_kv_heads, spec.head_dim), dtype),
-        "pos": jnp.full((*stack, cache_len), -1, jnp.int32),
+        "pos": jnp.full(pos_shape, -1, jnp.int32),
     }
 
 
@@ -177,6 +188,7 @@ def apply_attention(
     cache: Optional[Dict[str, jax.Array]] = None,
     cache_index: Optional[jax.Array] = None,
     fill_cache: bool = False,
+    lengths: Optional[jax.Array] = None,
     norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """One attention layer.
@@ -187,11 +199,23 @@ def apply_attention(
         writes the (window-truncated) K/V into the cache.
       * ``cache, fill_cache=False``   — decode: ``x`` is (B, 1, D),
         ``cache_index`` is the absolute position of the new token.
+
+    Per-slot caches (``pos`` carries a batch axis, see ``init_cache``) use the
+    length-masked path: ``lengths`` (B,) gives each row's true sequence
+    length.  On prefill the input is right-padded to a common T and positions
+    ``>= lengths[i]`` are stored masked-out; on decode ``lengths[i]`` is the
+    absolute index the new token is written at, and attention covers only
+    that row's own prefix — slots at different decode depths coexist in one
+    batch.  Per-slot caches assume full (non-windowed) attention with
+    ``cache_len >= T``.
     """
     B, T, _ = x.shape
     H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
     if positions is None:
-        positions = jnp.arange(T, dtype=jnp.int32)
+        if cache is not None and not fill_cache and lengths is not None:
+            positions = lengths[:, None].astype(jnp.int32)  # per-slot rope
+        else:
+            positions = jnp.arange(T, dtype=jnp.int32)
 
     q = matmul_any(x, params["q_proj"]["kernel"]).reshape(B, T, H, hd)
     k = matmul_any(x, params["k_proj"]["kernel"]).reshape(B, T, K, hd)
@@ -211,38 +235,72 @@ def apply_attention(
     if cache is not None and not fill_cache:
         # ---- decode: write the new token, attend over the cache ----
         S = cache["k"].shape[1]
-        idx = cache_index if cache_index is not None else jnp.int32(0)
-        slot = idx % S  # ring buffer for windowed layers; linear otherwise
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cache["pos"], idx[None].astype(jnp.int32), (slot,))
-        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        per_slot = cache["pos"].ndim == 2
+        if per_slot:
+            # length-masked decode: each slot holds its own sequence; the
+            # new token lands at that row's absolute index ``lengths[i]``.
+            idx = (lengths if lengths is not None else cache_index)
+            idx = idx.astype(jnp.int32)
+            rows = jnp.arange(B)
+            slot = idx % S
+            ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+            cpos = cache["pos"].at[rows, slot].set(idx)
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
 
-        ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
-        cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
-        if ck.dtype != q.dtype:  # low-precision (fp8) KV cache: upcast reads
-            ck = ck.astype(q.dtype)
-            cv = cv.astype(q.dtype)
-        if spec.use_kernel:
-            # the paper's §4.2 batch-parallel fused attention kernel
-            from repro.kernels.batch_attention.ops import batch_attention
-            q_pos = jnp.broadcast_to(idx[None, None], (B, T)).astype(jnp.int32)
-            k_pos = jnp.broadcast_to(cpos[None, :], (B, S))
-            out = batch_attention(q, ck, cv, q_pos, k_pos,
-                                  scale=spec.scale, window=spec.window)
-            out = out.astype(x.dtype)
+            ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+            cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+            if ck.dtype != q.dtype:
+                ck = ck.astype(q.dtype)
+                cv = cv.astype(q.dtype)
+            if spec.use_kernel:
+                from repro.kernels.batch_attention.ops import batch_attention
+                out = batch_attention(q, ck, cv, idx[:, None], cpos,
+                                      scale=spec.scale, window=spec.window)
+                out = out.astype(x.dtype)
+            else:
+                G = H // K
+                qh = q.reshape(B, T, K, G, hd)
+                scores = _gqa_scores(qh, ck, spec.scale)      # (B,K,G,T,S)
+                valid = (cpos >= 0) & (cpos <= idx[:, None])  # (B, S)
+                if spec.window:
+                    valid &= (idx[:, None] - cpos) < spec.window
+                probs = _masked_softmax(scores,
+                                        valid[:, None, None, None, :])
+                out = _gqa_combine(probs, cv).reshape(B, T, H * hd)
         else:
-            G = H // K
-            qh = q.reshape(B, T, K, G, hd)
-            scores = _gqa_scores(qh, ck, spec.scale)          # (B,K,G,T,S)
-            valid = (cpos >= 0) & (cpos <= idx)
-            if spec.window:
-                valid &= (idx - cpos) < spec.window
-            probs = _masked_softmax(scores, valid[None, None, None, None, :])
-            out = _gqa_combine(probs, cv).reshape(B, T, H * hd)
+            idx = cache_index if cache_index is not None else jnp.int32(0)
+            slot = idx % S  # ring buffer for windowed layers; linear otherwise
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cache["pos"], idx[None].astype(jnp.int32), (slot,))
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+            ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+            cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+            if ck.dtype != q.dtype:  # low-precision (fp8) KV cache: upcast reads
+                ck = ck.astype(q.dtype)
+                cv = cv.astype(q.dtype)
+            if spec.use_kernel:
+                # the paper's §4.2 batch-parallel fused attention kernel
+                from repro.kernels.batch_attention.ops import batch_attention
+                q_pos = jnp.broadcast_to(idx[None, None], (B, T)).astype(jnp.int32)
+                k_pos = jnp.broadcast_to(cpos[None, :], (B, S))
+                out = batch_attention(q, ck, cv, q_pos, k_pos,
+                                      scale=spec.scale, window=spec.window)
+                out = out.astype(x.dtype)
+            else:
+                G = H // K
+                qh = q.reshape(B, T, K, G, hd)
+                scores = _gqa_scores(qh, ck, spec.scale)          # (B,K,G,T,S)
+                valid = (cpos >= 0) & (cpos <= idx)
+                if spec.window:
+                    valid &= (idx - cpos) < spec.window
+                probs = _masked_softmax(scores, valid[None, None, None, None, :])
+                out = _gqa_combine(probs, cv).reshape(B, T, H * hd)
     else:
         # ---- training / prefill forward ----
         if T > 2 * spec.chunk_size and T % spec.chunk_size == 0:
@@ -258,7 +316,17 @@ def apply_attention(
             slots = pos_tail % S
             ck = cache["k"].at[:, slots].set(k_tail)
             cv = cache["v"].at[:, slots].set(v_tail)
-            cpos = cache["pos"].at[slots].set(pos_tail)
+            if cache["pos"].ndim == 2:
+                # per-slot fill: rows are right-padded to a common T; store
+                # the padded K/V but mark positions >= lengths[i] empty so
+                # the length-masked decode never attends to them.
+                row_pos = jnp.broadcast_to(pos_tail[None, :], (B, keep))
+                if lengths is not None:
+                    row_pos = jnp.where(
+                        pos_tail[None, :] < lengths[:, None], row_pos, -1)
+                cpos = cache["pos"].at[:, slots].set(row_pos)
+            else:
+                cpos = cache["pos"].at[slots].set(pos_tail)
             new_cache = {"k": ck, "v": cv, "pos": cpos}
 
     out = constrain(out, ("batch", "seq", "qkv_out"))

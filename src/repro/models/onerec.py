@@ -48,17 +48,18 @@ def _embed_with_profile(params, tokens, profile, cfg: OneRecConfig,
 def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
             *, cache: Optional[dict] = None,
             cache_index: Optional[jax.Array] = None,
-            fill_cache: bool = False):
+            fill_cache: bool = False,
+            lengths: Optional[jax.Array] = None):
     """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM)."""
     if cache is not None and not fill_cache:
         # decode: single new token, profile already in the cache
         return tfm.forward(params["backbone"], batch["tokens"],
                            cfg.transformer, cache=cache,
-                           cache_index=cache_index)
+                           cache_index=cache_index, lengths=lengths)
     embeds = _embed_with_profile(params, batch["tokens"], batch["profile"], cfg)
     return tfm.forward(params["backbone"], batch["tokens"], cfg.transformer,
                        inputs_embeds=embeds, cache=cache,
-                       fill_cache=fill_cache)
+                       fill_cache=fill_cache, lengths=lengths)
 
 
 def train_loss(params, batch, cfg: OneRecConfig) -> jax.Array:
@@ -86,6 +87,14 @@ def init_cache(cfg: OneRecConfig, batch: int, dtype=jnp.bfloat16) -> dict:
                              cfg.context_len + 1, dtype)
 
 
+def init_slot_cache(cfg: OneRecConfig, n_slots: int,
+                    dtype=jnp.bfloat16) -> dict:
+    """Slot-pool KV cache: ``n_slots`` independent per-request rows, each
+    with its own position occupancy (ragged decode depths)."""
+    return tfm.init_kv_cache(cfg.transformer, n_slots,
+                             cfg.context_len + 1, dtype, per_slot=True)
+
+
 def prefill(params, batch, cfg: OneRecConfig, cache: dict):
     """Encode [profile + history]; returns last logits + filled cache."""
     logits, new_cache = forward(params, batch, cfg, cache=cache,
@@ -99,6 +108,34 @@ def decode_step(params, tokens, cfg: OneRecConfig, cache: dict,
     logits, new_cache = tfm.forward(params["backbone"], tokens,
                                     cfg.transformer, cache=cache,
                                     cache_index=index)
+    return logits[:, -1], new_cache
+
+
+def prefill_into_slots(params, batch, cfg: OneRecConfig, cache: dict,
+                       lengths: jax.Array):
+    """Ragged prefill into a per-slot cache.
+
+    ``batch["tokens"]`` is right-padded to a common T; ``lengths`` (B,) gives
+    each row's true history-token count.  The embedded sequence is
+    [profile] + tokens, so row i occupies positions 0 .. lengths[i]
+    (``lengths[i] + 1`` valid positions); padded positions are stored
+    masked-out (pos = -1).  Returns each row's OWN last-position logits
+    (B, V) — not the padded tail — plus the filled cache.
+    """
+    seq_lens = lengths.astype(jnp.int32) + 1  # + profile prefix token
+    logits, new_cache = forward(params, batch, cfg, cache=cache,
+                                fill_cache=True, lengths=seq_lens)
+    last = jnp.take_along_axis(
+        logits, (seq_lens - 1)[:, None, None], axis=1)[:, 0]
+    return last, new_cache
+
+
+def decode_step_slots(params, tokens, cfg: OneRecConfig, cache: dict,
+                      lengths: jax.Array):
+    """Per-slot decode: tokens (B, 1), each row at its OWN absolute index
+    ``lengths[i]`` (= number of positions already in that slot)."""
+    logits, new_cache = forward(params, {"tokens": tokens}, cfg, cache=cache,
+                                lengths=lengths.astype(jnp.int32))
     return logits[:, -1], new_cache
 
 

@@ -151,13 +151,13 @@ def init_transformer(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
 
 def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
                  kind: LayerKind, positions, cache_lp, cache_index,
-                 fill_cache: bool):
+                 fill_cache: bool, lengths=None):
     h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
                       zero_centered=cfg.zero_centered_norm)
     attn_out, new_cache = apply_attention(
         lp["attn"], h, attn_spec_for(cfg, kind), positions=positions,
         cache=cache_lp, cache_index=cache_index, fill_cache=fill_cache,
-        norm_eps=cfg.norm_eps)
+        lengths=lengths, norm_eps=cfg.norm_eps)
     if cfg.use_post_norm:
         attn_out = rmsnorm_apply(lp["post_attn_norm"], attn_out,
                                  eps=cfg.norm_eps,
@@ -181,7 +181,7 @@ def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
 
 def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
                  spec: StackSpec, positions, cache_stack, cache_index,
-                 fill_cache: bool, unroll: bool = False):
+                 fill_cache: bool, unroll: bool = False, lengths=None):
     """scan over the stacked periods of one homogeneous stack."""
 
     def body(carry, xs):
@@ -192,7 +192,7 @@ def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
             key = f"p{pi}"
             c_lp = cache_all.get(key) if cache_all else None
             h, nc = _apply_layer(lp_all[key], h, cfg, kind, positions,
-                                 c_lp, cache_index, fill_cache)
+                                 c_lp, cache_index, fill_cache, lengths)
             # layer-boundary residual sharding: no-op under the base rules;
             # under TRAIN_RULES_SP this seq-shards the saved activations
             h = constrain(h, ("batch", "act_seq", "embed"))
@@ -249,8 +249,14 @@ def forward(
     compute_dtype=jnp.bfloat16,
     inputs_embeds: Optional[jax.Array] = None,
     unroll_layers: bool = False,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
-    """tokens (B, T) -> (logits (B, T, V) f32, new_cache)."""
+    """tokens (B, T) -> (logits (B, T, V) f32, new_cache).
+
+    ``lengths`` (B,) engages the per-slot length-masked cache path (see
+    ``layers.attention``): per-row true sequence lengths on prefill, per-row
+    absolute write indices on decode.
+    """
     if inputs_embeds is not None:
         x = constrain(inputs_embeds.astype(compute_dtype),
                       ("batch", "seq", "embed"))
@@ -259,7 +265,9 @@ def forward(
     stats_tap("embed_out", x)
     T = x.shape[1]
     if positions is None:
-        if cache is not None and not fill_cache and cache_index is not None:
+        if cache is not None and not fill_cache and lengths is not None:
+            positions = lengths[:, None].astype(jnp.int32)  # per-row rope
+        elif cache is not None and not fill_cache and cache_index is not None:
             positions = cache_index[None] if cache_index.ndim == 0 \
                 else cache_index
         else:
@@ -271,7 +279,7 @@ def forward(
         c_stack = cache["stacks"][key] if cache is not None else None
         x, nc = _apply_stack(params["stacks"][key], x, cfg, spec, positions,
                              c_stack, cache_index, fill_cache,
-                             unroll=unroll_layers)
+                             unroll=unroll_layers, lengths=lengths)
         if new_cache is not None:
             new_cache["stacks"][key] = nc
     x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
@@ -288,8 +296,13 @@ def forward(
 
 
 def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
-                  dtype=None) -> dict:
+                  dtype=None, per_slot: bool = False) -> dict:
+    """``per_slot=True`` gives every batch row its own position occupancy
+    (slot-based serving cache); requires full attention (no sliding window)
+    since ragged rows break the ring-buffer tail-keep invariant."""
     dtype = dtype or jnp.dtype(cfg.kv_cache_dtype)
+    if per_slot and cfg.sliding_window:
+        raise ValueError("per-slot KV caches require full attention")
     cache: Dict[str, Any] = {"stacks": {}}
     for si, spec in enumerate(layer_plan(cfg)):
         stack_cache = {}
@@ -297,7 +310,8 @@ def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
             aspec = attn_spec_for(cfg, kind)
             clen = cache_len_for(aspec, max_len)
             stack_cache[f"p{pi}"] = init_cache(
-                batch, clen, aspec, stack=(spec.n_periods,), dtype=dtype)
+                batch, clen, aspec, stack=(spec.n_periods,), dtype=dtype,
+                per_slot=per_slot)
         cache["stacks"][str(si)] = stack_cache
     return cache
 

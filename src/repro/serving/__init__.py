@@ -1,1 +1,40 @@
+"""Continuous-batching serving subsystem (paper §5.2 infrastructure).
+
+Architecture — a request flows queue -> scheduler -> slots -> executor:
+
+    requests ──> FIFO queue ──> scheduler ──────────────┐
+                                 │ join (ragged prefill) │ retire
+                                 ▼                       ▼
+                          SlotPool (kv_cache.py)    completions
+                     fixed pool of per-request      (per-request
+                     KV-cache slots: alloc/free,     latency)
+                     per-slot sequence lengths
+                                 │ slot ids + lengths
+                                 ▼
+                        PhaseExecutor (executor.py)
+                    compiled phases over the DONATED
+                    device pool: prefill-insert /
+                    length-masked decode / top-k select
+                    (FP8 PTQ or BF16 via policy switch)
+
+* ``kv_cache.py`` — the slot pool: a fixed number of per-request KV-cache
+  rows with alloc/free and per-slot lengths.  Length-masked attention lets
+  slots at different histories and decode depths share one batch, so no
+  request ever waits for a straggler.
+* ``scheduler.py`` — ``ContinuousScheduler`` joins new prefills into free
+  slots and retires finished requests every step (no tail padding);
+  ``FixedBatchScheduler`` preserves the seed engine's padded fixed-batch
+  lock-step mode (the paper's batch-32 measurement setting).
+* ``executor.py`` — the jitted prefill/decode/select programs with donated
+  cache buffers; FP8-or-BF16 is a parameter-tree swap (§4.1 policy), so the
+  A/B is a one-flag switch.
+* ``engine.py`` — the ``ServingEngine`` facade: seed-compatible
+  ``serve_requests`` API, per-request p50/p99 latency and slot-occupancy
+  metrics, windowed per call.
+"""
+
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.executor import PhaseExecutor  # noqa: F401
+from repro.serving.kv_cache import SlotPool, SlotState  # noqa: F401
+from repro.serving.scheduler import (ContinuousScheduler,  # noqa: F401
+                                     FixedBatchScheduler, Request)

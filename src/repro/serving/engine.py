@@ -1,144 +1,126 @@
-"""OneRec serving engine: the system whose latency/throughput the paper
-measures (§5.2).
+"""OneRec serving engine facade: the system whose latency/throughput the
+paper measures (§5.2).
 
-Design (RecoGEM adapted to JAX/TPU, DESIGN.md §3):
-  * ONE jitted program per phase (prefill, decode) — no multi-stage
-    conversion pipeline; quantize + GEMM + epilogues fuse under XLA exactly
-    as the paper's unified TensorRT graph does,
-  * KV-cache slots live on device and are DONATED between decode steps
-    (the zero-copy idiom),
-  * request batching: requests accumulate into fixed-size batches (the
-    paper serves batch 32); the engine pads the tail batch,
-  * FP8 PTQ params (policy-driven) or BF16 baseline params — same engine,
-    so the §5.2 A/B is a one-flag switch,
-  * top-k candidate selection via RadixTopK (kernel) or lax.top_k
-    (XLA fallback; interpret-mode Pallas is too slow on CPU for benches).
-
-Generation: ``decode_len`` semantic-ID tokens per request (one item),
-greedy or top-k sampled.
+Thin shell over the serving subsystem (see ``repro.serving`` for the
+architecture overview): it wraps raw request dicts into ``Request``s, picks a
+scheduler (``continuous`` slot-based batching or the ``fixed``-batch
+reference mode), runs it against the compiled-phase executor, and reports
+PER-REQUEST latency percentiles plus slot-occupancy utilization.  The
+``serve_requests`` / ``generate_batch`` API of the seed engine is preserved
+for the A/B scripts; metrics are windowed per call (a second call starts
+from a clean slate).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import OneRecConfig
-from repro.core.policy import BASELINE_POLICY, PAPER_POLICY
-from repro.core.ptq import quantize_params
-from repro.models import onerec as onerec_model
+from repro.serving.executor import PhaseExecutor
+from repro.serving.kv_cache import SlotPool
+from repro.serving.scheduler import (Completion, ContinuousScheduler,
+                                     FixedBatchScheduler, Request)
 
 
 @dataclasses.dataclass
 class EngineConfig:
-    batch_size: int = 32
+    batch_size: int = 32           # fixed-mode batch; default pool size
     use_fp8: bool = True
     topk: int = 8
     use_radix_topk: bool = False   # Pallas kernel (TPU); lax.top_k otherwise
     greedy: bool = True
     seed: int = 0
+    mode: str = "continuous"       # "continuous" | "fixed"
+    n_slots: int = 0               # KV-slot pool size; 0 => batch_size
+    prefill_bucket_min: int = 16   # smallest ragged-prefill length bucket
+    max_prefill_groups: int = 2    # bucket programs per continuous join round
 
 
 class ServingEngine:
     def __init__(self, params, cfg: OneRecConfig, engine_cfg: EngineConfig):
+        if engine_cfg.mode not in ("continuous", "fixed"):
+            raise ValueError(f"unknown scheduler mode {engine_cfg.mode!r}")
         self.cfg = cfg
         self.ecfg = engine_cfg
-        policy = PAPER_POLICY if engine_cfg.use_fp8 else BASELINE_POLICY
-        self.params = quantize_params(params, policy)
-        self._build()
+        self.n_slots = engine_cfg.n_slots or engine_cfg.batch_size
+        self.executor = PhaseExecutor(
+            params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
+            topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
+            prefill_bucket_min=engine_cfg.prefill_bucket_min)
+        # windowed per serve_requests call (kept as an attribute for
+        # compatibility with the seed engine's A/B scripts)
         self.metrics: Dict[str, List[float]] = {"latency_s": [],
                                                 "batch_size": []}
 
-    # -- compiled phases ------------------------------------------------------
-
-    def _build(self):
-        cfg = self.cfg
-        B = self.ecfg.batch_size
-
-        if self.ecfg.use_radix_topk:
-            from repro.kernels.radix_topk import radix_topk
-            topk_fn = lambda logits, k: radix_topk(logits, k)
-        else:
-            topk_fn = lambda logits, k: jax.lax.top_k(logits, k)
-        self._topk_fn = topk_fn
-
-        @jax.jit
-        def prefill_fn(params, tokens, profile):
-            cache = onerec_model.init_cache(cfg, B)
-            logits, cache = onerec_model.prefill(
-                params, {"tokens": tokens, "profile": profile}, cfg, cache)
-            return logits, cache
-
-        @partial(jax.jit, donate_argnums=(1,))
-        def decode_fn(params, cache, tokens, index):
-            return onerec_model.decode_step(params, tokens, cfg, cache, index)
-
-        @jax.jit
-        def select_fn(logits):
-            vals, idx = topk_fn(logits, self.ecfg.topk)
-            return vals, idx
-
-        self._prefill = prefill_fn
-        self._decode = decode_fn
-        self._select = select_fn
+    def _make_scheduler(self, pool: SlotPool):
+        if self.ecfg.mode == "fixed":
+            return FixedBatchScheduler(self.executor, pool,
+                                       self.ecfg.batch_size)
+        return ContinuousScheduler(self.executor, pool,
+                                   self.ecfg.max_prefill_groups)
 
     # -- serving --------------------------------------------------------------
 
-    def generate_batch(self, tokens: np.ndarray, profile: np.ndarray
-                       ) -> np.ndarray:
-        """One fully-batched request: history tokens (B, H*3) -> item codes
-        (B, decode_len)."""
-        cfg = self.cfg
-        t0 = time.perf_counter()
-        B, T = tokens.shape
-        logits, cache = self._prefill(self.params, jnp.asarray(tokens),
-                                      jnp.asarray(profile))
-        index = jnp.int32(T + 1)  # +1 profile prefix token
-        out = []
-        for _ in range(cfg.decode_len):
-            vals, idx = self._select(logits)
-            nxt = idx[:, :1].astype(jnp.int32)  # greedy = top-1 of top-k
-            out.append(nxt)
-            logits, cache = self._decode(self.params, cache, nxt, index)
-            index = index + 1
-        result = np.asarray(jnp.concatenate(out, axis=1))
-        jax.block_until_ready(result)
-        dt = time.perf_counter() - t0
-        self.metrics["latency_s"].append(dt)
-        self.metrics["batch_size"].append(B)
-        return result
-
     def serve_requests(self, requests: List[Dict[str, np.ndarray]]
                        ) -> Tuple[List[np.ndarray], Dict[str, float]]:
-        """Assemble requests into fixed-size batches (padding the tail)."""
-        B = self.ecfg.batch_size
-        outputs: List[np.ndarray] = []
+        """Serve ``requests`` (dicts with ragged "tokens" + "profile");
+        returns per-request outputs in input order + per-call stats."""
+        if not requests:
+            return [], {"n_requests": 0.0, "wall_s": 0.0,
+                        "throughput_rps": 0.0, "mean_latency_s": 0.0,
+                        "p50_latency_s": 0.0, "p99_latency_s": 0.0,
+                        "slot_occupancy": 0.0, "n_slots": float(self.n_slots),
+                        "decode_steps": 0.0, "prefill_calls": 0.0,
+                        "mode": self.ecfg.mode}
+        max_hist = self.cfg.history_len * self.cfg.n_codebooks
+        for i, r in enumerate(requests):
+            if len(r["tokens"]) > max_hist:
+                raise ValueError(
+                    f"request {i}: history of {len(r['tokens'])} tokens "
+                    f"exceeds the model's context ({max_hist} = "
+                    f"history_len x n_codebooks); truncate upstream")
         t0 = time.perf_counter()
-        for i in range(0, len(requests), B):
-            chunk = requests[i:i + B]
-            n = len(chunk)
-            tokens = np.stack([r["tokens"] for r in chunk])
-            profile = np.stack([r["profile"] for r in chunk])
-            if n < B:  # pad tail batch
-                tokens = np.concatenate(
-                    [tokens, np.repeat(tokens[-1:], B - n, 0)])
-                profile = np.concatenate(
-                    [profile, np.repeat(profile[-1:], B - n, 0)])
-            out = self.generate_batch(tokens, profile)
-            outputs.extend(list(out[:n]))
+        reqs = [Request(rid=i, tokens=np.asarray(r["tokens"], np.int32),
+                        profile=np.asarray(r["profile"], np.float32),
+                        arrival_s=t0 + float(r.get("arrival_s", 0.0)))
+                for i, r in enumerate(requests)]
+        pool = SlotPool(self.n_slots)
+        sched = self._make_scheduler(pool)
+        done: List[Completion] = sched.run(reqs)
         wall = time.perf_counter() - t0
+
+        by_rid = {c.rid: c for c in done}
+        outputs = [by_rid[i].item for i in range(len(requests))]
+        lat = np.asarray([by_rid[i].latency_s for i in range(len(requests))])
+        self.metrics["latency_s"] = list(lat)       # windowed: reset per call
+        self.metrics["batch_size"] = [float(len(requests))]
+        counters = self.executor.counters
         stats = {
             "n_requests": float(len(requests)),
             "wall_s": wall,
             "throughput_rps": len(requests) / wall,
-            "mean_latency_s": float(np.mean(self.metrics["latency_s"])),
-            "p99_latency_s": float(np.percentile(
-                self.metrics["latency_s"], 99)),
+            "mean_latency_s": float(lat.mean()),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "slot_occupancy": float(np.mean(sched.occupancy))
+            if sched.occupancy else 0.0,
+            "n_slots": float(self.n_slots),
+            "decode_steps": float(counters["decode_steps"]),
+            "prefill_calls": float(counters["prefill_calls"]),
+            "mode": self.ecfg.mode,
         }
+        for k in counters:
+            counters[k] = 0                          # window counters too
         return outputs, stats
+
+    def generate_batch(self, tokens: np.ndarray, profile: np.ndarray
+                       ) -> np.ndarray:
+        """Seed-engine compat: one uniform batch (B, H*3) -> (B, decode_len)."""
+        requests = [{"tokens": tokens[i], "profile": profile[i]}
+                    for i in range(tokens.shape[0])]
+        outputs, _ = self.serve_requests(requests)
+        return np.stack(outputs)

@@ -1,0 +1,172 @@
+"""Compiled-phase executor: the jitted programs behind the serving engine.
+
+Three programs, mirroring the paper's one-graph-per-phase design (§5.2):
+
+  * ``prefill_insert`` — ragged prefill of a join group: runs the profile +
+    history forward for ``Bp`` new requests (right-padded to a shared length
+    bucket), fills a fresh per-slot cache, and scatters those rows into the
+    DONATED slot pool at the target slot ids.  One XLA program per
+    (Bp, T-bucket) shape; bucketing keeps the compile count small.
+  * ``decode`` — one token for every slot in the pool at its own absolute
+    index (length-masked attention), donated cache in / cache out.
+  * ``select`` — top-k over the logits (RadixTopK kernel or ``lax.top_k``).
+
+Quantization (FP8 PTQ vs BF16 baseline) is a parameter-tree swap via the
+policy switch — the programs are precision-agnostic, exactly as the paper's
+unified serving graph is.  The executor OWNS the device-side pool tree;
+schedulers only ever see slot ids and logits.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OneRecConfig
+from repro.core.policy import BASELINE_POLICY, PAPER_POLICY
+from repro.core.ptq import quantize_params
+from repro.models import onerec as onerec_model
+
+
+def bucket_length(n: int, minimum: int = 16) -> int:
+    """Smallest power-of-two >= n (floored at ``minimum``) — pads ragged
+    shapes to a handful of compiled variants."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class PhaseExecutor:
+    """Owns the quantized params, the device slot pool, and the compiled
+    prefill/decode/select programs."""
+
+    def __init__(self, params, cfg: OneRecConfig, *, n_slots: int,
+                 use_fp8: bool = True, topk: int = 8,
+                 use_radix_topk: bool = False,
+                 prefill_bucket_min: int = 16):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.topk = topk
+        self.prefill_bucket_min = prefill_bucket_min
+        policy = PAPER_POLICY if use_fp8 else BASELINE_POLICY
+        self.params = quantize_params(params, policy)
+        self.cache = onerec_model.init_slot_cache(cfg, n_slots)
+        self.counters: Dict[str, int] = {"prefill_calls": 0,
+                                         "decode_steps": 0,
+                                         "prefill_padded_rows": 0}
+
+        if use_radix_topk:
+            from repro.kernels.radix_topk import radix_topk
+            topk_fn = lambda logits, k: radix_topk(logits, k)
+        else:
+            topk_fn = lambda logits, k: jax.lax.top_k(logits, k)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def prefill_insert_fn(params, pool, tokens, profile, lengths, slots):
+            fresh = onerec_model.init_slot_cache(cfg, tokens.shape[0])
+            last, filled = onerec_model.prefill_into_slots(
+                params, {"tokens": tokens, "profile": profile}, cfg, fresh,
+                lengths)
+            # scatter whole rows into the pool (batch axis 1 under the
+            # stacked-layer leading axis); duplicate slot ids only ever carry
+            # identical rows (batch padding duplicates a real request)
+            pool = jax.tree_util.tree_map(
+                lambda p, f: p.at[:, slots].set(f.astype(p.dtype)),
+                pool, filled)
+            return last, pool
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_fn(params, pool, tokens, lengths):
+            return onerec_model.decode_step_slots(params, tokens, cfg, pool,
+                                                  lengths)
+
+        @jax.jit
+        def select_fn(logits):
+            return topk_fn(logits, topk)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def clear_slot_fn(pool, slot):
+            # mark every position of one slot row empty (pos = -1) so a
+            # freed row reads exactly like a virgin one: its dummy decodes
+            # attend to nothing instead of stale K/V, keeping pool state —
+            # and therefore MoE capacity interaction — independent of
+            # serving history
+            def walk(tree):
+                if "pos" in tree:
+                    return {**tree, "pos": tree["pos"].at[:, slot].set(-1)}
+                return {k: walk(v) for k, v in tree.items()}
+            return walk(pool)
+
+        self._prefill_insert = prefill_insert_fn
+        self._decode = decode_fn
+        self._select = select_fn
+        self._clear_slot = clear_slot_fn
+
+    # -- phase entry points (host-side padding/bucketing) ---------------------
+
+    def prefill_insert(self, tokens_list: List[np.ndarray],
+                       profiles: List[np.ndarray], slots: List[int]
+                       ) -> jax.Array:
+        """Prefill one join group into the pool.
+
+        ``tokens_list[i]`` (L_i,) is request i's history; all go to
+        ``slots[i]``.  The group is right-padded to a length bucket and the
+        batch is padded to a power of two by DUPLICATING the last request
+        (same slot id — the scatter rows are identical, so duplicate indices
+        are benign).  Returns FULL-BUCKET next-token logits (b_bucket, V);
+        callers slice selections to the first ``len(slots)`` rows — keeping
+        the bucket shape here means downstream ``select`` compiles once per
+        power-of-two bucket, not once per join-group size.
+        """
+        n = len(tokens_list)
+        lens = [len(t) for t in tokens_list]
+        t_bucket = bucket_length(max(lens), self.prefill_bucket_min)
+        t_bucket = min(t_bucket, self.cfg.history_len * self.cfg.n_codebooks)
+        b_bucket = bucket_length(n, 1)
+        tok = np.zeros((b_bucket, t_bucket), np.int32)
+        prof = np.zeros((b_bucket, profiles[0].shape[-1]), np.float32)
+        lengths = np.zeros((b_bucket,), np.int32)
+        slot_ids = np.zeros((b_bucket,), np.int32)
+        for i in range(b_bucket):
+            j = min(i, n - 1)  # batch padding duplicates the last request
+            tok[i, :lens[j]] = tokens_list[j]
+            prof[i] = profiles[j]
+            lengths[i] = lens[j]
+            slot_ids[i] = slots[j]
+        logits, self.cache = self._prefill_insert(
+            self.params, self.cache, jnp.asarray(tok), jnp.asarray(prof),
+            jnp.asarray(lengths), jnp.asarray(slot_ids))
+        self.counters["prefill_calls"] += 1
+        self.counters["prefill_padded_rows"] += b_bucket - n
+        return logits
+
+    def decode(self, tokens: np.ndarray, lengths: np.ndarray) -> jax.Array:
+        """One decode step over the whole pool: tokens (N, 1) at per-slot
+        absolute indices ``lengths`` (N,).  Free slots pass index 0 and a
+        dummy token; their ``pos`` rows are cleared on free (``free_slot``)
+        so the dummy rows are a pure function of the free/active pattern.
+        Note the dummy rows still occupy rows of the capacity-bounded MoE
+        dispatch, so under a tight ``capacity_factor`` the active requests'
+        outputs can differ (deterministically) from a smaller-batch run —
+        the same effect batch composition has in any capacity-dropped MoE."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens, np.int32),
+            jnp.asarray(lengths, np.int32))
+        self.counters["decode_steps"] += 1
+        return logits
+
+    def select(self, logits) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k over logits; returns host (vals, ids)."""
+        vals, ids = self._select(logits)
+        return np.asarray(vals), np.asarray(ids)
+
+    def free_slot(self, slot: int) -> None:
+        """Wipe a retired slot's position occupancy (cheap pos-only
+        scatter) — see ``decode`` for why freed rows must read virgin."""
+        self.cache = self._clear_slot(self.cache, jnp.int32(slot))

@@ -1,0 +1,82 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The device-side cache is a fixed pool of ``n_slots`` per-request rows (the
+batch axis of the per-slot cache created by ``models.onerec.init_slot_cache``)
+— each row carries its own position occupancy, so requests at different
+history lengths and decode depths coexist in one batch.  This class is the
+HOST-side view of that pool: a free-list allocator plus per-slot sequence
+lengths and request bookkeeping.  The device tree itself lives inside the
+executor's donated buffers and is only ever touched by compiled programs
+(prefill-insert writes a whole row; decode appends one token per row).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One occupied slot: the request it serves and its decode progress."""
+
+    request_id: int
+    length: int                 # positions in the cache (profile + history + generated)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    last_token: int = -1        # next decode-step input
+    arrival_s: float = 0.0
+
+
+class SlotPool:
+    """Fixed pool of KV-cache slots with alloc/free and per-slot lengths."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))  # pop() -> 0 first
+        self._slots: Dict[int, SlotState] = {}
+
+    # -- allocation -----------------------------------------------------------
+
+    def alloc(self, state: SlotState) -> Optional[int]:
+        """Claim a free slot for ``state``; None when the pool is exhausted."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._slots[slot] = state
+        return slot
+
+    def free(self, slot: int) -> SlotState:
+        """Release ``slot``; returns its final state."""
+        state = self._slots.pop(slot)  # KeyError on double-free / bad id
+        self._free.append(slot)
+        return state
+
+    # -- views ----------------------------------------------------------------
+
+    def __contains__(self, slot: int) -> bool:
+        return slot in self._slots
+
+    def __getitem__(self, slot: int) -> SlotState:
+        return self._slots[slot]
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._slots)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_used / self.n_slots
+
+    def used_slots(self) -> List[int]:
+        return sorted(self._slots)
+
+    def lengths(self, fill: int = 0) -> List[int]:
+        """Per-slot lengths, dense over the pool (``fill`` for free slots)."""
+        return [self._slots[i].length if i in self._slots else fill
+                for i in range(self.n_slots)]

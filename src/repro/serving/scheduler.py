@@ -1,0 +1,230 @@
+"""Request schedulers: continuous batching and the fixed-batch reference.
+
+``ContinuousScheduler`` is the paper-style high-utilization loop: a FIFO
+request queue feeds a fixed pool of KV-cache slots.  Every engine step it
+(1) retires finished slots, (2) joins queued requests into free slots via
+bucketed ragged prefill — no tail padding, no waiting for stragglers — and
+(3) runs ONE length-masked decode program over the whole pool, advancing
+every active request regardless of its depth.
+
+``FixedBatchScheduler`` reproduces the seed engine's semantics (the paper's
+batch-32 measurement mode): requests are chunked into fixed-size batches,
+the tail batch is padded, and the whole batch decodes in lock-step until its
+slowest member finishes.  Both schedulers drive the same compiled programs,
+so an A/B between them isolates pure scheduling effects.
+
+Latency accounting is per REQUEST (arrival -> last token realized on host),
+not per batch; occupancy is sampled at every decode step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.executor import PhaseExecutor, bucket_length
+from repro.serving.kv_cache import SlotPool, SlotState
+
+
+@dataclasses.dataclass(eq=False)     # identity equality: queue.remove()
+class Request:
+    rid: int
+    tokens: np.ndarray          # (L,) semantic-ID history
+    profile: np.ndarray         # (PROFILE_DIM,)
+    arrival_s: float = 0.0      # absolute perf_counter timestamp
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    item: np.ndarray            # (decode_len,) generated semantic-ID codes
+    latency_s: float
+
+
+class ContinuousScheduler:
+    """Slot-based continuous batching over the executor's pool.
+
+    ``max_prefill_groups`` caps how many length-bucket prefill programs one
+    join round may launch: fewer groups = fewer dispatches but more padding
+    (the smallest group is folded into the next-larger bucket).  2 is a good
+    CPU/TPU default — one short and one long program per round.
+
+    Admission is length-aware within a bounded ``lookahead`` window: the
+    round admits the queue head's length bucket first (starvation guard),
+    then the most-populous other bucket among the first ``lookahead``
+    arrived requests.  Near-uniform join groups prefill with almost no
+    padding — the flexibility a slot pool has and a fixed batch does not.
+    """
+
+    def __init__(self, executor: PhaseExecutor, pool: SlotPool,
+                 max_prefill_groups: int = 2, lookahead: int = 0):
+        self.executor = executor
+        self.pool = pool
+        self.max_prefill_groups = max(1, max_prefill_groups)
+        self.lookahead = lookahead or 4 * pool.n_slots
+        self.decode_len = executor.cfg.decode_len
+        self.occupancy: List[float] = []
+
+    # -- step pieces ----------------------------------------------------------
+
+    def _record(self, slot: int, token: int,
+                done: List[Completion]) -> None:
+        state = self.pool[slot]
+        state.generated.append(int(token))
+        state.last_token = int(token)
+        if len(state.generated) >= self.decode_len:
+            final = self.pool.free(slot)
+            self.executor.free_slot(slot)
+            done.append(Completion(
+                rid=final.request_id,
+                item=np.asarray(final.generated, np.int32),
+                latency_s=time.perf_counter() - final.arrival_s))
+
+    def _bucket(self, r: Request) -> int:
+        return bucket_length(len(r.tokens), self.executor.prefill_bucket_min)
+
+    def _join(self, queue: deque, done: List[Completion]) -> None:
+        """Admit ARRIVED queued requests into free slots, by length bucket."""
+        free = self.pool.n_free
+        if not free or not queue:
+            return
+        now = time.perf_counter()
+        window = [r for r in list(queue)[:self.lookahead]
+                  if r.arrival_s <= now]
+        if not window:
+            return
+        by_bucket: Dict[int, List[Request]] = {}
+        for r in window:
+            by_bucket.setdefault(self._bucket(r), []).append(r)
+        # head's bucket first (no starvation), then the fullest others
+        head_b = self._bucket(window[0])
+        order = [head_b] + sorted((b for b in by_bucket if b != head_b),
+                                  key=lambda b: -len(by_bucket[b]))
+        joiners: List[Request] = []
+        groups: Dict[int, List[Request]] = {}
+        for b in order[:self.max_prefill_groups]:
+            take = by_bucket[b][:free - len(joiners)]
+            if take:
+                groups[b] = take
+                joiners += take
+        taken = {id(r) for r in joiners}
+        if taken:  # one O(len(queue)) rotation, preserving order
+            for _ in range(len(queue)):
+                r = queue.popleft()
+                if id(r) not in taken:
+                    queue.append(r)
+        for group in groups.values():
+            slots = []
+            for r in group:
+                slot = self.pool.alloc(SlotState(
+                    request_id=r.rid, length=len(r.tokens) + 1,  # + profile
+                    arrival_s=r.arrival_s))
+                slots.append(slot)
+            logits = self.executor.prefill_insert(
+                [r.tokens for r in group], [r.profile for r in group], slots)
+            _, ids = self.executor.select(logits)   # full-bucket shape
+            for slot, tok in zip(slots, ids[:len(slots), 0]):
+                self._record(slot, tok, done)
+
+    def _decode_step(self, done: List[Completion]) -> None:
+        """One length-masked decode over the whole pool."""
+        pool = self.pool
+        tokens = np.zeros((pool.n_slots, 1), np.int32)
+        lengths = np.zeros((pool.n_slots,), np.int32)
+        active = pool.used_slots()
+        for s in active:
+            tokens[s, 0] = pool[s].last_token
+            lengths[s] = pool[s].length
+        logits = self.executor.decode(tokens, lengths)
+        _, ids = self.executor.select(logits)
+        self.occupancy.append(pool.occupancy)
+        for s in active:
+            pool[s].length += 1          # the input token we just wrote
+            self._record(s, ids[s, 0], done)
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, requests: List[Request]) -> List[Completion]:
+        queue = deque(sorted(requests, key=lambda r: r.arrival_s))
+        done: List[Completion] = []
+        while queue or self.pool.n_used:
+            self._join(queue, done)
+            if self.pool.n_used:
+                self._decode_step(done)
+            elif queue:  # idle: everything left is still in flight upstream
+                time.sleep(max(0.0, queue[0].arrival_s
+                               - time.perf_counter()))
+        return done
+
+
+class FixedBatchScheduler:
+    """Seed-engine semantics: fixed batches, padded tail, lock-step decode.
+
+    Kept as a mode so the paper's batch-32 numbers stay reproducible and as
+    the reference the continuous scheduler is validated against.  Runs on the
+    same slot programs (slots 0..B-1 of the pool, histories right-padded to
+    the batch max), so outputs are comparable token-for-token.
+    """
+
+    def __init__(self, executor: PhaseExecutor, pool: SlotPool,
+                 batch_size: int):
+        if batch_size > pool.n_slots:
+            raise ValueError(f"batch_size {batch_size} exceeds pool size "
+                             f"{pool.n_slots}")
+        self.executor = executor
+        self.pool = pool
+        self.batch_size = batch_size
+        self.decode_len = executor.cfg.decode_len
+        self.occupancy: List[float] = []
+
+    def run(self, requests: List[Request]) -> List[Completion]:
+        done: List[Completion] = []
+        B = self.batch_size
+        for start in range(0, len(requests), B):
+            chunk = requests[start:start + B]
+            n = len(chunk)
+            # a fixed batch launches only once its LAST member has arrived —
+            # exactly the head-of-line blocking continuous batching removes
+            time.sleep(max(0.0, max(r.arrival_s for r in chunk)
+                           - time.perf_counter()))
+            padded = chunk + [chunk[-1]] * (B - n)  # tail padding
+            slots = []
+            for r in padded:
+                slots.append(self.pool.alloc(SlotState(
+                    request_id=r.rid, length=len(r.tokens) + 1,
+                    arrival_s=r.arrival_s)))
+            logits = self.executor.prefill_insert(
+                [r.tokens for r in padded], [r.profile for r in padded],
+                slots)
+            _, ids = self.executor.select(logits)
+            ids = ids[:len(slots)]                  # drop bucket-pad rows
+            gen = [[int(t)] for t in ids[:, 0]]
+            last = np.asarray(ids[:, :1], np.int32)
+            lengths = np.asarray([self.pool[s].length for s in slots],
+                                 np.int32)
+            for _ in range(self.decode_len - 1):
+                tokens = np.zeros((self.pool.n_slots, 1), np.int32)
+                lens = np.zeros((self.pool.n_slots,), np.int32)
+                tokens[slots, 0] = last[:, 0]
+                lens[slots] = lengths
+                logits = self.executor.decode(tokens, lens)
+                _, ids = self.executor.select(logits)
+                self.occupancy.append(n / self.pool.n_slots)
+                lengths = lengths + 1
+                last = np.asarray(ids[slots, :1], np.int32)
+                for row, toks in enumerate(gen):
+                    toks.append(int(last[row, 0]))
+            finish = time.perf_counter()
+            for row in range(n):  # drop padded duplicates
+                r = chunk[row]
+                done.append(Completion(
+                    rid=r.rid, item=np.asarray(gen[row], np.int32),
+                    latency_s=finish - r.arrival_s))
+            for s in set(slots):
+                self.pool.free(s)
+                self.executor.free_slot(s)
+        return done

@@ -1,0 +1,67 @@
+"""Import ``hypothesis`` if available, else a stub that skips property tests.
+
+The CI image does not always ship ``hypothesis`` (it is listed in
+``requirements-dev.txt``).  Test modules import it through this shim so the
+suite *collects* everywhere: with hypothesis installed the property tests run
+normally; without it, ``@hypothesis.given(...)`` degrades to a
+``pytest.mark.skip`` decorator and every strategy expression evaluates to an
+inert placeholder.
+"""
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any attribute access / call chain in strategy exprs."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+    hnp = _AnyStrategy()
+
+    class _Settings:
+        """Stands in for ``hypothesis.settings`` (decorator + profiles)."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    class _HealthCheck:
+        def __getattr__(self, _name):
+            return None
+
+    class _HypothesisStub:
+        settings = _Settings
+        HealthCheck = _HealthCheck()
+
+        @staticmethod
+        def given(*args, **kwargs):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        @staticmethod
+        def assume(condition):
+            return bool(condition)
+
+    hypothesis = _HypothesisStub()

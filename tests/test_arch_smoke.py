@@ -9,6 +9,9 @@ import pytest
 from repro.configs.registry import list_archs
 from repro.launch.steps import smoke_bundles
 
+# ~3 min for the full zoo — excluded from the tier-1 fast subset
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", list_archs())
 def test_arch_smoke(arch):

@@ -56,8 +56,7 @@ def test_infer_param_axes_conventions():
         (None, "embed_fsdp", "qkv_out")
 
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 
 
 @hypothesis.settings(deadline=None, max_examples=50)

@@ -1,12 +1,11 @@
 """Layer-level invariants: MoE dispatch, embedding bag, attention cache."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.layers import moe as moe_lib
 from repro.layers.embedding import embedding_bag, init_embedding, multi_hot_bag
 from repro.layers.mlp import ACTIVATIONS

@@ -1,12 +1,11 @@
 """Unit + property tests for the FP8 quantization primitives (paper §4.1)."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hnp, hypothesis, st
 
 from repro.core import quant
 

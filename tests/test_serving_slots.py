@@ -1,0 +1,229 @@
+"""Continuous-batching subsystem: slot allocator, scheduler join/retire vs
+the fixed-batch reference, and length-masked decode attention parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.layers.attention import AttnSpec, apply_attention, init_attention, \
+    init_cache
+from repro.models import onerec as onerec_model
+from repro.serving import EngineConfig, ServingEngine, SlotPool, SlotState
+
+
+# ---------------------------------------------------------------------------
+# Slot allocator
+# ---------------------------------------------------------------------------
+
+
+def _state(rid, length=10):
+    return SlotState(request_id=rid, length=length)
+
+
+def test_slot_pool_alloc_free_exhaustion():
+    pool = SlotPool(3)
+    slots = [pool.alloc(_state(i)) for i in range(3)]
+    assert sorted(slots) == [0, 1, 2]
+    assert pool.n_free == 0 and pool.n_used == 3
+    assert pool.alloc(_state(99)) is None          # exhausted
+    st = pool.free(slots[1])
+    assert st.request_id == 1
+    assert pool.n_free == 1
+    assert pool.alloc(_state(4)) == slots[1]       # slot is reusable
+    assert pool.occupancy == 1.0
+
+
+def test_slot_pool_double_free_raises():
+    pool = SlotPool(2)
+    s = pool.alloc(_state(0))
+    pool.free(s)
+    with pytest.raises(KeyError):
+        pool.free(s)
+
+
+def test_slot_pool_lengths_dense_view():
+    pool = SlotPool(4)
+    s0 = pool.alloc(_state(0, length=7))
+    s1 = pool.alloc(_state(1, length=3))
+    pool.free(s0)
+    lens = pool.lengths(fill=0)
+    assert len(lens) == 4
+    assert lens[s1] == 3 and lens[s0] == 0
+
+
+# ---------------------------------------------------------------------------
+# Length-masked decode attention vs full-batch reference
+# ---------------------------------------------------------------------------
+
+
+def test_length_masked_decode_matches_lockstep():
+    """Per-slot decode at ragged depths == lock-step decode row by row."""
+    spec = AttnSpec(n_heads=4, n_kv_heads=2, head_dim=8)
+    key = jax.random.PRNGKey(0)
+    params = init_attention(key, 32, spec)
+    S, B = 16, 3
+    lengths = np.array([5, 9, 12])
+    prefix = jax.random.normal(jax.random.PRNGKey(1), (B, 12, 32),
+                               jnp.float32)
+    x_new = jax.random.normal(jax.random.PRNGKey(2), (B, 1, 32), jnp.float32)
+
+    # per-slot path: fill a ragged cache (right-padded prefill), decode once
+    cache = init_cache(B, S, spec, dtype=jnp.float32, per_slot=True)
+    _, cache = apply_attention(params, prefix, spec,
+                               positions=jnp.arange(12), cache=cache,
+                               fill_cache=True, lengths=jnp.asarray(lengths))
+    out_slot, _ = apply_attention(params, x_new, spec, cache=cache,
+                                  lengths=jnp.asarray(lengths))
+
+    # reference: each row alone in a lock-step (shared-pos) cache at its
+    # own true length
+    for i, L in enumerate(lengths):
+        ref_cache = init_cache(1, S, spec, dtype=jnp.float32)
+        _, ref_cache = apply_attention(
+            params, prefix[i:i + 1, :L], spec, positions=jnp.arange(L),
+            cache=ref_cache, fill_cache=True)
+        out_ref, _ = apply_attention(
+            params, x_new[i:i + 1], spec, positions=jnp.asarray([[L]]),
+            cache=ref_cache, cache_index=jnp.int32(L))
+        np.testing.assert_allclose(np.asarray(out_slot[i], np.float32),
+                                   np.asarray(out_ref[0], np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_per_slot_cache_ignores_padded_positions():
+    """K/V written past a row's length must never influence its output."""
+    spec = AttnSpec(n_heads=2, n_kv_heads=2, head_dim=8)
+    params = init_attention(jax.random.PRNGKey(0), 16, spec)
+    B, T, S = 2, 8, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, 16), jnp.float32)
+    lengths = jnp.asarray([4, 8])
+    cache = init_cache(B, S, spec, dtype=jnp.float32, per_slot=True)
+    _, cache_a = apply_attention(params, x, spec, positions=jnp.arange(T),
+                                 cache=cache, fill_cache=True,
+                                 lengths=lengths)
+    # corrupt the padded tail of row 0 before filling: different garbage,
+    # same masked result
+    x_b = x.at[0, 4:].set(123.0)
+    cache = init_cache(B, S, spec, dtype=jnp.float32, per_slot=True)
+    _, cache_b = apply_attention(params, x_b, spec, positions=jnp.arange(T),
+                                 cache=cache, fill_cache=True,
+                                 lengths=lengths)
+    x_new = jax.random.normal(jax.random.PRNGKey(2), (B, 1, 16), jnp.float32)
+    out_a, _ = apply_attention(params, x_new, spec, cache=cache_a,
+                               lengths=lengths)
+    out_b, _ = apply_attention(params, x_new, spec, cache=cache_b,
+                               lengths=lengths)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler join/retire vs fixed-batch reference
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg() -> OneRecConfig:
+    """Small OneRec with capacity-unconstrained MoE: batch composition must
+    not change outputs (capacity drops depend on batchmates), so the
+    continuous-vs-fixed comparison is exact token-for-token."""
+    return OneRecConfig(
+        name="onerec-slots-test",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-slots-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+@pytest.fixture(scope="module")
+def slot_setup():
+    cfg = _tiny_cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for _ in range(11):                      # non-multiple of batch 4
+        n_items = int(rng.integers(2, cfg.history_len + 1))
+        reqs.append({
+            "tokens": rng.integers(0, 192, size=n_items * cfg.n_codebooks
+                                   ).astype(np.int32),
+            "profile": rng.normal(size=onerec_model.PROFILE_DIM
+                                  ).astype(np.float32)})
+    return cfg, params, reqs
+
+
+def test_continuous_matches_fixed_reference(slot_setup):
+    cfg, params, reqs = slot_setup
+    out_f, st_f = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="fixed")).serve_requests(reqs)
+    out_c, st_c = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(reqs)
+    assert len(out_c) == len(reqs)
+    for a, b in zip(out_c, out_f):
+        np.testing.assert_array_equal(a, b)
+    assert st_c["slot_occupancy"] > 0
+    assert st_c["mode"] == "continuous" and st_f["mode"] == "fixed"
+
+
+def test_continuous_more_slots_than_batch(slot_setup):
+    """A bigger slot pool must not change results, only the schedule."""
+    cfg, params, reqs = slot_setup
+    base, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="fixed")).serve_requests(reqs)
+    wide, stats = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, n_slots=8, mode="continuous")).serve_requests(reqs)
+    for a, b in zip(wide, base):
+        np.testing.assert_array_equal(a, b)
+    assert stats["n_slots"] == 8.0
+
+
+def test_metrics_windowed_per_call(slot_setup):
+    """Seed bug: latencies accumulated across serve_requests calls,
+    contaminating the second call's mean/p99."""
+    cfg, params, reqs = slot_setup
+    eng = ServingEngine(params, cfg, EngineConfig(batch_size=4))
+    eng.serve_requests(reqs)                  # includes jit compiles (slow)
+    n_first = len(eng.metrics["latency_s"])
+    assert n_first == len(reqs)
+    _, stats = eng.serve_requests(reqs[:5])   # warm (fast)
+    assert len(eng.metrics["latency_s"]) == 5  # windowed, not accumulated
+    assert stats["n_requests"] == 5.0
+    # warm per-request latencies can't exceed the cold call's slowest
+    assert max(eng.metrics["latency_s"]) <= n_first * 100  # sanity bound
+
+
+def test_staggered_arrivals_honored(slot_setup):
+    """A request with a future ``arrival_s`` offset must not be admitted
+    early, and its latency must be measured from ITS arrival (review
+    regression: early admission back-dated latencies, even negative)."""
+    cfg, params, reqs = slot_setup
+    eng = ServingEngine(params, cfg, EngineConfig(batch_size=4))
+    eng.serve_requests(reqs[:4])              # warm the compile caches
+    staggered = [dict(reqs[0]), dict(reqs[1], arrival_s=0.5)]
+    _, stats = eng.serve_requests(staggered)
+    lat = eng.metrics["latency_s"]
+    assert all(l > 0 for l in lat)
+    # the late request was served after it arrived, not batched up front
+    assert stats["wall_s"] >= 0.5
+
+
+def test_uniform_lengths_still_work(slot_setup):
+    """Degenerate case: all histories equal (the seed engine's workload)."""
+    cfg, params, _ = slot_setup
+    rng = np.random.default_rng(3)
+    reqs = [{"tokens": rng.integers(0, 192, size=cfg.history_len *
+                                    cfg.n_codebooks).astype(np.int32),
+             "profile": rng.normal(size=onerec_model.PROFILE_DIM
+                                   ).astype(np.float32)}
+            for _ in range(6)]
+    out_c, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(reqs)
+    out_f, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="fixed")).serve_requests(reqs)
+    for a, b in zip(out_c, out_f):
+        np.testing.assert_array_equal(a, b)
+    assert all(o.shape == (cfg.decode_len,) for o in out_c)

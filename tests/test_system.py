@@ -14,6 +14,9 @@ from repro.models import onerec as onerec_model
 from repro.optim import OptimizerConfig, adamw_init, adamw_update
 from repro.serving import EngineConfig, ServingEngine
 
+# trains a model in the module fixture — excluded from the tier-1 subset
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained_onerec():
