@@ -2,7 +2,8 @@
 the continuous-batching slot engine.
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 64 \
-      [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged]
+      [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
+      [--prefix-cache [--prefix-rows 32]]
 """
 
 from __future__ import annotations
@@ -51,6 +52,11 @@ def main():
                     help="KV-slot pool size (0 => batch size)")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed history lengths")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="two-tier KV cache: content-addressed prefix "
+                         "reuse across requests (continuous mode)")
+    ap.add_argument("--prefix-rows", type=int, default=0,
+                    help="prefix-store arena rows (0 => 2x slots)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -60,13 +66,23 @@ def main():
     params = onerec_model.init_onerec(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=batch, use_fp8=args.fp8, mode=args.mode,
-        n_slots=args.slots))
+        n_slots=args.slots, prefix_cache=args.prefix_cache,
+        prefix_rows=args.prefix_rows))
     requests = build_requests(cfg, args.requests, batch, args.seed,
                               args.ragged)
     outs, stats = engine.serve_requests(requests)
     print(f"[serve] mode={args.mode} fp8={args.fp8} "
           f"requests={len(requests)} slots={int(stats['n_slots'])} "
           f"occupancy={stats['slot_occupancy']:.2f}")
+    if args.prefix_cache:
+        print(f"[serve] prefix cache: hit-rate "
+              f"{stats['prefix_hit_rate']:.2f} "
+              f"({int(stats['prefix_hits'])}/"
+              f"{int(stats['prefix_admissions'])}), "
+              f"saved {int(stats['prefix_tokens_saved'])} prefill tokens, "
+              f"{int(stats['prefix_entries'])} entries / "
+              f"{int(stats['prefix_store_bytes'])} B stored, "
+              f"peak pinned {int(stats['prefix_bytes_pinned'])} B")
     print(f"[serve] per-request latency: "
           f"mean={stats['mean_latency_s']*1e3:.1f}ms "
           f"p50={stats['p50_latency_s']*1e3:.1f}ms "

@@ -189,6 +189,7 @@ def apply_attention(
     cache_index: Optional[jax.Array] = None,
     fill_cache: bool = False,
     lengths: Optional[jax.Array] = None,
+    starts: Optional[jax.Array] = None,
     norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """One attention layer.
@@ -197,6 +198,12 @@ def apply_attention(
       * ``cache=None``                — training / scoring forward.
       * ``cache, fill_cache=True``    — prefill: runs the full forward AND
         writes the (window-truncated) K/V into the cache.
+      * ``cache, fill_cache=True, starts`` — RESUME prefill: ``x`` holds
+        only the suffix of each row's sequence; row i's token j sits at
+        absolute position ``starts[i] + j``.  New K/V land at those cache
+        positions and the queries attend over the WHOLE cache — including
+        the prefix rows written by an earlier prefill (or copied in from a
+        prefix store) — with per-row causal masking on stored positions.
       * ``cache, fill_cache=False``   — decode: ``x`` is (B, 1, D),
         ``cache_index`` is the absolute position of the new token.
 
@@ -212,7 +219,10 @@ def apply_attention(
     B, T, _ = x.shape
     H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
     if positions is None:
-        if cache is not None and not fill_cache and lengths is not None:
+        if cache is not None and fill_cache and starts is not None:
+            positions = starts[:, None].astype(jnp.int32) \
+                + jnp.arange(T, dtype=jnp.int32)[None, :]   # (B, T) resume
+        elif cache is not None and not fill_cache and lengths is not None:
             positions = lengths[:, None].astype(jnp.int32)  # per-slot rope
         else:
             positions = jnp.arange(T, dtype=jnp.int32)
@@ -232,7 +242,43 @@ def apply_attention(
     v = constrain(v, ("batch", "seq", "kv_heads", None))
 
     new_cache = None
-    if cache is not None and not fill_cache:
+    if cache is not None and fill_cache and starts is not None:
+        # ---- resume prefill: suffix fill at per-row offsets ----
+        if cache["pos"].ndim != 2:
+            raise ValueError("resume prefill requires a per-slot cache")
+        if spec.window:
+            raise ValueError("resume prefill requires full attention")
+        S = cache["k"].shape[1]
+        pos2d = positions.astype(jnp.int32)              # (B, T) absolute
+        end = (starts.astype(jnp.int32)
+               + (lengths.astype(jnp.int32) if lengths is not None
+                  else jnp.full((B,), T, jnp.int32)))    # (B,)
+        rows = jnp.arange(B)[:, None]
+        # padded tail positions (j >= suffix length) index out of bounds and
+        # are DROPPED by the scatter — nothing past a row's real suffix ever
+        # lands in its cache, so no wrap/clobber of the stored prefix
+        widx = jnp.where(pos2d < end[:, None], pos2d, S)
+        ck = cache["k"].at[rows, widx].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[rows, widx].set(
+            v.astype(cache["v"].dtype), mode="drop")
+        cpos = cache["pos"].at[rows, widx].set(pos2d, mode="drop")
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+        ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+        cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+        if ck.dtype != q.dtype:
+            ck = ck.astype(q.dtype)
+            cv = cv.astype(q.dtype)
+        # queries attend over the whole cache: stored prefix + new suffix
+        G = H // K
+        qh = q.reshape(B, T, K, G, hd)
+        scores = _gqa_scores(qh, ck, spec.scale)          # (B,K,G,T,S)
+        valid = (cpos[:, None, :] >= 0) \
+            & (cpos[:, None, :] <= pos2d[:, :, None])     # (B,T,S)
+        probs = _masked_softmax(scores, valid[:, None, None])
+        out = _gqa_combine(probs, cv).reshape(B, T, H * hd)
+    elif cache is not None and not fill_cache:
         # ---- decode: write the new token, attend over the cache ----
         S = cache["k"].shape[1]
         per_slot = cache["pos"].ndim == 2

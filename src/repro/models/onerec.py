@@ -49,13 +49,23 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
             *, cache: Optional[dict] = None,
             cache_index: Optional[jax.Array] = None,
             fill_cache: bool = False,
-            lengths: Optional[jax.Array] = None):
+            lengths: Optional[jax.Array] = None,
+            starts: Optional[jax.Array] = None):
     """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM)."""
     if cache is not None and not fill_cache:
         # decode: single new token, profile already in the cache
         return tfm.forward(params["backbone"], batch["tokens"],
                            cfg.transformer, cache=cache,
                            cache_index=cache_index, lengths=lengths)
+    if starts is not None and fill_cache:
+        # resume prefill: suffix tokens only — the profile token (and the
+        # cached history prefix) already occupy positions 0 .. starts[i]-1
+        embeds = tfm.embed_tokens(params["backbone"], batch["tokens"],
+                                  cfg.transformer)
+        return tfm.forward(params["backbone"], batch["tokens"],
+                           cfg.transformer, inputs_embeds=embeds,
+                           cache=cache, fill_cache=True, lengths=lengths,
+                           starts=starts)
     embeds = _embed_with_profile(params, batch["tokens"], batch["profile"], cfg)
     return tfm.forward(params["backbone"], batch["tokens"], cfg.transformer,
                        inputs_embeds=embeds, cache=cache,
@@ -112,7 +122,8 @@ def decode_step(params, tokens, cfg: OneRecConfig, cache: dict,
 
 
 def prefill_into_slots(params, batch, cfg: OneRecConfig, cache: dict,
-                       lengths: jax.Array):
+                       lengths: jax.Array,
+                       starts: Optional[jax.Array] = None):
     """Ragged prefill into a per-slot cache.
 
     ``batch["tokens"]`` is right-padded to a common T; ``lengths`` (B,) gives
@@ -121,10 +132,22 @@ def prefill_into_slots(params, batch, cfg: OneRecConfig, cache: dict,
     (``lengths[i] + 1`` valid positions); padded positions are stored
     masked-out (pos = -1).  Returns each row's OWN last-position logits
     (B, V) — not the padded tail — plus the filled cache.
+
+    With ``starts`` (B,) this becomes RESUME prefill: ``batch["tokens"]``
+    holds only each row's history SUFFIX (``lengths`` counts suffix tokens),
+    written at absolute positions ``starts[i] + j`` into a cache whose rows
+    already hold the profile token + prefix K/V (positions 0..starts[i]-1,
+    e.g. copied in from the prefix store).  No profile embedding is added.
     """
-    seq_lens = lengths.astype(jnp.int32) + 1  # + profile prefix token
-    logits, new_cache = forward(params, batch, cfg, cache=cache,
-                                fill_cache=True, lengths=seq_lens)
+    if starts is None:
+        seq_lens = lengths.astype(jnp.int32) + 1  # + profile prefix token
+        logits, new_cache = forward(params, batch, cfg, cache=cache,
+                                    fill_cache=True, lengths=seq_lens)
+    else:
+        seq_lens = lengths.astype(jnp.int32)      # suffix tokens only
+        logits, new_cache = forward(params, batch, cfg, cache=cache,
+                                    fill_cache=True, lengths=seq_lens,
+                                    starts=starts.astype(jnp.int32))
     last = jnp.take_along_axis(
         logits, (seq_lens - 1)[:, None, None], axis=1)[:, 0]
     return last, new_cache

@@ -151,13 +151,13 @@ def init_transformer(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
 
 def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
                  kind: LayerKind, positions, cache_lp, cache_index,
-                 fill_cache: bool, lengths=None):
+                 fill_cache: bool, lengths=None, starts=None):
     h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
                       zero_centered=cfg.zero_centered_norm)
     attn_out, new_cache = apply_attention(
         lp["attn"], h, attn_spec_for(cfg, kind), positions=positions,
         cache=cache_lp, cache_index=cache_index, fill_cache=fill_cache,
-        lengths=lengths, norm_eps=cfg.norm_eps)
+        lengths=lengths, starts=starts, norm_eps=cfg.norm_eps)
     if cfg.use_post_norm:
         attn_out = rmsnorm_apply(lp["post_attn_norm"], attn_out,
                                  eps=cfg.norm_eps,
@@ -181,7 +181,8 @@ def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
 
 def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
                  spec: StackSpec, positions, cache_stack, cache_index,
-                 fill_cache: bool, unroll: bool = False, lengths=None):
+                 fill_cache: bool, unroll: bool = False, lengths=None,
+                 starts=None):
     """scan over the stacked periods of one homogeneous stack."""
 
     def body(carry, xs):
@@ -192,7 +193,8 @@ def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
             key = f"p{pi}"
             c_lp = cache_all.get(key) if cache_all else None
             h, nc = _apply_layer(lp_all[key], h, cfg, kind, positions,
-                                 c_lp, cache_index, fill_cache, lengths)
+                                 c_lp, cache_index, fill_cache, lengths,
+                                 starts)
             # layer-boundary residual sharding: no-op under the base rules;
             # under TRAIN_RULES_SP this seq-shards the saved activations
             h = constrain(h, ("batch", "act_seq", "embed"))
@@ -250,12 +252,16 @@ def forward(
     inputs_embeds: Optional[jax.Array] = None,
     unroll_layers: bool = False,
     lengths: Optional[jax.Array] = None,
+    starts: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """tokens (B, T) -> (logits (B, T, V) f32, new_cache).
 
     ``lengths`` (B,) engages the per-slot length-masked cache path (see
     ``layers.attention``): per-row true sequence lengths on prefill, per-row
-    absolute write indices on decode.
+    absolute write indices on decode.  ``starts`` (B,) with
+    ``fill_cache=True`` engages RESUME prefill: ``tokens`` are each row's
+    suffix only, written at absolute positions ``starts[i] + j`` while
+    attending over the K/V already stored in that row's cache.
     """
     if inputs_embeds is not None:
         x = constrain(inputs_embeds.astype(compute_dtype),
@@ -265,7 +271,10 @@ def forward(
     stats_tap("embed_out", x)
     T = x.shape[1]
     if positions is None:
-        if cache is not None and not fill_cache and lengths is not None:
+        if cache is not None and fill_cache and starts is not None:
+            positions = (starts[:, None].astype(jnp.int32)
+                         + jnp.arange(T, dtype=jnp.int32)[None, :])
+        elif cache is not None and not fill_cache and lengths is not None:
             positions = lengths[:, None].astype(jnp.int32)  # per-row rope
         elif cache is not None and not fill_cache and cache_index is not None:
             positions = cache_index[None] if cache_index.ndim == 0 \
@@ -279,7 +288,8 @@ def forward(
         c_stack = cache["stacks"][key] if cache is not None else None
         x, nc = _apply_stack(params["stacks"][key], x, cfg, spec, positions,
                              c_stack, cache_index, fill_cache,
-                             unroll=unroll_layers, lengths=lengths)
+                             unroll=unroll_layers, lengths=lengths,
+                             starts=starts)
         if new_cache is not None:
             new_cache["stacks"][key] = nc
     x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,

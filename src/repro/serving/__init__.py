@@ -1,40 +1,54 @@
-"""Continuous-batching serving subsystem (paper §5.2 infrastructure).
+"""Continuous-batching serving subsystem (paper §5.2 infrastructure) with a
+two-tier KV cache.
 
-Architecture — a request flows queue -> scheduler -> slots -> executor:
+Architecture — a request flows queue -> scheduler -> slots -> executor;
+repeat traffic short-circuits prefill through the prefix store:
 
     requests ──> FIFO queue ──> scheduler ──────────────┐
-                                 │ join (ragged prefill) │ retire
-                                 ▼                       ▼
-                          SlotPool (kv_cache.py)    completions
-                     fixed pool of per-request      (per-request
-                     KV-cache slots: alloc/free,     latency)
-                     per-slot sequence lengths
-                                 │ slot ids + lengths
-                                 ▼
-                        PhaseExecutor (executor.py)
+                                 │ admission splits      │ retire
+                                 │ cached-prefix+suffix  ▼
+                                 ▼                  completions
+      PrefixStore <──lookup── SlotPool              (per-request
+      (kv_cache.py, tier 2)  (kv_cache.py, tier 1)   latency)
+      hash(profile⊕prefix)   fixed pool of per-
+      -> arena row; ref-     request KV-cache slots
+      counted, LRU-evicted   │ slot ids + lengths
+             │ arena rows    ▼
+             └────────> PhaseExecutor (executor.py)
                     compiled phases over the DONATED
-                    device pool: prefill-insert /
+                    device pool + prefix arena:
+                    prefill-insert / resume-prefill /
+                    prefix copy (save+insert) /
                     length-masked decode / top-k select
                     (FP8 PTQ or BF16 via policy switch)
 
-* ``kv_cache.py`` — the slot pool: a fixed number of per-request KV-cache
-  rows with alloc/free and per-slot lengths.  Length-masked attention lets
-  slots at different histories and decode depths share one batch, so no
-  request ever waits for a straggler.
-* ``scheduler.py`` — ``ContinuousScheduler`` joins new prefills into free
-  slots and retires finished requests every step (no tail padding);
-  ``FixedBatchScheduler`` preserves the seed engine's padded fixed-batch
-  lock-step mode (the paper's batch-32 measurement setting).
-* ``executor.py`` — the jitted prefill/decode/select programs with donated
-  cache buffers; FP8-or-BF16 is a parameter-tree swap (§4.1 policy), so the
-  A/B is a one-flag switch.
+* ``kv_cache.py`` — both host-side tiers.  Tier 1, ``SlotPool``: a fixed
+  number of per-request KV-cache rows with alloc/free and per-slot lengths;
+  length-masked attention lets slots at different histories and decode
+  depths share one batch, so no request ever waits for a straggler.
+  Tier 2, ``PrefixStore``: a refcounted, content-addressed map from chained
+  ``hash(profile ⊕ item-aligned history prefix)`` digests to device arena
+  rows, LRU-evicted under a byte budget — repeat traffic's prefill becomes
+  a row copy plus a short suffix resume.
+* ``scheduler.py`` — ``ContinuousScheduler`` splits each request into
+  cached-prefix + suffix at admission, joins new prefills into free slots
+  and retires finished requests every step (no tail padding, one batched
+  slot-clear per step); ``FixedBatchScheduler`` preserves the seed engine's
+  padded fixed-batch lock-step mode (the paper's batch-32 setting).
+* ``executor.py`` — the jitted prefill/resume/decode/select and
+  pool<->arena copy programs with donated cache buffers; FP8-or-BF16 is a
+  parameter-tree swap (§4.1 policy), so the A/B is a one-flag switch.
 * ``engine.py`` — the ``ServingEngine`` facade: seed-compatible
-  ``serve_requests`` API, per-request p50/p99 latency and slot-occupancy
+  ``serve_requests`` API; per-request p50/p99 latency, slot-occupancy,
+  prefill-padding and prefix hit-rate / bytes-pinned / tokens-saved
   metrics, windowed per call.
+
+See ``docs/serving.md`` for the admission flow and eviction policy.
 """
 
 from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.executor import PhaseExecutor  # noqa: F401
-from repro.serving.kv_cache import SlotPool, SlotState  # noqa: F401
+from repro.serving.kv_cache import (PrefixEntry, PrefixStore,  # noqa: F401
+                                    SlotPool, SlotState, prefix_hash_chain)
 from repro.serving.scheduler import (ContinuousScheduler,  # noqa: F401
                                      FixedBatchScheduler, Request)

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.configs.base import OneRecConfig
 from repro.serving.executor import PhaseExecutor
-from repro.serving.kv_cache import SlotPool
+from repro.serving.kv_cache import PrefixStore, SlotPool
 from repro.serving.scheduler import (Completion, ContinuousScheduler,
                                      FixedBatchScheduler, Request)
 
@@ -38,6 +38,10 @@ class EngineConfig:
     n_slots: int = 0               # KV-slot pool size; 0 => batch_size
     prefill_bucket_min: int = 16   # smallest ragged-prefill length bucket
     max_prefill_groups: int = 2    # bucket programs per continuous join round
+    # -- tier-2 prefix cache (continuous mode only) --
+    prefix_cache: bool = False     # content-addressed cross-request KV reuse
+    prefix_rows: int = 0           # arena rows (cached prefixes); 0 => 2x slots
+    prefix_bytes_budget: int = 0   # LRU byte budget; 0 => all rows usable
 
 
 class ServingEngine:
@@ -47,10 +51,23 @@ class ServingEngine:
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.n_slots = engine_cfg.n_slots or engine_cfg.batch_size
+        prefix_rows = 0
+        if engine_cfg.prefix_cache:
+            if engine_cfg.mode != "continuous":
+                raise ValueError("prefix_cache requires continuous mode")
+            prefix_rows = engine_cfg.prefix_rows or 2 * self.n_slots
         self.executor = PhaseExecutor(
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
-            prefill_bucket_min=engine_cfg.prefill_bucket_min)
+            prefill_bucket_min=engine_cfg.prefill_bucket_min,
+            prefix_rows=prefix_rows)
+        # the store PERSISTS across serve_requests calls (repeat traffic
+        # spans calls); its hit/miss window resets per call like the
+        # executor counters
+        self.prefix_store = PrefixStore(
+            prefix_rows, self.executor.arena_row_bytes,
+            max_bytes=engine_cfg.prefix_bytes_budget,
+            n_codebooks=cfg.n_codebooks) if prefix_rows else None
         # windowed per serve_requests call (kept as an attribute for
         # compatibility with the seed engine's A/B scripts)
         self.metrics: Dict[str, List[float]] = {"latency_s": [],
@@ -61,7 +78,8 @@ class ServingEngine:
             return FixedBatchScheduler(self.executor, pool,
                                        self.ecfg.batch_size)
         return ContinuousScheduler(self.executor, pool,
-                                   self.ecfg.max_prefill_groups)
+                                   self.ecfg.max_prefill_groups,
+                                   prefix_store=self.prefix_store)
 
     # -- serving --------------------------------------------------------------
 
@@ -69,13 +87,18 @@ class ServingEngine:
                        ) -> Tuple[List[np.ndarray], Dict[str, float]]:
         """Serve ``requests`` (dicts with ragged "tokens" + "profile");
         returns per-request outputs in input order + per-call stats."""
+        if self.prefix_store is not None:
+            self.prefix_store.reset_window()   # entries persist, stats don't
         if not requests:
             return [], {"n_requests": 0.0, "wall_s": 0.0,
                         "throughput_rps": 0.0, "mean_latency_s": 0.0,
                         "p50_latency_s": 0.0, "p99_latency_s": 0.0,
                         "slot_occupancy": 0.0, "n_slots": float(self.n_slots),
                         "decode_steps": 0.0, "prefill_calls": 0.0,
-                        "mode": self.ecfg.mode}
+                        "mode": self.ecfg.mode, **self._prefix_stats(),
+                        "prefill_padded_rows": 0.0,
+                        "prefill_tokens": 0.0,
+                        "prefill_padded_token_frac": 0.0}
         max_hist = self.cfg.history_len * self.cfg.n_codebooks
         for i, r in enumerate(requests):
             if len(r["tokens"]) > max_hist:
@@ -112,10 +135,35 @@ class ServingEngine:
             "decode_steps": float(counters["decode_steps"]),
             "prefill_calls": float(counters["prefill_calls"]),
             "mode": self.ecfg.mode,
+            # prefill waste: batch padding (rows) + bucket padding (tokens)
+            "prefill_padded_rows": float(counters["prefill_padded_rows"]),
+            "prefill_tokens": float(counters["prefill_tokens_batched"]),
+            "prefill_padded_token_frac":
+                1.0 - counters["prefill_tokens_real"]
+                / counters["prefill_tokens_batched"]
+                if counters["prefill_tokens_batched"] else 0.0,
+            **self._prefix_stats(),
         }
         for k in counters:
             counters[k] = 0                          # window counters too
         return outputs, stats
+
+    def _prefix_stats(self) -> Dict[str, float]:
+        """Tier-2 prefix-store metrics (zeros when the cache is disabled)."""
+        s = self.prefix_store
+        if s is None:
+            return {"prefix_hit_rate": 0.0, "prefix_hits": 0.0,
+                    "prefix_admissions": 0.0, "prefix_tokens_saved": 0.0,
+                    "prefix_entries": 0.0, "prefix_evictions": 0.0,
+                    "prefix_store_bytes": 0.0, "prefix_bytes_pinned": 0.0}
+        return {"prefix_hit_rate": s.hit_rate,
+                "prefix_hits": float(s.hits),
+                "prefix_admissions": float(s.admissions),
+                "prefix_tokens_saved": float(s.tokens_saved),
+                "prefix_entries": float(s.n_entries),
+                "prefix_evictions": float(s.evictions),
+                "prefix_store_bytes": float(s.bytes_used),
+                "prefix_bytes_pinned": float(s.peak_bytes_pinned)}
 
     def generate_batch(self, tokens: np.ndarray, profile: np.ndarray
                        ) -> np.ndarray:

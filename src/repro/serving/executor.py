@@ -1,6 +1,6 @@
 """Compiled-phase executor: the jitted programs behind the serving engine.
 
-Three programs, mirroring the paper's one-graph-per-phase design (§5.2):
+Core programs, mirroring the paper's one-graph-per-phase design (§5.2):
 
   * ``prefill_insert`` — ragged prefill of a join group: runs the profile +
     history forward for ``Bp`` new requests (right-padded to a shared length
@@ -10,11 +10,27 @@ Three programs, mirroring the paper's one-graph-per-phase design (§5.2):
   * ``decode`` — one token for every slot in the pool at its own absolute
     index (length-masked attention), donated cache in / cache out.
   * ``select`` — top-k over the logits (RadixTopK kernel or ``lax.top_k``).
+  * ``free_slots`` — one vectorized pos-clear over a batch of retired slots
+    (one dispatch per engine step, not one per request).
+
+Prefix-store programs (tier 2 of the KV cache, ``prefix_rows > 0``): the
+executor also owns a device ARENA — ``prefix_rows`` extra cache rows with
+the same layout as the pool, indexed by the host-side
+``kv_cache.PrefixStore`` — plus three copy/compute programs:
+
+  * ``prefix_save`` — gather freshly prefilled pool rows into arena rows
+    (admitting prefixes to the store),
+  * ``prefix_copy_insert`` — scatter stored arena rows into target pool
+    slots, masking positions past each prefix's length,
+  * ``resume_prefill`` — ragged prefill of only the UNCACHED suffix of each
+    request, starting at per-row nonzero offsets and attending over the
+    prefix K/V already sitting in the slot.  This is the program that turns
+    repeat traffic's prefill FLOPs into a row copy.
 
 Quantization (FP8 PTQ vs BF16 baseline) is a parameter-tree swap via the
 policy switch — the programs are precision-agnostic, exactly as the paper's
-unified serving graph is.  The executor OWNS the device-side pool tree;
-schedulers only ever see slot ids and logits.
+unified serving graph is.  The executor OWNS the device-side pool and arena
+trees; schedulers only ever see slot ids, arena row ids, and logits.
 """
 
 from __future__ import annotations
@@ -49,17 +65,25 @@ class PhaseExecutor:
     def __init__(self, params, cfg: OneRecConfig, *, n_slots: int,
                  use_fp8: bool = True, topk: int = 8,
                  use_radix_topk: bool = False,
-                 prefill_bucket_min: int = 16):
+                 prefill_bucket_min: int = 16,
+                 prefix_rows: int = 0):
         self.cfg = cfg
         self.n_slots = n_slots
         self.topk = topk
         self.prefill_bucket_min = prefill_bucket_min
+        self.prefix_rows = prefix_rows
         policy = PAPER_POLICY if use_fp8 else BASELINE_POLICY
         self.params = quantize_params(params, policy)
         self.cache = onerec_model.init_slot_cache(cfg, n_slots)
+        # tier-2 arena: prefix-store rows, same per-row layout as the pool
+        self.arena = (onerec_model.init_slot_cache(cfg, prefix_rows)
+                      if prefix_rows > 0 else None)
         self.counters: Dict[str, int] = {"prefill_calls": 0,
+                                         "resume_calls": 0,
                                          "decode_steps": 0,
-                                         "prefill_padded_rows": 0}
+                                         "prefill_padded_rows": 0,
+                                         "prefill_tokens_batched": 0,
+                                         "prefill_tokens_real": 0}
 
         if use_radix_topk:
             from repro.kernels.radix_topk import radix_topk
@@ -91,24 +115,95 @@ class PhaseExecutor:
             return topk_fn(logits, topk)
 
         @partial(jax.jit, donate_argnums=(0,))
-        def clear_slot_fn(pool, slot):
-            # mark every position of one slot row empty (pos = -1) so a
-            # freed row reads exactly like a virgin one: its dummy decodes
-            # attend to nothing instead of stale K/V, keeping pool state —
-            # and therefore MoE capacity interaction — independent of
-            # serving history
+        def clear_slots_fn(pool, slots):
+            # mark every position of a BATCH of slot rows empty (pos = -1)
+            # so freed rows read exactly like virgin ones: their dummy
+            # decodes attend to nothing instead of stale K/V, keeping pool
+            # state — and therefore MoE capacity interaction — independent
+            # of serving history.  One dispatch retires a whole engine
+            # step's completions (duplicate padded ids are benign).
             def walk(tree):
                 if "pos" in tree:
-                    return {**tree, "pos": tree["pos"].at[:, slot].set(-1)}
+                    return {**tree, "pos": tree["pos"].at[:, slots].set(-1)}
                 return {k: walk(v) for k, v in tree.items()}
             return walk(pool)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def resume_prefill_fn(params, pool, tokens, lengths, starts, slots):
+            # gather the target rows (they already hold profile + prefix
+            # K/V from prefix_copy_insert), run the suffix-only ragged
+            # forward at per-row offsets, and scatter the rows back
+            fresh = jax.tree_util.tree_map(lambda p: p[:, slots], pool)
+            last, filled = onerec_model.prefill_into_slots(
+                params, {"tokens": tokens}, cfg, fresh, lengths,
+                starts=starts)
+            pool = jax.tree_util.tree_map(
+                lambda p, f: p.at[:, slots].set(f.astype(p.dtype)),
+                pool, filled)
+            return last, pool
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def prefix_copy_insert_fn(pool, arena, rows, slots, lengths):
+            # scatter stored arena rows into target pool slots; positions at
+            # or past each prefix's length are masked empty so stale
+            # occupancy beyond the advertised prefix can never be attended
+            def walk(p, a):
+                if "pos" in p:
+                    picked = a["pos"][:, rows]
+                    keep = (picked >= 0) & (picked < lengths[None, :, None])
+                    return {
+                        "k": p["k"].at[:, slots].set(
+                            a["k"][:, rows].astype(p["k"].dtype)),
+                        "v": p["v"].at[:, slots].set(
+                            a["v"][:, rows].astype(p["v"].dtype)),
+                        "pos": p["pos"].at[:, slots].set(
+                            jnp.where(keep, picked, -1)),
+                    }
+                return {k: walk(p[k], a[k]) for k in p}
+            return walk(pool, arena)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def prefix_save_fn(arena, pool, rows, slots):
+            # gather freshly prefilled pool rows into arena rows (wholesale
+            # — restore masks to the entry's length, so a row may safely
+            # carry more valid positions than the prefix it advertises)
+            return jax.tree_util.tree_map(
+                lambda a, p: a.at[:, rows].set(p[:, slots].astype(a.dtype)),
+                arena, pool)
 
         self._prefill_insert = prefill_insert_fn
         self._decode = decode_fn
         self._select = select_fn
-        self._clear_slot = clear_slot_fn
+        self._clear_slots = clear_slots_fn
+        self._resume_prefill = resume_prefill_fn
+        self._prefix_copy_insert = prefix_copy_insert_fn
+        self._prefix_save = prefix_save_fn
 
     # -- phase entry points (host-side padding/bucketing) ---------------------
+
+    def _pad_group(self, tokens_list: List[np.ndarray]
+                   ) -> Tuple[np.ndarray, np.ndarray, List[int]]:
+        """Shared prefill bucketing: right-pad the group to a length bucket
+        and the batch to a power of two by DUPLICATING the last request.
+        Returns (tokens (b_bucket, t_bucket), lengths (b_bucket,), source
+        row per padded row) and updates the prefill counters — the ONE
+        place the full-prefill and resume-prefill shape contracts live."""
+        n = len(tokens_list)
+        lens = [len(t) for t in tokens_list]
+        t_bucket = bucket_length(max(lens), self.prefill_bucket_min)
+        t_bucket = min(t_bucket, self.cfg.history_len * self.cfg.n_codebooks)
+        b_bucket = bucket_length(n, 1)
+        tok = np.zeros((b_bucket, t_bucket), np.int32)
+        lengths = np.zeros((b_bucket,), np.int32)
+        src = [min(i, n - 1) for i in range(b_bucket)]
+        for i, j in enumerate(src):
+            tok[i, :lens[j]] = tokens_list[j]
+            lengths[i] = lens[j]
+        self.counters["prefill_calls"] += 1
+        self.counters["prefill_padded_rows"] += b_bucket - n
+        self.counters["prefill_tokens_batched"] += b_bucket * t_bucket
+        self.counters["prefill_tokens_real"] += sum(lens)
+        return tok, lengths, src
 
     def prefill_insert(self, tokens_list: List[np.ndarray],
                        profiles: List[np.ndarray], slots: List[int]
@@ -124,27 +219,70 @@ class PhaseExecutor:
         the bucket shape here means downstream ``select`` compiles once per
         power-of-two bucket, not once per join-group size.
         """
-        n = len(tokens_list)
-        lens = [len(t) for t in tokens_list]
-        t_bucket = bucket_length(max(lens), self.prefill_bucket_min)
-        t_bucket = min(t_bucket, self.cfg.history_len * self.cfg.n_codebooks)
-        b_bucket = bucket_length(n, 1)
-        tok = np.zeros((b_bucket, t_bucket), np.int32)
-        prof = np.zeros((b_bucket, profiles[0].shape[-1]), np.float32)
-        lengths = np.zeros((b_bucket,), np.int32)
-        slot_ids = np.zeros((b_bucket,), np.int32)
-        for i in range(b_bucket):
-            j = min(i, n - 1)  # batch padding duplicates the last request
-            tok[i, :lens[j]] = tokens_list[j]
-            prof[i] = profiles[j]
-            lengths[i] = lens[j]
-            slot_ids[i] = slots[j]
+        tok, lengths, src = self._pad_group(tokens_list)
+        prof = np.stack([profiles[j] for j in src]).astype(np.float32)
+        slot_ids = np.asarray([slots[j] for j in src], np.int32)
         logits, self.cache = self._prefill_insert(
             self.params, self.cache, jnp.asarray(tok), jnp.asarray(prof),
             jnp.asarray(lengths), jnp.asarray(slot_ids))
-        self.counters["prefill_calls"] += 1
-        self.counters["prefill_padded_rows"] += b_bucket - n
         return logits
+
+    def resume_prefill(self, tokens_list: List[np.ndarray],
+                       slots: List[int], starts: List[int]) -> jax.Array:
+        """Prefill only the uncached SUFFIX of a join group.
+
+        ``tokens_list[i]`` holds request i's history tokens PAST its cached
+        prefix; ``starts[i]`` is the absolute cache position of the first
+        suffix token (= prefix length in positions, profile included).  The
+        target slots must already hold the prefix K/V (``prefix_copy_insert``).
+        Same bucketing/padding contract as ``prefill_insert``; returns
+        full-bucket next-token logits.
+        """
+        tok, lengths, src = self._pad_group(tokens_list)
+        start_arr = np.asarray([starts[j] for j in src], np.int32)
+        slot_ids = np.asarray([slots[j] for j in src], np.int32)
+        logits, self.cache = self._resume_prefill(
+            self.params, self.cache, jnp.asarray(tok), jnp.asarray(lengths),
+            jnp.asarray(start_arr), jnp.asarray(slot_ids))
+        self.counters["resume_calls"] += 1
+        return logits
+
+    # -- prefix-store (tier 2) copies ----------------------------------------
+
+    @staticmethod
+    def _pad_ids(ids: List[int]) -> np.ndarray:
+        """Bucket an id list to a power-of-two length by duplicating the
+        last id (duplicate scatter/gather rows carry identical data)."""
+        b = bucket_length(len(ids), 1)
+        return np.asarray(ids + [ids[-1]] * (b - len(ids)), np.int32)
+
+    def prefix_copy_insert(self, arena_rows: List[int], slots: List[int],
+                           lengths: List[int]) -> None:
+        """Scatter stored prefix rows into target pool slots.
+
+        ``lengths[i]`` is prefix i's occupancy in positions (profile +
+        history tokens); stored positions at or past it are masked empty.
+        """
+        assert self.arena is not None, "executor built without prefix_rows"
+        self.cache = self._prefix_copy_insert(
+            self.cache, self.arena, self._pad_ids(arena_rows),
+            self._pad_ids(slots), self._pad_ids(lengths))
+
+    def prefix_save(self, slots: List[int], arena_rows: List[int]) -> None:
+        """Copy freshly prefilled pool rows into arena rows (store admit)."""
+        assert self.arena is not None, "executor built without prefix_rows"
+        self.arena = self._prefix_save(
+            self.arena, self.cache, self._pad_ids(arena_rows),
+            self._pad_ids(slots))
+
+    @property
+    def arena_row_bytes(self) -> int:
+        """Device bytes one arena row (= one cached prefix) occupies."""
+        if self.arena is None:
+            return 0
+        total = sum(leaf.nbytes
+                    for leaf in jax.tree_util.tree_leaves(self.arena))
+        return total // self.prefix_rows
 
     def decode(self, tokens: np.ndarray, lengths: np.ndarray) -> jax.Array:
         """One decode step over the whole pool: tokens (N, 1) at per-slot
@@ -166,7 +304,16 @@ class PhaseExecutor:
         vals, ids = self._select(logits)
         return np.asarray(vals), np.asarray(ids)
 
+    def free_slots(self, slots: List[int]) -> None:
+        """Wipe a batch of retired slots' position occupancy in ONE pos-only
+        scatter program — see ``decode`` for why freed rows must read
+        virgin.  The id list is padded to a power-of-two bucket (duplicates
+        are benign), so retiring several requests in one engine step costs
+        one dispatch, not one per slot."""
+        if not slots:
+            return
+        self.cache = self._clear_slots(self.cache, self._pad_ids(list(slots)))
+
     def free_slot(self, slot: int) -> None:
-        """Wipe a retired slot's position occupancy (cheap pos-only
-        scatter) — see ``decode`` for why freed rows must read virgin."""
-        self.cache = self._clear_slot(self.cache, jnp.int32(slot))
+        """Single-slot convenience wrapper over ``free_slots``."""
+        self.free_slots([slot])

@@ -1,19 +1,36 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""Two-tier KV cache: the active slot pool + the content-addressed prefix
+store.
 
-The device-side cache is a fixed pool of ``n_slots`` per-request rows (the
-batch axis of the per-slot cache created by ``models.onerec.init_slot_cache``)
-— each row carries its own position occupancy, so requests at different
-history lengths and decode depths coexist in one batch.  This class is the
-HOST-side view of that pool: a free-list allocator plus per-slot sequence
-lengths and request bookkeeping.  The device tree itself lives inside the
-executor's donated buffers and is only ever touched by compiled programs
-(prefill-insert writes a whole row; decode appends one token per row).
+Tier 1 — ``SlotPool``: the device-side cache is a fixed pool of ``n_slots``
+per-request rows (the batch axis of the per-slot cache created by
+``models.onerec.init_slot_cache``) — each row carries its own position
+occupancy, so requests at different history lengths and decode depths
+coexist in one batch.  This class is the HOST-side view of that pool: a
+free-list allocator plus per-slot sequence lengths and request bookkeeping.
+The device tree itself lives inside the executor's donated buffers and is
+only ever touched by compiled programs (prefill-insert writes a whole row;
+decode appends one token per row).
+
+Tier 2 — ``PrefixStore``: recommendation traffic is dominated by users
+re-requesting with mostly-unchanged histories, so most prefill FLOPs would
+recompute K/V rows the pool produced minutes earlier.  The store is the
+HOST-side index over a second device tree (the executor's "arena", same row
+layout as the pool): a refcounted, content-addressed map from
+``hash(profile ⊕ history-token prefix)`` to an arena row holding that
+prefix's K/V.  Hashes chain at ITEM granularity (``n_codebooks`` tokens per
+block), so one O(L) pass yields the digest of every item-boundary prefix
+and lookup walks them longest-first.  Rows backing in-flight requests are
+pinned via refcounts; unpinned rows are LRU-evicted under a byte budget.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -80,3 +97,237 @@ class SlotPool:
         """Per-slot lengths, dense over the pool (``fill`` for free slots)."""
         return [self._slots[i].length if i in self._slots else fill
                 for i in range(self.n_slots)]
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: content-addressed prefix store
+# ---------------------------------------------------------------------------
+
+
+def prefix_hash_chain(profile: np.ndarray, tokens: np.ndarray,
+                      n_codebooks: int) -> Iterator[Tuple[int, str]]:
+    """Yield ``(n_tokens, digest)`` for every item-boundary prefix of
+    ``profile ⊕ tokens``, shortest first.
+
+    The digest chains block-by-block (one block = one item =
+    ``n_codebooks`` tokens), so computing every prefix hash of an
+    L-token history is one O(L) pass, and equal content always yields
+    equal digests — across requests, engines, and processes (blake2b,
+    not Python's salted ``hash``).  Only FULL items participate: a
+    trailing partial item is never a cacheable boundary.
+    """
+    profile = np.ascontiguousarray(profile, np.float32)
+    tokens = np.ascontiguousarray(tokens, np.int32)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(b"profile:")
+    h.update(profile.tobytes())
+    for i in range(len(tokens) // n_codebooks):
+        h.update(b"item:")
+        h.update(tokens[i * n_codebooks:(i + 1) * n_codebooks].tobytes())
+        yield (i + 1) * n_codebooks, h.hexdigest()
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prefix: content digest -> arena row holding its K/V.
+
+    Because K/V rows are causal, the row is valid for EVERY item boundary
+    of its content, not just the full ``n_tokens`` — ``digests`` keeps the
+    whole boundary chain so shorter prefixes of the same content can hit
+    this row too (the restore masks positions past the matched boundary).
+    """
+
+    key: str                    # chained content digest (full boundary)
+    row: int                    # arena row index backing this prefix
+    n_tokens: int               # history tokens covered (item-aligned)
+    refcount: int = 0           # in-flight requests pinned on this row
+    digests: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+    @property
+    def length(self) -> int:
+        """Cache positions occupied: profile token + history tokens."""
+        return self.n_tokens + 1
+
+
+class PrefixStore:
+    """Refcounted, content-addressed, LRU-evicted index over arena rows.
+
+    Invariants (property-tested in ``tests/test_prefix_cache.py``):
+      * every live entry owns a distinct arena row in ``[0, n_rows)``;
+      * ``bytes_used <= max_bytes`` always;
+      * a pinned entry (``refcount > 0``) is never evicted — ``insert``
+        fails (returns None) rather than touch a pinned row;
+      * lookup/insert refresh recency; eviction takes the least-recently
+        used unpinned entry.
+
+    Hit/miss/saved-token stats are windowed: ``reset_window()`` zeroes them
+    while the entries (and their device rows) persist — the engine windows
+    per ``serve_requests`` call, matching its other counters.
+    """
+
+    def __init__(self, n_rows: int, row_bytes: int,
+                 max_bytes: int = 0, n_codebooks: int = 3):
+        if n_rows <= 0:
+            raise ValueError(f"n_rows must be positive, got {n_rows}")
+        self.n_rows = n_rows
+        self.row_bytes = row_bytes
+        self.max_bytes = max_bytes or n_rows * row_bytes
+        self.n_codebooks = n_codebooks
+        self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
+        # every item-boundary digest of every entry -> (entry key, boundary
+        # tokens); one arena row serves all prefixes of its content
+        self._index: Dict[str, Tuple[str, int]] = {}
+        self._free_rows: List[int] = list(range(n_rows - 1, -1, -1))
+        self.reset_window()
+
+    # -- windowed stats -------------------------------------------------------
+
+    def reset_window(self) -> None:
+        self.admissions = 0       # requests admitted to slots (denominator)
+        self.hits = 0             # ... of which reused a stored prefix
+        self.tokens_saved = 0     # history tokens served from the store
+        self.evictions = 0
+        self.insertions = 0
+        self.peak_bytes_pinned = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.admissions if self.admissions else 0.0
+
+    def note_admission(self, hit_tokens: Optional[int]) -> None:
+        """Count one admitted request against the hit-rate window
+        (``hit_tokens`` is the reused-prefix length, or None on a miss).
+        Kept separate from ``lookup_longest`` because the scheduler
+        re-plans un-admitted queue entries every round — only admissions
+        count."""
+        self.admissions += 1
+        if hit_tokens is not None:
+            self.hits += 1
+            self.tokens_saved += hit_tokens
+
+    # -- capacity views -------------------------------------------------------
+
+    @property
+    def n_entries(self) -> int:
+        return len(self._entries)
+
+    @property
+    def bytes_used(self) -> int:
+        return len(self._entries) * self.row_bytes
+
+    @property
+    def bytes_pinned(self) -> int:
+        return sum(1 for e in self._entries.values()
+                   if e.refcount > 0) * self.row_bytes
+
+    # -- lookup / pinning -----------------------------------------------------
+
+    def lookup_longest(self, profile: np.ndarray, tokens: np.ndarray,
+                       max_tokens: Optional[int] = None,
+                       chain: Optional[List[Tuple[int, str]]] = None
+                       ) -> Optional[Tuple[PrefixEntry, int]]:
+        """Longest stored prefix of ``profile ⊕ tokens`` (item-aligned,
+        ``<= max_tokens`` history tokens); None on miss, else
+        ``(entry, n_tokens)`` where ``n_tokens <= entry.n_tokens`` is the
+        matched boundary (the restore masks the row down to it).  A hit
+        refreshes the entry's recency; stats are counted at admission
+        (``note_admission``), not here.  ``chain`` short-circuits the
+        digest computation — content is immutable per request, so callers
+        that re-plan every round memoize it."""
+        limit = len(tokens) if max_tokens is None else max_tokens
+        if chain is None:
+            chain = prefix_hash_chain(profile, tokens, self.n_codebooks)
+        best: Optional[Tuple[str, int]] = None
+        for n_tok, digest in chain:
+            if n_tok > limit:
+                break
+            hit = self._index.get(digest)
+            if hit is not None:
+                best = hit               # chain is shortest-first: keep last
+        if best is None:
+            return None
+        entry = self._entries[best[0]]
+        self._entries.move_to_end(entry.key)
+        return entry, best[1]
+
+    def is_live(self, entry: PrefixEntry) -> bool:
+        """True while ``entry`` still owns its arena row (not evicted)."""
+        return self._entries.get(entry.key) is entry
+
+    def acquire(self, entry: PrefixEntry) -> None:
+        """Pin ``entry``'s row for an in-flight request."""
+        entry.refcount += 1
+        self.peak_bytes_pinned = max(self.peak_bytes_pinned,
+                                     self.bytes_pinned)
+
+    def release(self, entry: PrefixEntry) -> None:
+        if entry.refcount <= 0:
+            raise ValueError(f"release of unpinned prefix {entry.key}")
+        entry.refcount -= 1
+
+    # -- insertion / eviction -------------------------------------------------
+
+    def insert(self, profile: np.ndarray, tokens: np.ndarray,
+               n_tokens: int,
+               chain: Optional[List[Tuple[int, str]]] = None
+               ) -> Optional[PrefixEntry]:
+        """Admit the ``n_tokens``-token prefix of ``profile ⊕ tokens``.
+
+        Returns the new entry whose (caller-filled) arena row should
+        receive the K/V copy; None when the content is already stored
+        (recency refreshed) or when every row is pinned / over budget.
+        ``n_tokens`` must be item-aligned.
+        """
+        if n_tokens <= 0 or n_tokens % self.n_codebooks:
+            raise ValueError(f"n_tokens must be a positive multiple of "
+                             f"{self.n_codebooks}, got {n_tokens}")
+        if chain is None:
+            chain = prefix_hash_chain(profile, tokens, self.n_codebooks)
+        digests = [(n, d) for n, d in chain if n <= n_tokens]
+        if not digests or digests[-1][0] != n_tokens:
+            raise ValueError(f"n_tokens {n_tokens} exceeds the history "
+                             f"({len(tokens)} tokens)")
+        key = digests[-1][1]
+        covered = self._index.get(key)
+        if covered is not None:
+            # content already stored — either as its own entry or as a
+            # boundary of a longer entry's row; refresh the owner, don't
+            # burn a second arena row on duplicate K/V
+            self._entries.move_to_end(covered[0])
+            return None
+        row = self._take_row()
+        if row is None:
+            return None
+        entry = PrefixEntry(key=key, row=row, n_tokens=n_tokens,
+                            digests=digests)
+        self._entries[key] = entry
+        for n_tok, d in digests:   # the row serves ALL its item boundaries
+            # setdefault: a digest shared with an older live entry keeps its
+            # owner; eviction re-claims any shared digests for survivors, so
+            # _index always points at live entries covering the boundary
+            self._index.setdefault(d, (key, n_tok))
+        self.insertions += 1
+        return entry
+
+    def _take_row(self) -> Optional[int]:
+        budget_rows = min(self.n_rows, self.max_bytes // self.row_bytes)
+        if len(self._entries) < budget_rows and self._free_rows:
+            return self._free_rows.pop()
+        for key, entry in self._entries.items():     # front = LRU
+            if entry.refcount == 0:
+                del self._entries[key]
+                orphaned = [d for _, d in entry.digests
+                            if self._index.get(d, (None,))[0] == key]
+                for d in orphaned:
+                    del self._index[d]
+                if orphaned:
+                    # a surviving entry sharing a content prefix may still
+                    # cover the dropped boundaries — re-claim them so its
+                    # shorter prefixes keep hitting (bounded by
+                    # n_rows x boundaries, and evictions are host-rare)
+                    for k2, e2 in self._entries.items():
+                        for n_tok, d in e2.digests:
+                            self._index.setdefault(d, (k2, n_tok))
+                self.evictions += 1
+                return entry.row
+        return None                                  # everything pinned

@@ -27,7 +27,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.executor import PhaseExecutor, bucket_length
-from repro.serving.kv_cache import SlotPool, SlotState
+from repro.serving.kv_cache import (PrefixEntry, PrefixStore, SlotPool,
+                                    SlotState, prefix_hash_chain)
 
 
 @dataclasses.dataclass(eq=False)     # identity equality: queue.remove()
@@ -36,6 +37,9 @@ class Request:
     tokens: np.ndarray          # (L,) semantic-ID history
     profile: np.ndarray         # (PROFILE_DIM,)
     arrival_s: float = 0.0      # absolute perf_counter timestamp
+    # memoized prefix-digest chain (content is immutable, the scheduler
+    # re-plans every round — hash once, not once per round)
+    chain: Optional[List[Tuple[int, str]]] = None
 
 
 @dataclasses.dataclass
@@ -58,37 +62,101 @@ class ContinuousScheduler:
     then the most-populous other bucket among the first ``lookahead``
     arrived requests.  Near-uniform join groups prefill with almost no
     padding — the flexibility a slot pool has and a fixed batch does not.
+
+    With a ``prefix_store`` (the KV cache's tier 2) admission SPLITS each
+    request into ``cached-prefix + suffix``: the longest stored item-aligned
+    prefix of ``profile ⊕ history`` is copied into the slot from the device
+    arena (``prefix_copy_insert``) and only the suffix is prefilled
+    (``resume_prefill``).  Requests then group by (hit, SUFFIX-length
+    bucket) — a 190-token history with a 186-token cached prefix joins the
+    shortest bucket.  The store entry stays refcount-pinned until the
+    request retires; after prefill, each request's full item-aligned
+    history is offered back to the store (one batched row copy per group).
+    At least one item is always left to resume so the next-token logits
+    come from a live program, never from storage.
     """
 
     def __init__(self, executor: PhaseExecutor, pool: SlotPool,
-                 max_prefill_groups: int = 2, lookahead: int = 0):
+                 max_prefill_groups: int = 2, lookahead: int = 0,
+                 prefix_store: Optional[PrefixStore] = None):
         self.executor = executor
         self.pool = pool
         self.max_prefill_groups = max(1, max_prefill_groups)
         self.lookahead = lookahead or 4 * pool.n_slots
         self.decode_len = executor.cfg.decode_len
         self.occupancy: List[float] = []
+        self.store = prefix_store
+        self._slot_entry: Dict[int, PrefixEntry] = {}
 
     # -- step pieces ----------------------------------------------------------
 
-    def _record(self, slot: int, token: int,
-                done: List[Completion]) -> None:
+    def _record(self, slot: int, token: int, done: List[Completion],
+                freed: List[int]) -> None:
         state = self.pool[slot]
         state.generated.append(int(token))
         state.last_token = int(token)
         if len(state.generated) >= self.decode_len:
             final = self.pool.free(slot)
-            self.executor.free_slot(slot)
+            freed.append(slot)
+            entry = self._slot_entry.pop(slot, None)
+            if entry is not None:       # unpin the prefix backing this slot
+                self.store.release(entry)
             done.append(Completion(
                 rid=final.request_id,
                 item=np.asarray(final.generated, np.int32),
                 latency_s=time.perf_counter() - final.arrival_s))
 
-    def _bucket(self, r: Request) -> int:
-        return bucket_length(len(r.tokens), self.executor.prefill_bucket_min)
+    def _plan(self, r: Request) -> Optional[Tuple[PrefixEntry, int]]:
+        """Longest usable cached prefix for ``r`` as ``(entry, n_tokens)``
+        (always leaves >= 1 history token to resume, so next-token logits
+        come from a live program).  Re-planned every round: entries may be
+        evicted between rounds, and only pinned (admitted) entries are
+        stable."""
+        if self.store is None:
+            return None
+        if r.chain is None:
+            r.chain = list(prefix_hash_chain(r.profile, r.tokens,
+                                             self.store.n_codebooks))
+        return self.store.lookup_longest(r.profile, r.tokens,
+                                         max_tokens=len(r.tokens) - 1,
+                                         chain=r.chain)
+
+    def _bucket(self, r: Request,
+                plan: Optional[Tuple[PrefixEntry, int]]) -> Tuple[bool, int]:
+        eff = len(r.tokens) - (plan[1] if plan is not None else 0)
+        return (plan is not None,
+                bucket_length(eff, self.executor.prefill_bucket_min))
+
+    def _offer_to_store(self, group: List[Request], slots: List[int],
+                        plans: List[Optional[Tuple[PrefixEntry, int]]]
+                        ) -> None:
+        """Admit each request's full item-aligned history to the store
+        (one batched pool->arena row copy); dedup and pinned-full stores
+        are handled by ``insert`` returning None."""
+        pending: List[Tuple[int, PrefixEntry]] = []
+        for r, slot, plan in zip(group, slots, plans):
+            n_full = (len(r.tokens) // self.store.n_codebooks) \
+                * self.store.n_codebooks
+            # skip only when the matched boundary already covers every full
+            # item of r — a hit entry may DIVERGE from r past the boundary,
+            # so entry.n_tokens alone proves nothing about r's content
+            if n_full <= 0 or (plan is not None and n_full <= plan[1]):
+                continue
+            entry = self.store.insert(r.profile, r.tokens, n_full,
+                                      chain=r.chain)
+            if entry is not None:
+                pending.append((slot, entry))
+        # a later insert in this batch may have evicted an earlier one
+        # (store full, everything older pinned): drop dead entries so the
+        # batched scatter never writes one arena row from two slots
+        live = [(slot, e) for slot, e in pending if self.store.is_live(e)]
+        if live:
+            self.executor.prefix_save([s for s, _ in live],
+                                      [e.row for _, e in live])
 
     def _join(self, queue: deque, done: List[Completion]) -> None:
-        """Admit ARRIVED queued requests into free slots, by length bucket."""
+        """Admit ARRIVED queued requests into free slots, by (prefix-hit,
+        suffix-length bucket)."""
         free = self.pool.n_free
         if not free or not queue:
             return
@@ -97,38 +165,69 @@ class ContinuousScheduler:
                   if r.arrival_s <= now]
         if not window:
             return
-        by_bucket: Dict[int, List[Request]] = {}
+        plans = {id(r): self._plan(r) for r in window}
+        by_bucket: Dict[Tuple[bool, int], List[Request]] = {}
         for r in window:
-            by_bucket.setdefault(self._bucket(r), []).append(r)
+            by_bucket.setdefault(self._bucket(r, plans[id(r)]), []).append(r)
         # head's bucket first (no starvation), then the fullest others
-        head_b = self._bucket(window[0])
+        head_b = self._bucket(window[0], plans[id(window[0])])
         order = [head_b] + sorted((b for b in by_bucket if b != head_b),
                                   key=lambda b: -len(by_bucket[b]))
         joiners: List[Request] = []
-        groups: Dict[int, List[Request]] = {}
+        groups: Dict[Tuple[bool, int], List[Request]] = {}
         for b in order[:self.max_prefill_groups]:
             take = by_bucket[b][:free - len(joiners)]
             if take:
                 groups[b] = take
                 joiners += take
+        # pin every admitted hit NOW: this round's store inserts may evict
+        # any unpinned entry, and a plan must not go stale mid-round
+        for r in joiners:
+            plan = plans[id(r)]
+            if plan is not None:
+                self.store.acquire(plan[0])
+            if self.store is not None:
+                self.store.note_admission(plan[1] if plan else None)
         taken = {id(r) for r in joiners}
         if taken:  # one O(len(queue)) rotation, preserving order
             for _ in range(len(queue)):
                 r = queue.popleft()
                 if id(r) not in taken:
                     queue.append(r)
-        for group in groups.values():
+        for (is_hit, _), group in groups.items():
+            group_plans = [plans[id(r)] for r in group]
             slots = []
             for r in group:
                 slot = self.pool.alloc(SlotState(
                     request_id=r.rid, length=len(r.tokens) + 1,  # + profile
                     arrival_s=r.arrival_s))
                 slots.append(slot)
-            logits = self.executor.prefill_insert(
-                [r.tokens for r in group], [r.profile for r in group], slots)
+            if is_hit:
+                for slot, plan in zip(slots, group_plans):
+                    self._slot_entry[slot] = plan[0]  # release at retire
+                # matched boundary + profile token = resume offset; the
+                # restore masks the row down to it, so an entry longer
+                # than the match never leaks positions past the boundary
+                starts = [n_tok + 1 for _, n_tok in group_plans]
+                self.executor.prefix_copy_insert(
+                    [p.row for p, _ in group_plans], slots, starts)
+                logits = self.executor.resume_prefill(
+                    [r.tokens[n_tok:]
+                     for r, (_, n_tok) in zip(group, group_plans)],
+                    slots, starts)
+            else:
+                logits = self.executor.prefill_insert(
+                    [r.tokens for r in group],
+                    [r.profile for r in group], slots)
+            if self.store is not None:  # save BEFORE any retire can clear
+                self._offer_to_store(group, slots, group_plans)
             _, ids = self.executor.select(logits)   # full-bucket shape
+            freed: List[int] = []
             for slot, tok in zip(slots, ids[:len(slots), 0]):
-                self._record(slot, tok, done)
+                self._record(slot, tok, done, freed)
+            # clear before the NEXT group can reallocate a freed slot
+            # (reachable only when decode_len == 1: prefill completes)
+            self.executor.free_slots(freed)
 
     def _decode_step(self, done: List[Completion]) -> None:
         """One length-masked decode over the whole pool."""
@@ -142,9 +241,11 @@ class ContinuousScheduler:
         logits = self.executor.decode(tokens, lengths)
         _, ids = self.executor.select(logits)
         self.occupancy.append(pool.occupancy)
+        freed: List[int] = []
         for s in active:
             pool[s].length += 1          # the input token we just wrote
-            self._record(s, ids[s, 0], done)
+            self._record(s, ids[s, 0], done, freed)
+        self.executor.free_slots(freed)  # one clear program per step
 
     # -- main loop ------------------------------------------------------------
 
@@ -224,7 +325,8 @@ class FixedBatchScheduler:
                 done.append(Completion(
                     rid=r.rid, item=np.asarray(gen[row], np.int32),
                     latency_s=finish - r.arrival_s))
-            for s in set(slots):
+            retired = sorted(set(slots))
+            for s in retired:
                 self.pool.free(s)
-                self.executor.free_slot(s)
+            self.executor.free_slots(retired)   # one clear per batch
         return done

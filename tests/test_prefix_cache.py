@@ -1,0 +1,339 @@
+"""Two-tier KV cache: prefix-store hashing/refcount/eviction invariants,
+resume-prefill parity with full prefill, and engine-level cache-on/off
+token equality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.layers.attention import AttnSpec, apply_attention, init_attention, \
+    init_cache
+from repro.models import onerec as onerec_model
+from repro.serving import (EngineConfig, PrefixStore, ServingEngine,
+                           prefix_hash_chain)
+from repro.serving.executor import PhaseExecutor
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=40,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+NCB = 3  # codebooks per item
+
+
+def _prof(seed=0):
+    return np.random.default_rng(seed).normal(size=8).astype(np.float32)
+
+
+def _toks(n_items, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 100, size=n_items * NCB).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Hash chain
+# ---------------------------------------------------------------------------
+
+
+def test_hash_chain_stability_and_boundaries():
+    """Equal content -> equal digests (across calls); one digest per FULL
+    item; a longer history's chain extends the shorter's unchanged."""
+    prof, toks = _prof(), _toks(4)
+    a = list(prefix_hash_chain(prof, toks, NCB))
+    b = list(prefix_hash_chain(prof.copy(), toks.copy(), NCB))
+    assert a == b
+    assert [n for n, _ in a] == [3, 6, 9, 12]
+    # partial trailing item is not a boundary
+    c = list(prefix_hash_chain(prof, np.concatenate([toks, toks[:1]]), NCB))
+    assert c == a
+    # prefix property: extending the history never rewrites earlier digests
+    other = list(prefix_hash_chain(prof, _toks(6, seed=5), NCB))
+    assert [d for _, d in other[:4]] != [d for _, d in a]  # distinct content
+    ext = list(prefix_hash_chain(
+        prof, np.concatenate([toks, _toks(2, seed=9)]), NCB))
+    assert ext[:4] == a
+
+
+def test_hash_chain_discriminates_profile_and_tokens():
+    toks = _toks(3)
+    base = list(prefix_hash_chain(_prof(0), toks, NCB))
+    other_prof = list(prefix_hash_chain(_prof(1), toks, NCB))
+    assert [d for _, d in base] != [d for _, d in other_prof]
+    bent = toks.copy()
+    bent[0] += 1
+    other_tok = list(prefix_hash_chain(_prof(0), bent, NCB))
+    assert base[0][1] != other_tok[0][1]
+
+
+# ---------------------------------------------------------------------------
+# Store: refcounts, LRU eviction, byte budget
+# ---------------------------------------------------------------------------
+
+
+def test_store_insert_lookup_roundtrip():
+    store = PrefixStore(n_rows=4, row_bytes=100, n_codebooks=NCB)
+    prof, toks = _prof(), _toks(4)
+    entry = store.insert(prof, toks, 12)
+    assert entry is not None and 0 <= entry.row < 4
+    hit = store.lookup_longest(prof, toks)
+    assert hit is not None and hit[0] is entry and hit[1] == 12
+    # boundary index: shorter prefixes of the same content hit the same row
+    hit = store.lookup_longest(prof, toks, max_tokens=11)
+    assert hit is not None and hit[0] is entry and hit[1] == 9
+    # exact-duplicate insert dedups
+    assert store.insert(prof, toks, 12) is None
+    assert store.n_entries == 1
+
+
+def test_store_pinned_rows_never_evicted():
+    store = PrefixStore(n_rows=2, row_bytes=100, n_codebooks=NCB)
+    e0 = store.insert(_prof(0), _toks(2, seed=0), 6)
+    e1 = store.insert(_prof(1), _toks(2, seed=1), 6)
+    store.acquire(e0)
+    store.acquire(e1)
+    # full + everything pinned: insert must fail, not steal a row
+    assert store.insert(_prof(2), _toks(2, seed=2), 6) is None
+    store.release(e0)
+    e2 = store.insert(_prof(2), _toks(2, seed=2), 6)
+    assert e2 is not None and e2.row == e0.row       # LRU unpinned evicted
+    assert store.lookup_longest(_prof(0), _toks(2, seed=0)) is None
+    assert store.evictions == 1
+    with pytest.raises(ValueError):
+        store.release(e0)                            # already unpinned
+
+
+def test_store_eviction_keeps_shared_boundaries_alive():
+    """Evicting an entry must not orphan boundary digests a surviving
+    entry (sharing a content prefix) still covers; and content already
+    covered by a longer entry's boundary dedups instead of burning a row."""
+    toks = _toks(4)                      # items ABCD
+    short, prof = toks[:2 * NCB], _prof()
+
+    # dedup: content covered by a LONGER entry's boundary burns no row
+    store = PrefixStore(n_rows=2, row_bytes=100, n_codebooks=NCB)
+    assert store.insert(prof, toks, 4 * NCB) is not None      # ABCD
+    assert store.insert(prof, short, 2 * NCB) is None         # AB covered
+    assert store.n_entries == 1
+
+    # orphan re-claim: evict the OWNER of shared digests (AB, the LRU);
+    # the surviving ABCD row must keep serving the shared boundaries
+    store = PrefixStore(n_rows=2, row_bytes=100, n_codebooks=NCB)
+    assert store.insert(prof, short, 2 * NCB) is not None     # AB owns d1,d2
+    assert store.insert(prof, toks, 4 * NCB) is not None      # ABCD: d3,d4
+    assert store.insert(_prof(5), _toks(2, seed=5), 2 * NCB) is not None
+    assert store.evictions == 1                               # AB evicted
+    hit = store.lookup_longest(prof, short)   # AB served by ABCD's row
+    assert hit is not None and hit[1] == 2 * NCB
+    assert hit[0].n_tokens == 4 * NCB
+
+
+def test_store_is_live_tracks_same_batch_eviction():
+    """A second insert in one save batch can evict the first (full store,
+    nothing else unpinned); ``is_live`` is how the scheduler drops the
+    dead entry's pending row copy."""
+    store = PrefixStore(n_rows=1, row_bytes=10, n_codebooks=NCB)
+    a = store.insert(_prof(0), _toks(2, seed=0), 6)
+    b = store.insert(_prof(1), _toks(2, seed=1), 6)
+    assert a is not None and b is not None and a.row == b.row
+    assert not store.is_live(a) and store.is_live(b)
+
+
+def test_store_byte_budget_caps_rows():
+    store = PrefixStore(n_rows=4, row_bytes=100, max_bytes=250,
+                        n_codebooks=NCB)
+    for s in range(3):
+        store.insert(_prof(s), _toks(2, seed=s), 6)
+    assert store.n_entries == 2                      # 250 // 100 rows usable
+    assert store.bytes_used <= 250
+    assert store.evictions == 1
+
+
+@hypothesis.given(st.lists(st.tuples(st.sampled_from(["ins", "pin", "unpin"]),
+                                     st.integers(0, 7)), max_size=60))
+def test_store_invariants_under_random_ops(ops):
+    """Property: distinct live rows, bytes under budget, pinned entries
+    survive any op sequence."""
+    store = PrefixStore(n_rows=3, row_bytes=10, n_codebooks=NCB)
+    pins = {}
+    for op, s in ops:
+        if op == "ins":
+            store.insert(_prof(s), _toks(2, seed=s), 6)
+        else:
+            hit = store.lookup_longest(_prof(s), _toks(2, seed=s))
+            if hit is None:
+                continue
+            if op == "pin":
+                store.acquire(hit[0])
+                pins[hit[0].key] = pins.get(hit[0].key, 0) + 1
+            elif pins.get(hit[0].key):
+                store.release(hit[0])
+                pins[hit[0].key] -= 1
+        rows = [e.row for e in store._entries.values()]
+        assert len(rows) == len(set(rows))           # no row aliasing
+        assert store.bytes_used <= store.max_bytes
+        for key, n in pins.items():                  # pinned => still live
+            if n:
+                assert key in store._entries
+                assert store._entries[key].refcount >= n
+
+
+# ---------------------------------------------------------------------------
+# Resume prefill vs full prefill
+# ---------------------------------------------------------------------------
+
+
+def test_attention_resume_fill_matches_full_fill():
+    """Filling [0..L) in one shot == filling [0..p) then resuming [p..L):
+    identical stored K/V and matching outputs at the suffix positions."""
+    spec = AttnSpec(n_heads=4, n_kv_heads=2, head_dim=8)
+    params = init_attention(jax.random.PRNGKey(0), 32, spec)
+    B, S, L = 3, 16, 12
+    lengths = np.array([5, 9, 12])
+    starts = np.array([2, 4, 6])
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, L, 32), jnp.float32)
+
+    cache = init_cache(B, S, spec, dtype=jnp.float32, per_slot=True)
+    out_full, cache_full = apply_attention(
+        params, x, spec, positions=jnp.arange(L), cache=cache,
+        fill_cache=True, lengths=jnp.asarray(lengths))
+
+    cache = init_cache(B, S, spec, dtype=jnp.float32, per_slot=True)
+    _, cache_pre = apply_attention(
+        params, x[:, :int(starts.max())], spec,
+        positions=jnp.arange(int(starts.max())), cache=cache,
+        fill_cache=True, lengths=jnp.asarray(starts))
+    suf = lengths - starts
+    T = int(suf.max())
+    xs = np.zeros((B, T, 32), np.float32)
+    for i in range(B):
+        xs[i, :suf[i]] = np.asarray(x)[i, starts[i]:lengths[i]]
+    out_res, cache_res = apply_attention(
+        params, jnp.asarray(xs), spec, cache=cache_pre, fill_cache=True,
+        lengths=jnp.asarray(suf), starts=jnp.asarray(starts))
+
+    for i in range(B):
+        L_i = lengths[i]
+        np.testing.assert_array_equal(
+            np.asarray(cache_full["pos"])[i, :L_i],
+            np.asarray(cache_res["pos"])[i, :L_i])
+        assert (np.asarray(cache_res["pos"])[i, L_i:] == -1).all()
+        np.testing.assert_array_equal(            # K/V writes are bit-exact
+            np.asarray(cache_full["k"])[i, :L_i],
+            np.asarray(cache_res["k"])[i, :L_i])
+        np.testing.assert_allclose(               # softmax sizes differ
+            np.asarray(out_full)[i, starts[i]:L_i],
+            np.asarray(out_res)[i, :suf[i]], rtol=2e-5, atol=2e-6)
+
+
+def _tiny_cfg() -> OneRecConfig:
+    """Capacity-unconstrained MoE so batch composition can't perturb the
+    cache-on/off comparison (same reasoning as test_serving_slots)."""
+    return OneRecConfig(
+        name="onerec-prefix-test",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-prefix-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+@pytest.fixture(scope="module")
+def prefix_setup():
+    cfg = _tiny_cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_executor_resume_matches_full_prefill(prefix_setup):
+    """save -> free -> copy-insert -> resume == one full prefill: the
+    next-token logits agree to numerics and the cache rows are identical."""
+    cfg, params = prefix_setup
+    ex = PhaseExecutor(params, cfg, n_slots=4, use_fp8=True, prefix_rows=2)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 192, size=6 * cfg.n_codebooks).astype(np.int32)
+    prof = rng.normal(size=onerec_model.PROFILE_DIM).astype(np.float32)
+
+    logits_full = np.asarray(ex.prefill_insert([toks], [prof], [0]))[0]
+    ex.prefix_save([0], [1])
+    ex.free_slots([0])
+    p = 4 * cfg.n_codebooks                   # resume from the 4-item mark
+    ex.prefix_copy_insert([1], [2], [p + 1])
+    logits_res = np.asarray(ex.resume_prefill([toks[p:]], [2], [p + 1]))[0]
+    np.testing.assert_allclose(logits_res, logits_full, rtol=2e-4, atol=2e-4)
+    assert logits_res.argmax() == logits_full.argmax()
+
+
+def test_free_slots_batch_equals_singles(prefix_setup):
+    """One vectorized clear == N single clears, and duplicates are benign."""
+    cfg, params = prefix_setup
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, 192, size=4 * cfg.n_codebooks).astype(np.int32),
+             rng.normal(size=onerec_model.PROFILE_DIM).astype(np.float32))
+            for _ in range(3)]
+    ex_a = PhaseExecutor(params, cfg, n_slots=4, use_fp8=True)
+    ex_b = PhaseExecutor(params, cfg, n_slots=4, use_fp8=True)
+    for ex in (ex_a, ex_b):
+        ex.prefill_insert([t for t, _ in reqs], [p for _, p in reqs],
+                          [0, 1, 2])
+    ex_a.free_slots([0, 2, 2])
+    ex_b.free_slot(0)
+    ex_b.free_slot(2)
+    pos_a = jax.tree_util.tree_leaves(ex_a.cache)
+    pos_b = jax.tree_util.tree_leaves(ex_b.cache)
+    for a, b in zip(pos_a, pos_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _repeat_requests(cfg, n=14, n_users=4, seed=7):
+    rng = np.random.default_rng(seed)
+    users = [[list(rng.integers(0, 192, size=4 * cfg.n_codebooks)),
+              rng.normal(size=onerec_model.PROFILE_DIM).astype(np.float32)]
+             for _ in range(n_users)]
+    reqs = []
+    for i in range(n):
+        u = users[i % n_users]
+        if i >= n_users:
+            u[0] = (u[0] + list(rng.integers(0, 192, size=cfg.n_codebooks))
+                    )[-cfg.history_len * cfg.n_codebooks:]
+        reqs.append({"tokens": np.asarray(u[0], np.int32),
+                     "profile": u[1]})
+    return reqs
+
+
+def test_engine_prefix_cache_token_identical(prefix_setup):
+    """Cache-on repeat traffic == cache-off, token for token, with a
+    nonzero hit rate and saved prefill tokens reported."""
+    cfg, params = prefix_setup
+    reqs = _repeat_requests(cfg)
+    off = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous"))
+    on = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", prefix_cache=True))
+    out_off, stats_off = off.serve_requests(reqs)
+    out_on, stats_on = on.serve_requests(reqs)
+    for a, b in zip(out_on, out_off):
+        np.testing.assert_array_equal(a, b)
+    assert stats_on["prefix_hit_rate"] > 0.5
+    assert stats_on["prefix_tokens_saved"] > 0
+    assert stats_on["prefix_bytes_pinned"] > 0
+    assert stats_on["prefill_tokens"] < stats_off["prefill_tokens"]
+    # store persists across calls: an exact repeat is (near-)all hits via
+    # the boundary index, and outputs stay identical
+    out2, stats2 = on.serve_requests(reqs)
+    for a, b in zip(out2, out_off):
+        np.testing.assert_array_equal(a, b)
+    assert stats2["prefix_hit_rate"] == 1.0
+
+
+def test_engine_prefix_cache_requires_continuous(prefix_setup):
+    cfg, params = prefix_setup
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(
+            batch_size=4, mode="fixed", prefix_cache=True))
