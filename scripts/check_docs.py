@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Docs-drift gate: every repo path and CLI flag the docs reference must
+actually exist.
+
+Checks `README.md` and `docs/*.md` (or the files passed as arguments):
+
+  * **Paths** — any token shaped like `src/...`, `benchmarks/...`,
+    `scripts/...`, `tests/...`, `examples/...`, or `docs/...` must exist
+    on disk relative to the repo root (globs like `docs/*.md` must match
+    at least one file; a trailing `/` requires a directory).  Paths under
+    other roots (e.g. the runtime-generated `results/`) are not checked.
+  * **Flags** — any `--flag` token must be defined by some
+    `add_argument(...)` call in the repo's Python entry points (or sit in
+    the small allowlist of external-tool flags below).
+
+Runs in CI (`.github/workflows/ci.yml`) and under pytest
+(`tests/test_docs.py`).  Pure stdlib; exit code 1 on any drift.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+from typing import Iterable, List, Set
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Path-like references under these roots are checked against the tree.
+PATH_ROOTS = ("src", "benchmarks", "scripts", "tests", "examples", "docs")
+PATH_RE = re.compile(r"\b(?:%s)/[\w./*-]+" % "|".join(PATH_ROOTS))
+
+# Long-option tokens.  (?<![\w-]) keeps mid-word dashes out; markdown em
+# dashes and `--` separators don't match the [a-z] head.
+FLAG_RE = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+
+# The leading quoted-string arguments of argparse add_argument() calls.
+ARG_DEF_RE = re.compile(
+    r"add_argument\(\s*((?:[\"']--?[\w-]+[\"']\s*,\s*)*[\"']--?[\w-]+[\"'])")
+
+# External-tool flags docs may legitimately mention (pip, pytest, ...).
+# Repo-CLI flags must NOT be listed here — that would defeat the gate.
+FLAG_ALLOWLIST = {"--upgrade", "--collect-only"}
+
+# Directories scanned for argparse definitions.
+CLI_DIRS = ("src", "benchmarks", "scripts", "examples")
+
+
+def argparse_flags(root: str = ROOT) -> Set[str]:
+    """Every --flag defined by an add_argument call in the repo's CLIs."""
+    flags: Set[str] = set()
+    for d in CLI_DIRS:
+        for path in glob.glob(os.path.join(root, d, "**", "*.py"),
+                              recursive=True):
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            for group in ARG_DEF_RE.findall(text):
+                flags.update(re.findall(r"--[\w-]+", group))
+    return flags
+
+
+def default_doc_files(root: str = ROOT) -> List[str]:
+    return [os.path.join(root, "README.md")] \
+        + sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+
+
+def _clean_path_ref(ref: str) -> str:
+    """Strip sentence punctuation a path regex can swallow."""
+    ref = ref.rstrip(".,:;")
+    # a ref like `src/repro/serving/`) loses the paren via rstrip above
+    # only if listed; parens aren't in the charset, so nothing else to do
+    return ref
+
+
+def check_file(path: str, known_flags: Set[str],
+               root: str = ROOT) -> List[str]:
+    """All drift errors for one markdown file."""
+    errors: List[str] = []
+    rel = os.path.relpath(path, root)
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    for lineno, line in enumerate(lines, 1):
+        for raw in PATH_RE.findall(line):
+            ref = _clean_path_ref(raw)
+            target = os.path.join(root, ref)
+            if any(ch in ref for ch in "*?["):
+                ok = bool(glob.glob(target))
+            elif ref.endswith("/"):
+                ok = os.path.isdir(target)
+            else:
+                ok = os.path.exists(target)
+            if not ok:
+                errors.append(f"{rel}:{lineno}: path `{ref}` does not exist")
+        for flag in FLAG_RE.findall(line):
+            if flag not in known_flags and flag not in FLAG_ALLOWLIST:
+                errors.append(f"{rel}:{lineno}: flag `{flag}` is not "
+                              f"defined by any add_argument in the repo")
+    return errors
+
+
+def check_docs(files: Iterable[str], root: str = ROOT) -> List[str]:
+    known = argparse_flags(root)
+    errors: List[str] = []
+    for f in files:
+        errors.extend(check_file(f, known, root))
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    files = argv or default_doc_files()
+    errors = check_docs(files)
+    for e in errors:
+        print(f"[check_docs] {e}", file=sys.stderr)
+    n = len(list(files))
+    if errors:
+        print(f"[check_docs] FAILED: {len(errors)} stale reference(s) "
+              f"across {n} file(s)", file=sys.stderr)
+        return 1
+    print(f"[check_docs] OK: {n} doc file(s), no drift")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -3,7 +3,8 @@ the continuous-batching slot engine.
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 64 \
       [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
-      [--prefix-cache [--prefix-rows 32]]
+      [--prefix-cache [--prefix-rows 32]] [--prefill-chunk 32] \
+      [--preemption]
 """
 
 from __future__ import annotations
@@ -57,6 +58,15 @@ def main():
                          "reuse across requests (continuous mode)")
     ap.add_argument("--prefix-rows", type=int, default=0,
                     help="prefix-store arena rows (0 => 2x slots)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="max history tokens per prefill program (0 = "
+                         "monolithic); chunked prefill pages long "
+                         "histories through the decode loop, bounding "
+                         "join-step latency spikes (continuous mode)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="free the worst decoding slot for a strictly "
+                         "higher-priority arrival (continuous mode; "
+                         "resumes via the prefix store when enabled)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,7 +77,8 @@ def main():
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=batch, use_fp8=args.fp8, mode=args.mode,
         n_slots=args.slots, prefix_cache=args.prefix_cache,
-        prefix_rows=args.prefix_rows))
+        prefix_rows=args.prefix_rows, prefill_chunk=args.prefill_chunk,
+        preemption=args.preemption))
     requests = build_requests(cfg, args.requests, batch, args.seed,
                               args.ragged)
     outs, stats = engine.serve_requests(requests)
@@ -88,6 +99,11 @@ def main():
           f"p50={stats['p50_latency_s']*1e3:.1f}ms "
           f"p99={stats['p99_latency_s']*1e3:.1f}ms | "
           f"throughput={stats['throughput_rps']:.1f} req/s")
+    print(f"[serve] join steps: {int(stats['join_steps'])} "
+          f"(p50={stats['join_p50_s']*1e3:.1f}ms "
+          f"p99={stats['join_p99_s']*1e3:.1f}ms, "
+          f"decode-stall {100*stats['decode_stall_frac']:.0f}% of wall) | "
+          f"preemptions={int(stats['preemptions'])}")
 
 
 if __name__ == "__main__":

@@ -285,13 +285,20 @@ def apply_attention(
         if per_slot:
             # length-masked decode: each slot holds its own sequence; the
             # new token lands at that row's absolute index ``lengths[i]``.
+            # Rows passed index 0 are inactive (every real row holds at
+            # least one position before decoding); their writes are DROPPED
+            # so a row mid-way through a chunked prefill — which, unlike a
+            # freed row, is never rewritten wholesale before reuse — keeps
+            # its position-0 K/V across interleaved decode steps.
             idx = (lengths if lengths is not None else cache_index)
             idx = idx.astype(jnp.int32)
             rows = jnp.arange(B)
-            slot = idx % S
-            ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
-            cpos = cache["pos"].at[rows, slot].set(idx)
+            slot = jnp.where(idx > 0, idx % S, S)
+            ck = cache["k"].at[rows, slot].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[rows, slot].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            cpos = cache["pos"].at[rows, slot].set(idx, mode="drop")
             new_cache = {"k": ck, "v": cv, "pos": cpos}
 
             ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))

@@ -4,10 +4,11 @@ two-tier KV cache.
 Architecture — a request flows queue -> scheduler -> slots -> executor;
 repeat traffic short-circuits prefill through the prefix store:
 
-    requests ──> FIFO queue ──> scheduler ──────────────┐
-                                 │ admission splits      │ retire
-                                 │ cached-prefix+suffix  ▼
-                                 ▼                  completions
+    requests ──> arrival queue ──> scheduler ───────────┐
+                                 │ policy-ordered        │ retire
+                                 │ admission splits      │
+                                 │ cached-prefix+suffix, ▼
+                                 ▼ pages long prefills  completions
       PrefixStore <──lookup── SlotPool              (per-request
       (kv_cache.py, tier 2)  (kv_cache.py, tier 1)   latency)
       hash(profile⊕prefix)   fixed pool of per-
@@ -33,8 +34,14 @@ repeat traffic short-circuits prefill through the prefix store:
 * ``scheduler.py`` — ``ContinuousScheduler`` splits each request into
   cached-prefix + suffix at admission, joins new prefills into free slots
   and retires finished requests every step (no tail padding, one batched
-  slot-clear per step); ``FixedBatchScheduler`` preserves the seed engine's
-  padded fixed-batch lock-step mode (the paper's batch-32 setting).
+  slot-clear per step); ``SchedulingPolicy`` is the policy seam on top:
+  chunked prefill (long histories page through successive engine steps via
+  ``resume_prefill``, bounding join-step latency), priority/deadline-
+  ordered admission, and preemption (free the worst decoding slot for a
+  higher class; its history K/V parks in the prefix arena so the requeued
+  request resumes with a row copy + suffix prefill).
+  ``FixedBatchScheduler`` preserves the seed engine's padded fixed-batch
+  lock-step mode (the paper's batch-32 setting).
 * ``executor.py`` — the jitted prefill/resume/decode/select and
   pool<->arena copy programs with donated cache buffers; FP8-or-BF16 is a
   parameter-tree swap (§4.1 policy), so the A/B is a one-flag switch.
@@ -50,5 +57,7 @@ from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.executor import PhaseExecutor  # noqa: F401
 from repro.serving.kv_cache import (PrefixEntry, PrefixStore,  # noqa: F401
                                     SlotPool, SlotState, prefix_hash_chain)
-from repro.serving.scheduler import (ContinuousScheduler,  # noqa: F401
-                                     FixedBatchScheduler, Request)
+from repro.serving.scheduler import (Completion,  # noqa: F401
+                                     ContinuousScheduler,
+                                     FixedBatchScheduler, Request,
+                                     SchedulingPolicy)

@@ -23,7 +23,8 @@ from repro.configs.base import OneRecConfig
 from repro.serving.executor import PhaseExecutor
 from repro.serving.kv_cache import PrefixStore, SlotPool
 from repro.serving.scheduler import (Completion, ContinuousScheduler,
-                                     FixedBatchScheduler, Request)
+                                     FixedBatchScheduler, Request,
+                                     SchedulingPolicy)
 
 
 @dataclasses.dataclass
@@ -42,6 +43,12 @@ class EngineConfig:
     prefix_cache: bool = False     # content-addressed cross-request KV reuse
     prefix_rows: int = 0           # arena rows (cached prefixes); 0 => 2x slots
     prefix_bytes_budget: int = 0   # LRU byte budget; 0 => all rows usable
+    # -- scheduling policy (continuous mode only) --
+    prefill_chunk: int = 0         # max history tokens per prefill program
+    #                                (0 = monolithic; bounds join-step spikes)
+    preemption: bool = False       # free worst decoding slot for a strictly
+    #                                higher-priority arrival (resume via the
+    #                                prefix store when enabled)
 
 
 class ServingEngine:
@@ -56,6 +63,10 @@ class ServingEngine:
             if engine_cfg.mode != "continuous":
                 raise ValueError("prefix_cache requires continuous mode")
             prefix_rows = engine_cfg.prefix_rows or 2 * self.n_slots
+        if engine_cfg.mode != "continuous" and (engine_cfg.prefill_chunk
+                                                or engine_cfg.preemption):
+            raise ValueError("prefill_chunk / preemption require "
+                             "continuous mode")
         self.executor = PhaseExecutor(
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
@@ -79,14 +90,19 @@ class ServingEngine:
                                        self.ecfg.batch_size)
         return ContinuousScheduler(self.executor, pool,
                                    self.ecfg.max_prefill_groups,
-                                   prefix_store=self.prefix_store)
+                                   prefix_store=self.prefix_store,
+                                   policy=SchedulingPolicy(
+                                       prefill_chunk=self.ecfg.prefill_chunk,
+                                       preemption=self.ecfg.preemption))
 
     # -- serving --------------------------------------------------------------
 
     def serve_requests(self, requests: List[Dict[str, np.ndarray]]
                        ) -> Tuple[List[np.ndarray], Dict[str, float]]:
-        """Serve ``requests`` (dicts with ragged "tokens" + "profile");
-        returns per-request outputs in input order + per-call stats."""
+        """Serve ``requests`` (dicts with ragged "tokens" + "profile",
+        optional "arrival_s" / "deadline_s" offsets from call start and an
+        int "priority" class, lower = more important); returns per-request
+        outputs in input order + per-call stats."""
         if self.prefix_store is not None:
             self.prefix_store.reset_window()   # entries persist, stats don't
         if not requests:
@@ -98,7 +114,12 @@ class ServingEngine:
                         "mode": self.ecfg.mode, **self._prefix_stats(),
                         "prefill_padded_rows": 0.0,
                         "prefill_tokens": 0.0,
-                        "prefill_padded_token_frac": 0.0}
+                        "prefill_padded_token_frac": 0.0,
+                        "join_steps": 0.0, "join_mean_s": 0.0,
+                        "join_p50_s": 0.0, "join_p99_s": 0.0,
+                        "decode_stall_frac": 0.0, "preemptions": 0.0,
+                        "deadline_misses": 0.0, "deadline_miss_rate": 0.0,
+                        "class_stats": {}}
         max_hist = self.cfg.history_len * self.cfg.n_codebooks
         for i, r in enumerate(requests):
             if len(r["tokens"]) > max_hist:
@@ -109,7 +130,10 @@ class ServingEngine:
         t0 = time.perf_counter()
         reqs = [Request(rid=i, tokens=np.asarray(r["tokens"], np.int32),
                         profile=np.asarray(r["profile"], np.float32),
-                        arrival_s=t0 + float(r.get("arrival_s", 0.0)))
+                        arrival_s=t0 + float(r.get("arrival_s", 0.0)),
+                        priority=int(r.get("priority", 0)),
+                        deadline_s=t0 + float(r["deadline_s"])
+                        if r.get("deadline_s") is not None else None)
                 for i, r in enumerate(requests)]
         pool = SlotPool(self.n_slots)
         sched = self._make_scheduler(pool)
@@ -122,6 +146,7 @@ class ServingEngine:
         self.metrics["latency_s"] = list(lat)       # windowed: reset per call
         self.metrics["batch_size"] = [float(len(requests))]
         counters = self.executor.counters
+        join = np.asarray(sched.join_step_s, np.float64)
         stats = {
             "n_requests": float(len(requests)),
             "wall_s": wall,
@@ -142,11 +167,51 @@ class ServingEngine:
                 1.0 - counters["prefill_tokens_real"]
                 / counters["prefill_tokens_batched"]
                 if counters["prefill_tokens_batched"] else 0.0,
+            # join-step wall time: prefill work one engine round performed
+            # (chunked prefill bounds its tail); decode-stall = the share of
+            # the call's wall clock decoders spent waiting on that work
+            "join_steps": float(join.size),
+            "join_mean_s": float(join.mean()) if join.size else 0.0,
+            "join_p50_s": float(np.percentile(join, 50))
+            if join.size else 0.0,
+            "join_p99_s": float(np.percentile(join, 99))
+            if join.size else 0.0,
+            "decode_stall_frac": sched.decode_stall_s / wall if wall else 0.0,
+            "preemptions": float(sched.preemptions),
+            **self._sla_stats(done),
             **self._prefix_stats(),
         }
         for k in counters:
             counters[k] = 0                          # window counters too
         return outputs, stats
+
+    @staticmethod
+    def _sla_stats(done: List[Completion]) -> Dict[str, object]:
+        """Deadline accounting overall and per priority class.  Miss rates
+        are over the requests that HAVE a deadline; ``class_stats`` keys
+        are the class numbers as strings (JSON-friendly)."""
+        with_dl = [c for c in done if c.deadline_s is not None]
+        misses = sum(c.deadline_missed for c in with_dl)
+        classes: Dict[str, List[Completion]] = {}
+        for c in done:
+            classes.setdefault(str(c.priority), []).append(c)
+        class_stats = {}
+        for cls, cs in sorted(classes.items()):
+            lat = np.asarray([c.latency_s for c in cs])
+            cls_dl = [c for c in cs if c.deadline_s is not None]
+            class_stats[cls] = {
+                "n": float(len(cs)),
+                "mean_latency_s": float(lat.mean()),
+                "p99_latency_s": float(np.percentile(lat, 99)),
+                "deadline_misses": float(sum(c.deadline_missed
+                                             for c in cls_dl)),
+                "deadline_miss_rate": sum(c.deadline_missed for c in cls_dl)
+                / len(cls_dl) if cls_dl else 0.0,
+            }
+        return {"deadline_misses": float(misses),
+                "deadline_miss_rate": misses / len(with_dl)
+                if with_dl else 0.0,
+                "class_stats": class_stats}
 
     def _prefix_stats(self) -> Dict[str, float]:
         """Tier-2 prefix-store metrics (zeros when the cache is disabled)."""

@@ -35,7 +35,6 @@ trees; schedulers only ever see slot ids, arena row ids, and logits.
 
 from __future__ import annotations
 
-import time
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
@@ -84,6 +83,12 @@ class PhaseExecutor:
                                          "prefill_padded_rows": 0,
                                          "prefill_tokens_batched": 0,
                                          "prefill_tokens_real": 0}
+        # NOTE: every phase entry point below gates on completion via
+        # block_until_ready before returning, so async dispatch can't smear
+        # one phase's device work into the next host-side measurement — the
+        # scheduler's join-step p99 / decode-stall metrics depend on it.
+        # The serving loop is host-driven (it reads logits back every
+        # step), so the gating costs no real pipelining.
 
         if use_radix_topk:
             from repro.kernels.radix_topk import radix_topk
@@ -225,6 +230,7 @@ class PhaseExecutor:
         logits, self.cache = self._prefill_insert(
             self.params, self.cache, jnp.asarray(tok), jnp.asarray(prof),
             jnp.asarray(lengths), jnp.asarray(slot_ids))
+        logits.block_until_ready()
         return logits
 
     def resume_prefill(self, tokens_list: List[np.ndarray],
@@ -244,6 +250,7 @@ class PhaseExecutor:
         logits, self.cache = self._resume_prefill(
             self.params, self.cache, jnp.asarray(tok), jnp.asarray(lengths),
             jnp.asarray(start_arr), jnp.asarray(slot_ids))
+        logits.block_until_ready()
         self.counters["resume_calls"] += 1
         return logits
 
@@ -286,9 +293,12 @@ class PhaseExecutor:
 
     def decode(self, tokens: np.ndarray, lengths: np.ndarray) -> jax.Array:
         """One decode step over the whole pool: tokens (N, 1) at per-slot
-        absolute indices ``lengths`` (N,).  Free slots pass index 0 and a
-        dummy token; their ``pos`` rows are cleared on free (``free_slot``)
-        so the dummy rows are a pure function of the free/active pattern.
+        absolute indices ``lengths`` (N,).  Inactive slots (freed rows and
+        rows mid-way through a chunked prefill) pass index 0 and a dummy
+        token; their cache writes are DROPPED by the program and their
+        ``pos`` rows are cleared on free (``free_slot``), so dummy rows are
+        a pure function of the free/active pattern and a paged prefill's
+        partial row survives interleaved decode steps untouched.
         Note the dummy rows still occupy rows of the capacity-bounded MoE
         dispatch, so under a tight ``capacity_factor`` the active requests'
         outputs can differ (deterministically) from a smaller-batch run —
@@ -296,6 +306,7 @@ class PhaseExecutor:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens, np.int32),
             jnp.asarray(lengths, np.int32))
+        logits.block_until_ready()
         self.counters["decode_steps"] += 1
         return logits
 

@@ -35,13 +35,21 @@ import numpy as np
 
 @dataclasses.dataclass
 class SlotState:
-    """One occupied slot: the request it serves and its decode progress."""
+    """One occupied slot: the request it serves and its decode progress.
+
+    ``priority`` / ``deadline_s`` mirror the request's SLA class so the
+    scheduler's preemption victim selection and deadline accounting read
+    pool state only (no back-pointer into the queue).  ``deadline_s`` is an
+    absolute ``perf_counter`` timestamp like ``arrival_s``; None = no SLA.
+    """
 
     request_id: int
     length: int                 # positions in the cache (profile + history + generated)
     generated: List[int] = dataclasses.field(default_factory=list)
     last_token: int = -1        # next decode-step input
     arrival_s: float = 0.0
+    priority: int = 0           # SLA class: lower = more important
+    deadline_s: Optional[float] = None
 
 
 class SlotPool:

@@ -1,11 +1,35 @@
-"""Request schedulers: continuous batching and the fixed-batch reference.
+"""Request schedulers: continuous batching with a scheduling-policy seam,
+and the fixed-batch reference.
 
-``ContinuousScheduler`` is the paper-style high-utilization loop: a FIFO
-request queue feeds a fixed pool of KV-cache slots.  Every engine step it
-(1) retires finished slots, (2) joins queued requests into free slots via
-bucketed ragged prefill — no tail padding, no waiting for stragglers — and
-(3) runs ONE length-masked decode program over the whole pool, advancing
-every active request regardless of its depth.
+``ContinuousScheduler`` is the paper-style high-utilization loop: a request
+queue feeds a fixed pool of KV-cache slots.  Every engine step it
+(1) advances any in-flight CHUNKED prefills by one segment, (2) retires
+finished slots, (3) joins queued requests into free slots via bucketed
+ragged prefill — no tail padding, no waiting for stragglers — and (4) runs
+ONE length-masked decode program over the decoding slots, advancing every
+active request regardless of its depth.
+
+``SchedulingPolicy`` is the policy seam on top of that loop:
+
+  * **Chunked prefill** (``prefill_chunk > 0``): any prefill longer than
+    the chunk budget is split into segments that ride through successive
+    engine steps via the executor's ``resume_prefill`` program (the slot
+    already holds the earlier segments' K/V; each segment writes at its
+    per-row absolute offset).  A 4k-token history no longer stalls every
+    decoding slot behind one giant prefill program — the per-step prefill
+    work is bounded by the chunk, which bounds join-step latency spikes.
+  * **Priority + deadline admission**: the arrived window is ordered by
+    ``(priority class, deadline, arrival)`` instead of FIFO, so an
+    interactive request never queues behind batch traffic that arrived
+    first.
+  * **Preemption** (``preemption=True``): when the pool is full and a
+    strictly-higher-priority request is waiting, the worst decoding slot
+    is freed mid-decode.  Its item-aligned history K/V is offered to the
+    PrefixStore arena first, so the requeued request later resumes via
+    ``prefix_copy_insert`` + a short suffix prefill instead of a full
+    re-prefill; its generated tokens are discarded and re-decoded (greedy
+    decode is deterministic, so outputs are token-identical — see
+    ``tests/test_scheduling.py``).
 
 ``FixedBatchScheduler`` reproduces the seed engine's semantics (the paper's
 batch-32 measurement mode): requests are chunked into fixed-size batches,
@@ -14,7 +38,10 @@ slowest member finishes.  Both schedulers drive the same compiled programs,
 so an A/B between them isolates pure scheduling effects.
 
 Latency accounting is per REQUEST (arrival -> last token realized on host),
-not per batch; occupancy is sampled at every decode step.
+not per batch; occupancy is sampled at every decode step.  Join-step wall
+times (the prefill work one engine step performs) are sampled per round so
+the engine can report join p99 and the decode-stall fraction — the metrics
+the chunked-prefill claim is measured by.
 """
 
 from __future__ import annotations
@@ -22,13 +49,15 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serving.executor import PhaseExecutor, bucket_length
 from repro.serving.kv_cache import (PrefixEntry, PrefixStore, SlotPool,
                                     SlotState, prefix_hash_chain)
+
+_NO_DEADLINE = float("inf")
 
 
 @dataclasses.dataclass(eq=False)     # identity equality: queue.remove()
@@ -37,6 +66,8 @@ class Request:
     tokens: np.ndarray          # (L,) semantic-ID history
     profile: np.ndarray         # (PROFILE_DIM,)
     arrival_s: float = 0.0      # absolute perf_counter timestamp
+    priority: int = 0           # SLA class: lower = more important
+    deadline_s: Optional[float] = None  # absolute deadline; None = no SLA
     # memoized prefix-digest chain (content is immutable, the scheduler
     # re-plans every round — hash once, not once per round)
     chain: Optional[List[Tuple[int, str]]] = None
@@ -47,6 +78,49 @@ class Completion:
     rid: int
     item: np.ndarray            # (decode_len,) generated semantic-ID codes
     latency_s: float
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    deadline_missed: bool = False
+
+
+@dataclasses.dataclass
+class SchedulingPolicy:
+    """The admission/preemption policy seam of ``ContinuousScheduler``.
+
+    ``prefill_chunk`` — max history tokens one prefill program may run for
+    a single request (0 = monolithic).  Powers of two avoid bucket-padding
+    waste (``executor.bucket_length`` rounds segment shapes up).
+    ``preemption`` — allow freeing the worst decoding slot when a
+    strictly-higher-priority request is waiting and the pool is full.
+    """
+
+    prefill_chunk: int = 0
+    preemption: bool = False
+
+    def sort_key(self, r: Request) -> Tuple[int, float, float]:
+        """Admission order: priority class, then earliest deadline, then
+        arrival (plain FIFO when neither priority nor deadline is set)."""
+        return (r.priority,
+                r.deadline_s if r.deadline_s is not None else _NO_DEADLINE,
+                r.arrival_s)
+
+    def first_segment(self, n_tokens: int) -> int:
+        """History tokens the admission-time prefill program covers."""
+        return min(n_tokens, self.prefill_chunk) if self.prefill_chunk \
+            else n_tokens
+
+
+@dataclasses.dataclass
+class _PendingPrefill:
+    """A slot mid-way through a chunked prefill: the request it serves, the
+    not-yet-prefilled history suffix, and the absolute cache position the
+    next segment writes at.  ``plan`` is the admission-time prefix-store
+    plan, kept so the store offer can be made once the row is complete."""
+
+    request: Request
+    left: np.ndarray            # history tokens not yet prefilled
+    next_start: int             # absolute cache position of the next token
+    plan: Optional[Tuple[PrefixEntry, int]]
 
 
 class ContinuousScheduler:
@@ -57,28 +131,35 @@ class ContinuousScheduler:
     (the smallest group is folded into the next-larger bucket).  2 is a good
     CPU/TPU default — one short and one long program per round.
 
-    Admission is length-aware within a bounded ``lookahead`` window: the
-    round admits the queue head's length bucket first (starvation guard),
-    then the most-populous other bucket among the first ``lookahead``
-    arrived requests.  Near-uniform join groups prefill with almost no
-    padding — the flexibility a slot pool has and a fixed batch does not.
+    Admission is policy-ordered within a bounded ``lookahead`` window: the
+    round admits the most urgent request's length bucket first (starvation
+    guard within a class), then the most-populous other bucket.  Near-
+    uniform join groups prefill with almost no padding — the flexibility a
+    slot pool has and a fixed batch does not.
 
     With a ``prefix_store`` (the KV cache's tier 2) admission SPLITS each
     request into ``cached-prefix + suffix``: the longest stored item-aligned
     prefix of ``profile ⊕ history`` is copied into the slot from the device
     arena (``prefix_copy_insert``) and only the suffix is prefilled
     (``resume_prefill``).  Requests then group by (hit, SUFFIX-length
-    bucket) — a 190-token history with a 186-token cached prefix joins the
-    shortest bucket.  The store entry stays refcount-pinned until the
-    request retires; after prefill, each request's full item-aligned
-    history is offered back to the store (one batched row copy per group).
-    At least one item is always left to resume so the next-token logits
-    come from a live program, never from storage.
+    bucket).  The store entry stays refcount-pinned until the request
+    retires; after prefill, each request's full item-aligned history is
+    offered back to the store (one batched row copy per group).  At least
+    one item is always left to resume so the next-token logits come from a
+    live program, never from storage.
+
+    With ``policy.prefill_chunk`` the admission program covers only the
+    first segment; the remainder is tracked in ``_pending`` and advanced
+    one segment per engine step (``_advance_prefills``), interleaved with
+    decode.  A pending slot occupies its pool row but is excluded from
+    decode until its last segment lands; the final segment's logits seed
+    the first generated token, exactly as a monolithic prefill's would.
     """
 
     def __init__(self, executor: PhaseExecutor, pool: SlotPool,
                  max_prefill_groups: int = 2, lookahead: int = 0,
-                 prefix_store: Optional[PrefixStore] = None):
+                 prefix_store: Optional[PrefixStore] = None,
+                 policy: Optional[SchedulingPolicy] = None):
         self.executor = executor
         self.pool = pool
         self.max_prefill_groups = max(1, max_prefill_groups)
@@ -86,9 +167,20 @@ class ContinuousScheduler:
         self.decode_len = executor.cfg.decode_len
         self.occupancy: List[float] = []
         self.store = prefix_store
+        self.policy = policy or SchedulingPolicy()
         self._slot_entry: Dict[int, PrefixEntry] = {}
+        self._slot_request: Dict[int, Request] = {}
+        self._pending: Dict[int, _PendingPrefill] = {}
+        # -- join-step / SLA accounting (read by the engine) --
+        self.join_step_s: List[float] = []   # wall time of each prefill round
+        self.decode_stall_s = 0.0   # join time spent while decoders waited
+        self.preemptions = 0
 
     # -- step pieces ----------------------------------------------------------
+
+    def _decoding_slots(self) -> List[int]:
+        """Slots whose prefill is complete (mid-chunk slots don't decode)."""
+        return [s for s in self.pool.used_slots() if s not in self._pending]
 
     def _record(self, slot: int, token: int, done: List[Completion],
                 freed: List[int]) -> None:
@@ -98,13 +190,19 @@ class ContinuousScheduler:
         if len(state.generated) >= self.decode_len:
             final = self.pool.free(slot)
             freed.append(slot)
+            self._slot_request.pop(slot, None)
             entry = self._slot_entry.pop(slot, None)
             if entry is not None:       # unpin the prefix backing this slot
                 self.store.release(entry)
+            finish = time.perf_counter()
             done.append(Completion(
                 rid=final.request_id,
                 item=np.asarray(final.generated, np.int32),
-                latency_s=time.perf_counter() - final.arrival_s))
+                latency_s=finish - final.arrival_s,
+                priority=final.priority,
+                deadline_s=final.deadline_s,
+                deadline_missed=final.deadline_s is not None
+                and finish > final.deadline_s))
 
     def _plan(self, r: Request) -> Optional[Tuple[PrefixEntry, int]]:
         """Longest usable cached prefix for ``r`` as ``(entry, n_tokens)``
@@ -125,14 +223,17 @@ class ContinuousScheduler:
                 plan: Optional[Tuple[PrefixEntry, int]]) -> Tuple[bool, int]:
         eff = len(r.tokens) - (plan[1] if plan is not None else 0)
         return (plan is not None,
-                bucket_length(eff, self.executor.prefill_bucket_min))
+                bucket_length(self.policy.first_segment(eff),
+                              self.executor.prefill_bucket_min))
 
     def _offer_to_store(self, group: List[Request], slots: List[int],
                         plans: List[Optional[Tuple[PrefixEntry, int]]]
                         ) -> None:
         """Admit each request's full item-aligned history to the store
         (one batched pool->arena row copy); dedup and pinned-full stores
-        are handled by ``insert`` returning None."""
+        are handled by ``insert`` returning None.  Callers only offer slots
+        whose rows hold the COMPLETE history (chunked prefills offer at
+        final-segment completion, not at admission)."""
         pending: List[Tuple[int, PrefixEntry]] = []
         for r, slot, plan in zip(group, slots, plans):
             n_full = (len(r.tokens) // self.store.n_codebooks) \
@@ -154,32 +255,166 @@ class ContinuousScheduler:
             self.executor.prefix_save([s for s, _ in live],
                                       [e.row for _, e in live])
 
-    def _join(self, queue: deque, done: List[Completion]) -> None:
-        """Admit ARRIVED queued requests into free slots, by (prefix-hit,
-        suffix-length bucket)."""
-        free = self.pool.n_free
-        if not free or not queue:
+    # -- preemption -----------------------------------------------------------
+
+    def _victim_order(self, slot: int) -> Tuple[int, float, float]:
+        """Worst-first sort key (used reversed): highest class number, then
+        slackest deadline, then most recent arrival gets preempted first."""
+        st = self.pool[slot]
+        return (st.priority,
+                st.deadline_s if st.deadline_s is not None else _NO_DEADLINE,
+                st.arrival_s)
+
+    def _preempt(self, slot: int, queue: Deque[Request]) -> None:
+        """Free ``slot`` mid-decode and requeue its request.
+
+        The row's item-aligned history K/V is offered to the prefix store
+        FIRST (generated-token positions past the boundary are masked out
+        on restore), so the re-admission resumes via a row copy + suffix
+        prefill.  Generated tokens are discarded; greedy decode regenerates
+        them identically.  The requeued request keeps its original arrival,
+        so its latency accounting spans the preemption.
+        """
+        r = self._slot_request.pop(slot)
+        self.pool.free(slot)
+        if self.store is not None:
+            n_full = (len(r.tokens) // self.store.n_codebooks) \
+                * self.store.n_codebooks
+            if n_full > 0:
+                entry = self.store.insert(r.profile, r.tokens, n_full,
+                                          chain=r.chain)
+                if entry is not None and self.store.is_live(entry):
+                    # copy BEFORE free_slots clears the row's occupancy
+                    self.executor.prefix_save([slot], [entry.row])
+        old = self._slot_entry.pop(slot, None)
+        if old is not None:
+            self.store.release(old)
+        self.executor.free_slots([slot])
+        # requeue at the request's arrival-order position (priority
+        # admission means it need not be the oldest in flight), keeping
+        # the queue's arrival-sorted invariant for the lookahead window
+        # and run()'s idle-sleep
+        i = next((i for i, q in enumerate(queue)
+                  if q.arrival_s > r.arrival_s), len(queue))
+        queue.insert(i, r)
+        self.preemptions += 1
+
+    def _maybe_preempt(self, window: List[Request],
+                       queue: Deque[Request]) -> None:
+        """Free decoding slots for strictly-higher-priority arrivals when
+        the pool is full.  One victim per displaced request; mid-chunk
+        prefill slots are never victims (their rows are incomplete, so a
+        preempt would forfeit the prefill work without a store offer)."""
+        if not self.policy.preemption or not window:
             return
+        victims = sorted(self._decoding_slots(), key=self._victim_order,
+                         reverse=True)
+        avail = self.pool.n_free
+        for r in window:              # most urgent first (policy-sorted)
+            if avail:                 # a free slot serves r without violence
+                avail -= 1
+                continue
+            if not victims:
+                return
+            if self.pool[victims[0]].priority <= r.priority:
+                return  # window is sorted: nobody later outranks this slot
+            self._preempt(victims.pop(0), queue)
+            avail = 0                 # the freed slot is consumed by r
+
+    # -- chunked prefill ------------------------------------------------------
+
+    def _register_segments(self, group: List[Request], slots: List[int],
+                           plans: List[Optional[Tuple[PrefixEntry, int]]],
+                           first_lens: List[int], starts: List[int]) -> None:
+        """After a join group's first prefill program: track every row whose
+        history extends past its first segment for per-step continuation."""
+        for r, slot, plan, n_first, start in zip(group, slots, plans,
+                                                 first_lens, starts):
+            n_cached = plan[1] if plan is not None else 0
+            if n_cached + n_first < len(r.tokens):
+                self._pending[slot] = _PendingPrefill(
+                    request=r, left=r.tokens[n_cached + n_first:],
+                    next_start=start + n_first, plan=plan)
+
+    def _advance_prefills(self, done: List[Completion]) -> None:
+        """Run ONE chunk segment for pending slots, grouped by segment
+        bucket (at most ``max_prefill_groups`` programs; leftover groups
+        continue next step).  A slot whose last segment lands here gets its
+        first generated token from the segment's logits and is offered to
+        the prefix store — exactly the monolithic admission path, spread
+        over steps."""
+        if not self._pending:
+            return
+        chunk = self.policy.prefill_chunk
+        by_bucket: Dict[int, List[int]] = {}
+        for slot, p in self._pending.items():
+            b = bucket_length(min(len(p.left), chunk),
+                              self.executor.prefill_bucket_min)
+            by_bucket.setdefault(b, []).append(slot)
+        order = sorted(by_bucket, key=lambda b: -len(by_bucket[b]))
+        for b in order[:self.max_prefill_groups]:
+            slots = by_bucket[b]
+            segments = [self._pending[s].left[:chunk] for s in slots]
+            starts = [self._pending[s].next_start for s in slots]
+            logits = self.executor.resume_prefill(segments, slots, starts)
+            finished: List[Tuple[int, int]] = []   # (group row, slot)
+            for i, slot in enumerate(slots):
+                p = self._pending[slot]
+                p.left = p.left[chunk:]
+                p.next_start += len(segments[i])
+                if len(p.left) == 0:
+                    del self._pending[slot]
+                    if self.store is not None:
+                        self._offer_to_store([p.request], [slot], [p.plan])
+                    finished.append((i, slot))
+            if finished:
+                _, ids = self.executor.select(logits)   # full-bucket shape
+                freed: List[int] = []
+                for i, slot in finished:
+                    self._record(slot, ids[i, 0], done, freed)
+                self.executor.free_slots(freed)
+
+    # -- admission ------------------------------------------------------------
+
+    def _join(self, queue: Deque[Request], done: List[Completion]) -> None:
+        """Admit ARRIVED queued requests into free slots in policy order
+        (priority class, deadline, arrival), grouped by (prefix-hit,
+        first-segment length bucket)."""
+        if not queue or (not self.pool.n_free
+                         and not self.policy.preemption):
+            return      # full pool + no violence allowed: skip the window
         now = time.perf_counter()
-        window = [r for r in list(queue)[:self.lookahead]
-                  if r.arrival_s <= now]
+        window = sorted((r for r in list(queue)[:self.lookahead]
+                         if r.arrival_s <= now), key=self.policy.sort_key)
         if not window:
             return
+        self._maybe_preempt(window, queue)
+        free = self.pool.n_free
+        if not free:
+            return
         plans = {id(r): self._plan(r) for r in window}
+        bucket_of = {id(r): self._bucket(r, plans[id(r)]) for r in window}
         by_bucket: Dict[Tuple[bool, int], List[Request]] = {}
         for r in window:
-            by_bucket.setdefault(self._bucket(r, plans[id(r)]), []).append(r)
-        # head's bucket first (no starvation), then the fullest others
-        head_b = self._bucket(window[0], plans[id(window[0])])
+            by_bucket.setdefault(bucket_of[id(r)], []).append(r)
+        # most urgent request's bucket first (no starvation within the
+        # policy order), then the fullest others; requests are then taken
+        # in POLICY order across the chosen buckets, so a slot freed by
+        # preemption can never go to a lower-priority bucket-mate while
+        # the displacing request waits
+        head_b = bucket_of[id(window[0])]
         order = [head_b] + sorted((b for b in by_bucket if b != head_b),
                                   key=lambda b: -len(by_bucket[b]))
+        chosen = set(order[:self.max_prefill_groups])
         joiners: List[Request] = []
         groups: Dict[Tuple[bool, int], List[Request]] = {}
-        for b in order[:self.max_prefill_groups]:
-            take = by_bucket[b][:free - len(joiners)]
-            if take:
-                groups[b] = take
-                joiners += take
+        for r in window:
+            if len(joiners) >= free:
+                break
+            b = bucket_of[id(r)]
+            if b in chosen:
+                groups.setdefault(b, []).append(r)
+                joiners.append(r)
         # pin every admitted hit NOW: this round's store inserts may evict
         # any unpinned entry, and a plan must not go stale mid-round
         for r in joiners:
@@ -200,8 +435,10 @@ class ContinuousScheduler:
             for r in group:
                 slot = self.pool.alloc(SlotState(
                     request_id=r.rid, length=len(r.tokens) + 1,  # + profile
-                    arrival_s=r.arrival_s))
+                    arrival_s=r.arrival_s, priority=r.priority,
+                    deadline_s=r.deadline_s))
                 slots.append(slot)
+                self._slot_request[slot] = r
             if is_hit:
                 for slot, plan in zip(slots, group_plans):
                     self._slot_entry[slot] = plan[0]  # release at retire
@@ -211,30 +448,47 @@ class ContinuousScheduler:
                 starts = [n_tok + 1 for _, n_tok in group_plans]
                 self.executor.prefix_copy_insert(
                     [p.row for p, _ in group_plans], slots, starts)
+                suffixes = [r.tokens[n_tok:]
+                            for r, (_, n_tok) in zip(group, group_plans)]
+                first_lens = [self.policy.first_segment(len(s))
+                              for s in suffixes]
                 logits = self.executor.resume_prefill(
-                    [r.tokens[n_tok:]
-                     for r, (_, n_tok) in zip(group, group_plans)],
+                    [s[:n] for s, n in zip(suffixes, first_lens)],
                     slots, starts)
             else:
+                starts = [1] * len(group)          # after the profile token
+                first_lens = [self.policy.first_segment(len(r.tokens))
+                              for r in group]
                 logits = self.executor.prefill_insert(
-                    [r.tokens for r in group],
+                    [r.tokens[:n] for r, n in zip(group, first_lens)],
                     [r.profile for r in group], slots)
-            if self.store is not None:  # save BEFORE any retire can clear
-                self._offer_to_store(group, slots, group_plans)
+            self._register_segments(group, slots, group_plans, first_lens,
+                                    starts)
+            # offer COMPLETE rows to the store before any retire can clear
+            # them; chunked rows are offered at final-segment completion
+            complete = [(r, s, p) for r, s, p in zip(group, slots,
+                                                     group_plans)
+                        if s not in self._pending]
+            if self.store is not None and complete:
+                self._offer_to_store([c[0] for c in complete],
+                                     [c[1] for c in complete],
+                                     [c[2] for c in complete])
             _, ids = self.executor.select(logits)   # full-bucket shape
             freed: List[int] = []
-            for slot, tok in zip(slots, ids[:len(slots), 0]):
-                self._record(slot, tok, done, freed)
+            for i, slot in enumerate(slots):
+                if slot in self._pending:
+                    continue        # mid-chunk: logits are not next-token
+                self._record(slot, ids[i, 0], done, freed)
             # clear before the NEXT group can reallocate a freed slot
             # (reachable only when decode_len == 1: prefill completes)
             self.executor.free_slots(freed)
 
     def _decode_step(self, done: List[Completion]) -> None:
-        """One length-masked decode over the whole pool."""
+        """One length-masked decode over the decoding slots of the pool."""
         pool = self.pool
         tokens = np.zeros((pool.n_slots, 1), np.int32)
         lengths = np.zeros((pool.n_slots,), np.int32)
-        active = pool.used_slots()
+        active = self._decoding_slots()
         for s in active:
             tokens[s, 0] = pool[s].last_token
             lengths[s] = pool[s].length
@@ -250,13 +504,27 @@ class ContinuousScheduler:
     # -- main loop ------------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Completion]:
-        queue = deque(sorted(requests, key=lambda r: r.arrival_s))
+        queue: Deque[Request] = deque(sorted(requests,
+                                             key=lambda r: r.arrival_s))
         done: List[Completion] = []
         while queue or self.pool.n_used:
+            # join-step accounting: everything before decode is prefill
+            # work; time it only when a prefill program actually ran, and
+            # charge it to decode stall when decoders sat waiting on it
+            had_decoders = bool(self._decoding_slots())
+            t0 = time.perf_counter()
+            n0 = self.executor.counters["prefill_calls"]
+            self._advance_prefills(done)
             self._join(queue, done)
-            if self.pool.n_used:
+            if self.executor.counters["prefill_calls"] > n0:
+                dt = time.perf_counter() - t0
+                self.join_step_s.append(dt)
+                if had_decoders:
+                    self.decode_stall_s += dt
+            if self._decoding_slots():
                 self._decode_step(done)
-            elif queue:  # idle: everything left is still in flight upstream
+            elif not self.pool.n_used and queue:
+                # idle: everything left is still in flight upstream
                 time.sleep(max(0.0, queue[0].arrival_s
                                - time.perf_counter()))
         return done
@@ -268,7 +536,9 @@ class FixedBatchScheduler:
     Kept as a mode so the paper's batch-32 numbers stay reproducible and as
     the reference the continuous scheduler is validated against.  Runs on the
     same slot programs (slots 0..B-1 of the pool, histories right-padded to
-    the batch max), so outputs are comparable token-for-token.
+    the batch max), so outputs are comparable token-for-token.  Reports the
+    same join-step samples as the continuous scheduler (here: one monolithic
+    prefill per batch) so the engine's join-p99 metric is mode-uniform.
     """
 
     def __init__(self, executor: PhaseExecutor, pool: SlotPool,
@@ -281,6 +551,9 @@ class FixedBatchScheduler:
         self.batch_size = batch_size
         self.decode_len = executor.cfg.decode_len
         self.occupancy: List[float] = []
+        self.join_step_s: List[float] = []
+        self.decode_stall_s = 0.0    # lock-step: decode never overlaps join
+        self.preemptions = 0
 
     def run(self, requests: List[Request]) -> List[Completion]:
         done: List[Completion] = []
@@ -297,11 +570,14 @@ class FixedBatchScheduler:
             for r in padded:
                 slots.append(self.pool.alloc(SlotState(
                     request_id=r.rid, length=len(r.tokens) + 1,
-                    arrival_s=r.arrival_s)))
+                    arrival_s=r.arrival_s, priority=r.priority,
+                    deadline_s=r.deadline_s)))
+            t0 = time.perf_counter()
             logits = self.executor.prefill_insert(
                 [r.tokens for r in padded], [r.profile for r in padded],
                 slots)
             _, ids = self.executor.select(logits)
+            self.join_step_s.append(time.perf_counter() - t0)
             ids = ids[:len(slots)]                  # drop bucket-pad rows
             gen = [[int(t)] for t in ids[:, 0]]
             last = np.asarray(ids[:, :1], np.int32)
@@ -324,7 +600,10 @@ class FixedBatchScheduler:
                 r = chunk[row]
                 done.append(Completion(
                     rid=r.rid, item=np.asarray(gen[row], np.int32),
-                    latency_s=finish - r.arrival_s))
+                    latency_s=finish - r.arrival_s,
+                    priority=r.priority, deadline_s=r.deadline_s,
+                    deadline_missed=r.deadline_s is not None
+                    and finish > r.deadline_s))
             retired = sorted(set(slots))
             for s in retired:
                 self.pool.free(s)

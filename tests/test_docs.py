@@ -1,0 +1,56 @@
+"""Docs-drift gate (scripts/check_docs.py): repo docs must reference only
+paths and CLI flags that exist, and the checker must actually catch
+drift when fed a stale doc."""
+
+import importlib.util
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", os.path.join(ROOT, "scripts", "check_docs.py"))
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_repo_docs_have_no_drift():
+    files = check_docs.default_doc_files()
+    assert any(f.endswith("README.md") for f in files)
+    errors = check_docs.check_docs(files)
+    assert errors == [], "\n".join(errors)
+
+
+def test_known_flags_include_serve_cli():
+    flags = check_docs.argparse_flags()
+    assert {"--prefix-cache", "--prefill-chunk", "--preemption"} <= flags
+
+
+def test_stale_path_fails(tmp_path):
+    doc = tmp_path / "stale.md"
+    doc.write_text("see `src/repro/does_not_exist.py` for details\n")
+    errors = check_docs.check_docs([str(doc)])
+    assert len(errors) == 1 and "does_not_exist" in errors[0]
+
+
+def test_stale_flag_fails(tmp_path):
+    doc = tmp_path / "stale.md"
+    doc.write_text("run with `--not-a-real-flag` and `--prefill-chunk`\n")
+    errors = check_docs.check_docs([str(doc)])
+    assert len(errors) == 1 and "--not-a-real-flag" in errors[0]
+
+
+def test_glob_and_dir_refs_resolve(tmp_path):
+    doc = tmp_path / "ok.md"
+    doc.write_text("see `docs/*.md`, `src/repro/serving/` and "
+                   "`scripts/check_docs.py`.\n")
+    assert check_docs.check_docs([str(doc)]) == []
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    doc = tmp_path / "stale.md"
+    doc.write_text("`benchmarks/gone.py`\n")
+    assert check_docs.main([str(doc)]) == 1
+    assert check_docs.main([]) == 0
+    out = capsys.readouterr()
+    assert "FAILED" in out.err and "no drift" in out.out

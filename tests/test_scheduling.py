@@ -1,0 +1,252 @@
+"""Scheduling-policy seam: chunked prefill parity, priority/deadline
+admission order, and preemption round-trips.
+
+All configs lift the MoE capacity bound (capacity_factor=64) so batch
+composition cannot perturb outputs — every comparison here is exact
+token-for-token (see docs/serving.md on capacity-dropped MoE determinism).
+"""
+
+import time
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.models import onerec as onerec_model
+from repro.serving import (ContinuousScheduler, EngineConfig, PhaseExecutor,
+                           PrefixStore, Request, SchedulingPolicy,
+                           ServingEngine, SlotPool)
+
+
+def _cfg() -> OneRecConfig:
+    return OneRecConfig(
+        name="onerec-sched-test",
+        history_len=16,
+        transformer=TransformerConfig(
+            name="onerec-sched-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+def _request_dicts(cfg, n, rng, min_items=2, force_full=2):
+    """Mixed-length histories; the last ``force_full`` use the full
+    context, so chunked prefill always has multi-segment work."""
+    reqs = []
+    for i in range(n):
+        n_items = cfg.history_len if i >= n - force_full else \
+            int(rng.integers(min_items, cfg.history_len + 1))
+        reqs.append({
+            "tokens": rng.integers(0, 192, size=n_items * cfg.n_codebooks
+                                   ).astype(np.int32),
+            "profile": rng.normal(size=onerec_model.PROFILE_DIM
+                                  ).astype(np.float32)})
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def sched_setup():
+    cfg = _cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    reqs = _request_dicts(cfg, 9, np.random.default_rng(11))
+    return cfg, params, reqs
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_matches_monolithic(sched_setup):
+    """Paging a prefill through engine steps must not change a single
+    token — resume segments write the same K/V at the same positions."""
+    cfg, params, reqs = sched_setup
+    out_m, st_m = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(reqs)
+    out_c, st_c = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous",
+        prefill_chunk=8)).serve_requests(reqs)
+    for a, b in zip(out_c, out_m):
+        np.testing.assert_array_equal(a, b)
+    # chunking trades one big program for several bounded ones
+    assert st_c["prefill_calls"] > st_m["prefill_calls"]
+    assert st_c["join_steps"] > 0 and st_m["join_p99_s"] > 0
+
+
+def test_chunked_with_prefix_cache_parity(sched_setup):
+    """Chunked suffix prefill composes with tier-2 prefix reuse: repeat
+    traffic through a chunked+cached engine stays token-identical."""
+    cfg, params, reqs = sched_setup
+    out_ref, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(reqs)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", prefill_chunk=8,
+        prefix_cache=True))
+    out_cold, _ = eng.serve_requests(reqs)       # misses, chunked
+    out_warm, stats = eng.serve_requests(reqs)   # hits + short suffixes
+    for a, b, c in zip(out_cold, out_warm, out_ref):
+        np.testing.assert_array_equal(a, c)
+        np.testing.assert_array_equal(b, c)
+    assert stats["prefix_hit_rate"] > 0
+
+
+def test_fixed_mode_rejects_policy_knobs(sched_setup):
+    cfg, params, _ = sched_setup
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(mode="fixed",
+                                                prefill_chunk=8))
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(mode="fixed",
+                                                preemption=True))
+
+
+# ---------------------------------------------------------------------------
+# Priority / deadline admission
+# ---------------------------------------------------------------------------
+
+
+def test_priority_admission_order(sched_setup):
+    """With one slot, a later-queued higher-priority request is served
+    first: its latency must undercut both lower-class requests'."""
+    cfg, params, reqs = sched_setup
+    staged = [dict(reqs[0], priority=1), dict(reqs[1], priority=1),
+              dict(reqs[2], priority=0)]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=1, n_slots=1, mode="continuous"))
+    eng.serve_requests(staged)                   # compile warmup
+    eng.serve_requests(staged)
+    lat = eng.metrics["latency_s"]
+    assert lat[2] < lat[0] and lat[2] < lat[1]
+
+
+def test_deadline_orders_within_class(sched_setup):
+    """Equal classes: earliest deadline first."""
+    cfg, params, reqs = sched_setup
+    staged = [dict(reqs[0], deadline_s=50.0), dict(reqs[1], deadline_s=0.5)]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=1, n_slots=1, mode="continuous"))
+    eng.serve_requests(staged)                   # compile warmup
+    eng.serve_requests(staged)
+    lat = eng.metrics["latency_s"]
+    assert lat[1] < lat[0]
+
+
+def test_deadline_miss_accounting(sched_setup):
+    """Misses are counted against requests WITH deadlines, per class."""
+    cfg, params, reqs = sched_setup
+    staged = [dict(reqs[0], deadline_s=-0.001),   # already past at t0
+              dict(reqs[1], deadline_s=1000.0),
+              dict(reqs[2])]                      # no SLA
+    _, stats = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(staged)
+    assert stats["deadline_misses"] == 1.0
+    assert stats["deadline_miss_rate"] == pytest.approx(0.5)
+    assert stats["class_stats"]["0"]["n"] == 3.0
+    assert stats["class_stats"]["0"]["deadline_misses"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Preemption
+# ---------------------------------------------------------------------------
+
+
+def _mk_request(rid, req, priority=0, arrival_s=0.0):
+    return Request(rid=rid, tokens=np.asarray(req["tokens"], np.int32),
+                   profile=np.asarray(req["profile"], np.float32),
+                   arrival_s=arrival_s, priority=priority)
+
+
+def _drain(sched, queue, done):
+    while queue or sched.pool.n_used:
+        sched._advance_prefills(done)
+        sched._join(queue, done)
+        if sched._decoding_slots():
+            sched._decode_step(done)
+
+
+def test_preemption_roundtrip_parity(sched_setup):
+    """Preempt mid-decode -> requeue -> outputs token-identical to an
+    unpreempted run, with the resume riding the prefix store (row copy +
+    suffix prefill, not a full re-prefill)."""
+    cfg, params, reqs = sched_setup
+    # reference: same requests, pool big enough that nothing competes
+    ref_out, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=8, n_slots=8, mode="continuous")).serve_requests(
+        [dict(r) for r in reqs[:3]])
+
+    ex = PhaseExecutor(params, cfg, n_slots=2, use_fp8=True, prefix_rows=4)
+    store = PrefixStore(4, ex.arena_row_bytes, n_codebooks=cfg.n_codebooks)
+    pool = SlotPool(2)
+    sched = ContinuousScheduler(ex, pool, prefix_store=store,
+                                policy=SchedulingPolicy(preemption=True))
+    low = [_mk_request(0, reqs[0], priority=1),
+           _mk_request(1, reqs[1], priority=1)]
+    high = _mk_request(2, reqs[2], priority=0)
+
+    queue, done = deque(low), []
+    sched._join(queue, done)                 # both lows admitted
+    assert pool.n_used == 2 and not queue
+    sched._decode_step(done)                 # mid-decode (decode_len=3)
+    assert not done
+    queue.append(high)
+    sched._join(queue, done)                 # preempts one low for high
+    assert sched.preemptions == 1
+    assert pool.n_used == 2 and len(queue) == 1
+    resumes_before = ex.counters["resume_calls"]
+    _drain(sched, queue, done)
+
+    assert len(done) == 3
+    by_rid = {c.rid: c for c in done}
+    for rid in range(3):
+        np.testing.assert_array_equal(by_rid[rid].item, ref_out[rid])
+    # the preempted request came back through the arena, not a re-prefill
+    assert ex.counters["resume_calls"] > resumes_before
+    assert store.hits >= 1
+
+
+def test_preemption_requires_strictly_worse_victim(sched_setup):
+    """An equal-or-better class never gets preempted: the arrival waits."""
+    cfg, params, reqs = sched_setup
+    ex = PhaseExecutor(params, cfg, n_slots=1, use_fp8=True)
+    pool = SlotPool(1)
+    sched = ContinuousScheduler(ex, pool,
+                                policy=SchedulingPolicy(preemption=True))
+    first = _mk_request(0, reqs[0], priority=0)
+    rival = _mk_request(1, reqs[1], priority=0)
+    queue, done = deque([first]), []
+    sched._join(queue, done)
+    sched._decode_step(done)
+    queue.append(rival)
+    sched._join(queue, done)                 # no free slot, equal class
+    assert sched.preemptions == 0
+    assert pool[0].request_id == 0           # incumbent kept its slot
+    _drain(sched, queue, done)
+    assert len(done) == 2
+
+
+def test_preemption_latency_spans_requeue(sched_setup):
+    """A preempted request's latency runs from its ORIGINAL arrival."""
+    cfg, params, reqs = sched_setup
+    ex = PhaseExecutor(params, cfg, n_slots=1, use_fp8=True, prefix_rows=2)
+    store = PrefixStore(2, ex.arena_row_bytes, n_codebooks=cfg.n_codebooks)
+    pool = SlotPool(1)
+    sched = ContinuousScheduler(ex, pool, prefix_store=store,
+                                policy=SchedulingPolicy(preemption=True))
+    t_arr = time.perf_counter()
+    low = _mk_request(0, reqs[0], priority=1, arrival_s=t_arr)
+    high = _mk_request(1, reqs[1], priority=0, arrival_s=t_arr)
+    queue, done = deque([low]), []
+    sched._join(queue, done)
+    sched._decode_step(done)
+    queue.append(high)
+    sched._join(queue, done)
+    assert sched.preemptions == 1
+    _drain(sched, queue, done)
+    by_rid = {c.rid: c for c in done}
+    # the preempted request waited for the high one: it finished last and
+    # its latency covers both service attempts
+    assert by_rid[0].latency_s > by_rid[1].latency_s
