@@ -1,6 +1,6 @@
 """Paper §5.2: end-to-end serving latency + throughput.
 
-Six measurements:
+Eight measurements:
   1. FP16(BF16) baseline vs the optimized FP8 stack on the uniform batch-32
      style workload (CPU wall-clock, reduced OneRec-V2; CPU has no fp8
      compute units so the quantization win does NOT show in wall time — the
@@ -11,18 +11,33 @@ Six measurements:
      the fixed-batch reference — per-request p50/p99 latency and
      slot-occupancy utilization, the serving-infrastructure half of the
      paper's headline gain,
-  3. STAGGERED-arrival scheduler A/B: the same ragged workload but with
-     Poisson (exponential-gap) per-request ``arrival_s`` offsets — the
-     open-system regime where fixed batching's head-of-line blocking
+  3. STAGGERED-arrival scheduler A/B: the same ragged workload under TRUE
+     open-loop submission (``run_open_loop``: each request is submitted at
+     its wall-clock Poisson arrival while the engine steps between
+     arrivals — no simulated-arrival offsets inside one blocking call) —
+     the open-system regime where fixed batching's head-of-line blocking
      (waiting for the batch to fill) hurts most,
-  4. REPEAT-traffic prefix-cache A/B: Zipf-revisiting users whose histories
+  4. HOLD-WINDOW admission A/B under an OVERLOADED open system: Poisson
+     arrivals offered faster than the single-request service rate with a
+     slot pool big enough that dispatch, not slots, is the bottleneck —
+     the regime where admitting every arrival the moment it lands runs
+     one tiny prefill program (plus one whole-pool decode round) per
+     arrival.  Hold-on (``hold_k``/``hold_ms``) vs hold-off through
+     otherwise-identical open-loop engines: total program dispatches,
+     throughput delta, latency cost, token-equality check,
+  5. REPEAT-traffic prefix-cache A/B: Zipf-revisiting users whose histories
      extend by a few items between requests — the recommendation-serving
      workload the two-tier KV cache targets.  Cache-on vs cache-off
      continuous engines over the identical request stream: hit rate,
      prefill tokens computed/saved, padded-token waste, throughput, and a
      token-for-token output equality check (the workload config lifts the
      MoE capacity bound so batch composition cannot perturb outputs),
-  5. CHUNKED-PREFILL A/B under SLA traffic: Poisson arrivals with a
+  6. PREFIX-ADMISSION A/B in the LOW-REPEAT Zipf regime (mostly one-off
+     users, small arena): store-on-first-sight vs TinyLFU-style
+     second-sight admission — the doorkeeper keeps one-off traffic from
+     churning the arena, so ``prefix_evictions`` must drop (asserted)
+     while repeat users keep hitting,
+  7. CHUNKED-PREFILL A/B under SLA traffic: Poisson arrivals with a
      long-history heavy tail and two priority classes (interactive with a
      tight deadline, batch with a loose one), chunked vs monolithic prefill
      through otherwise-identical continuous engines.  The long histories
@@ -30,7 +45,7 @@ Six measurements:
      chunking bounds that, which shows up in join-step wall-time p99, the
      decode-stall fraction, and the interactive class's deadline-miss rate
      — with a token-for-token output equality check,
-  6. the TPU-v5e projection from the dry-run artifacts: serve latency =
+  8. the TPU-v5e projection from the dry-run artifacts: serve latency =
      dominant roofline term of (prefill + decode_len x decode) for the FULL
      4B/0.5B model at batch 32, bf16 vs fp8 — the §5.2 analogue
      (the paper: 139 ms -> 70 ms, throughput 205 -> 394).
@@ -48,6 +63,7 @@ from __future__ import annotations
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
@@ -59,9 +75,10 @@ from benchmarks.analytic import cell_analytics  # noqa: E402
 from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 from repro.configs import registry  # noqa: E402
 from repro.configs.base import OneRecConfig, TransformerConfig  # noqa: E402
-from repro.launch.serve import build_requests  # noqa: E402
 from repro.models import onerec as onerec_model  # noqa: E402
-from repro.serving import EngineConfig, ServingEngine  # noqa: E402
+from repro.serving import (EngineConfig, ServingEngine,  # noqa: E402
+                           run_open_loop)
+from repro.serving.requests import build_requests, make_request  # noqa: E402
 
 JSON_OUT = "results/bench_latency_throughput.json"
 
@@ -121,37 +138,144 @@ def measured_scheduler_ab(n_requests: int = 30, batch: int = 8):
 
 def measured_staggered(n_requests: int = 16, batch: int = 8,
                        rate_rps: float = 2.0, seed: int = 0):
-    """Scheduler A/B under Poisson arrivals: per-request ``arrival_s``
-    offsets with exponential gaps at ``rate_rps`` offered load.  The engine
-    has always accepted arrival offsets; this measures the open-system
-    regime (continuous admits each request on arrival; fixed waits for its
-    whole batch — head-of-line blocking shows up in mean and p99).
+    """Scheduler A/B under TRUE open-loop Poisson arrivals: each request is
+    submitted at its wall-clock arrival time (``run_open_loop``), not
+    queued up front with simulated offsets.  Continuous admits each
+    request on arrival; fixed waits for its whole batch — head-of-line
+    blocking shows up in mean and p99.
 
     The offered rate is deliberately BELOW the singleton service rate: on
     CPU, per-program overhead dominates at these shapes, so an overloaded
     continuous engine (one prefill program per arrival) amortizes worse
-    than fixed batching — a dispatch-overhead effect, not a scheduling
-    one.  Admission batching under overload (hold windows / SLA-aware
-    join) is a ROADMAP policy seam."""
+    than fixed batching — the dispatch-overhead effect the hold-window
+    A/B (``measured_hold_overload``) measures and mitigates."""
     cfg = _bench_cfg()
     params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
     requests = build_requests(cfg, n_requests, batch, seed=seed, ragged=True)
     rng = np.random.default_rng(seed)
     offsets = np.cumsum(rng.exponential(1.0 / rate_rps, size=n_requests))
-    for r, t in zip(requests, offsets):
-        r["arrival_s"] = float(t)
+    timed = [dict(r, arrival_s=float(t))
+             for r, t in zip(requests, offsets)]
     out = {"rate_rps": rate_rps}
     for mode in ("continuous", "fixed"):
         eng = ServingEngine(params, cfg, EngineConfig(
             batch_size=batch, use_fp8=True, mode=mode))
         # two warmup passes: all-at-once compiles the LARGE join-group
-        # shapes, a staggered pass compiles the SMALL (per-arrival) ones —
+        # shapes, an open-loop pass compiles the SMALL (per-arrival) ones —
         # without the latter, the measured run pays XLA compiles mid-flight
         # for every (1..2, t_bucket) prefill shape continuous admission hits
-        eng.serve_requests([dict(r, arrival_s=0.0) for r in requests])
         eng.serve_requests(requests)
-        _, stats = eng.serve_requests(requests)
+        run_open_loop(eng, timed)
+        _, stats = run_open_loop(eng, timed)
         out[mode] = stats
+    return out
+
+
+def _hold_cfg() -> OneRecConfig:
+    """Hold-window A/B config: shapes small enough that fixed per-program
+    overhead (dispatch, host sync, bucketing) is a large share of each
+    program — the regime where admission batching pays.  MoE capacity
+    lifted so the hold-on/off batch compositions cannot perturb outputs."""
+    return OneRecConfig(
+        name="onerec-v2-hold-bench",
+        history_len=16,
+        transformer=TransformerConfig(
+            name="onerec-v2-hold-bench-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=8, beam_width=4)
+
+
+def _warm_hold_shapes(eng, cfg, n_slots: int, seed: int = 1):
+    """Compile the (group-size bucket, length bucket) prefill lattice the
+    open-loop run can hit — mid-run XLA compiles would otherwise dwarf
+    the per-program dispatch overhead this A/B measures."""
+    rng = np.random.default_rng(seed)
+    ncb = cfg.n_codebooks
+    lengths = (2 * ncb, 8 * ncb, cfg.history_len * ncb)
+    for b in (1, 2, 3, 5, 8, 13, 21, n_slots):   # buckets 1..n_slots
+        for t in lengths:
+            eng.serve_requests([
+                make_request(rng.integers(0, 192, size=t),
+                             rng.normal(size=onerec_model.PROFILE_DIM))
+                for _ in range(b)])
+
+
+def measured_hold_overload(n_requests: int = 96, batch: int = 8,
+                           n_slots: int = 32, overload: float = 2.5,
+                           hold_k: int = 8, seed: int = 0):
+    """Hold-window admission A/B under an overloaded Poisson OPEN system.
+
+    The slot pool (``n_slots``) is big enough that slots never bind, and
+    the offered rate is calibrated to ``overload``x the measured
+    single-request service rate — so without holding, every engine round
+    joins the 1-3 requests that arrived since the last round: one small
+    prefill program each, plus one whole-pool decode round per join
+    round.  Hold-on defers the join until ``hold_k`` requests or ~4 mean
+    arrival gaps (``hold_ms``) accumulate, so admissions batch into
+    fewer, fuller programs — the measured effect is the DISPATCH
+    reduction (total programs launched for the same tokens) at a bounded
+    per-request latency cost, with the throughput delta reported
+    alongside.  Same requests, same wall-clock open loop, same engine
+    config otherwise; outputs are checked token-for-token (the config
+    lifts the MoE capacity bound), and the shape lattice is pre-compiled
+    so no run pays XLA compiles mid-flight."""
+    cfg = _hold_cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    ncb = cfg.n_codebooks
+    requests = [
+        make_request(rng.integers(
+            0, 192, size=int(rng.integers(2, cfg.history_len + 1)) * ncb),
+            rng.normal(size=onerec_model.PROFILE_DIM))
+        for _ in range(n_requests)]
+
+    def engine(hk, hm):
+        return ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, use_fp8=True, mode="continuous",
+            n_slots=n_slots, hold_k=hk, hold_ms=hm))
+
+    # calibrate the offered rate off warm single-request service time
+    eng = engine(0, 0.0)
+    _warm_hold_shapes(eng, cfg, n_slots)
+    t0 = time.perf_counter()
+    for r in requests[:8]:
+        eng.serve_requests([r])
+    rate_rps = overload * 8 / (time.perf_counter() - t0)
+    hold_ms = 4e3 / rate_rps              # ~4 mean arrival gaps
+    offsets = np.cumsum(rng.exponential(1.0 / rate_rps, size=n_requests))
+    timed = [dict(r, arrival_s=float(t))
+             for r, t in zip(requests, offsets)]
+    out = {"rate_rps": rate_rps, "hold_k": hold_k, "hold_ms": hold_ms,
+           "n_slots": n_slots, "overload": overload}
+    outputs = {}
+    for name, (hk, hm) in (("hold_off", (0, 0.0)),
+                           ("hold_on", (hold_k, hold_ms))):
+        eng = engine(hk, hm)
+        _warm_hold_shapes(eng, cfg, n_slots)
+        run_open_loop(eng, timed)         # timing warmup pass
+        outs, stats = run_open_loop(eng, timed)
+        outputs[name] = outs
+        out[name] = stats
+    out["outputs_match"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(outputs["hold_on"], outputs["hold_off"]))
+    off_rps = out["hold_off"]["throughput_rps"]
+    out["throughput_gain"] = out["hold_on"]["throughput_rps"] / off_rps \
+        if off_rps else 0.0
+    off_calls = out["hold_off"]["prefill_calls"]
+    out["prefill_call_reduction"] = \
+        1.0 - out["hold_on"]["prefill_calls"] / off_calls if off_calls \
+        else 0.0
+    # total programs launched for the same generated tokens: the
+    # dispatch-overhead claim, join programs + whole-pool decode rounds
+    off_disp = (out["hold_off"]["prefill_calls"]
+                + out["hold_off"]["decode_steps"])
+    on_disp = (out["hold_on"]["prefill_calls"]
+               + out["hold_on"]["decode_steps"])
+    out["dispatch_reduction"] = 1.0 - on_disp / off_disp if off_disp else 0.0
     return out
 
 
@@ -186,9 +310,9 @@ def build_repeat_traffic(cfg, n_requests: int, n_users: int, seed: int,
             room = cfg.history_len * ncb - len(u["hist"])
             u["hist"] += list(rng.integers(0, vocab, size=min(grow, room)))
         u["visits"] += 1
-        requests.append({"tokens": np.asarray(u["hist"], np.int32),
-                         "profile": u["profile"],
-                         "arrival_s": i * spacing_s})
+        requests.append(make_request(np.asarray(u["hist"], np.int32),
+                                     u["profile"],
+                                     arrival_s=i * spacing_s))
     return requests, revisits / n_requests
 
 
@@ -229,6 +353,49 @@ def measured_prefix_repeat(n_requests: int = 36, batch: int = 8,
     return out
 
 
+def measured_prefix_admission(n_requests: int = 36, batch: int = 8,
+                              n_users: int = 24, prefix_rows: int = 6,
+                              seed: int = 0):
+    """Prefix-store admission A/B in the LOW-REPEAT Zipf regime.
+
+    Near-uniform user weights (``zipf_a=0.3``) over ``n_users`` close to
+    ``n_requests`` make most users one-shot visitors; the arena is small
+    (``prefix_rows``), so store-on-first-sight churns it — every one-off
+    history takes a row something else must vacate.  Second-sight
+    admission records a first offer's boundary digests and stores only on
+    a shared-boundary re-offer, so one-off traffic never evicts anything.
+    Measured COLD (single call per engine): a repeat of the identical
+    stream would make every offer a second sight and erase the regime.
+    ``prefix_evictions`` dropping is the asserted signal.
+    """
+    cfg = _bench_cfg(capacity_factor=64.0)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    requests, share = build_repeat_traffic(cfg, n_requests, n_users, seed,
+                                           zipf_a=0.3)
+    out = {"n_users": n_users, "revisit_share": share,
+           "prefix_rows": prefix_rows}
+    outputs = {}
+    for name, first in (("first_sight", True), ("second_sight", False)):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, use_fp8=True, mode="continuous",
+            prefill_bucket_min=4, prefix_cache=True,
+            prefix_rows=prefix_rows, store_on_first_sight=first))
+        outs, stats = eng.serve_requests(requests)
+        outputs[name] = outs
+        out[name] = stats
+    assert out["second_sight"]["prefix_evictions"] \
+        < out["first_sight"]["prefix_evictions"], \
+        "second-sight admission must cut evictions in the low-repeat regime"
+    out["outputs_match"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(outputs["first_sight"], outputs["second_sight"]))
+    first_ev = out["first_sight"]["prefix_evictions"]
+    out["eviction_reduction"] = \
+        1.0 - out["second_sight"]["prefix_evictions"] / first_ev \
+        if first_ev else 0.0
+    return out
+
+
 def build_sla_traffic(cfg, n_requests: int, seed: int, rate_rps: float = 4.0,
                       long_frac: float = 0.25, tight_deadline_s: float = 0.6,
                       loose_deadline_s: float = 4.0):
@@ -248,15 +415,13 @@ def build_sla_traffic(cfg, n_requests: int, seed: int, rate_rps: float = 4.0,
     for i in range(n_requests):
         long = rng.random() < long_frac
         n_items = cfg.history_len if long else int(rng.integers(2, 9))
-        requests.append({
-            "tokens": rng.integers(0, vocab, size=n_items * ncb
-                                   ).astype(np.int32),
-            "profile": rng.normal(size=onerec_model.PROFILE_DIM
-                                  ).astype(np.float32),
-            "arrival_s": float(arrivals[i]),
-            "priority": 1 if long else 0,
-            "deadline_s": float(arrivals[i] + (loose_deadline_s if long
-                                               else tight_deadline_s))})
+        requests.append(make_request(
+            rng.integers(0, vocab, size=n_items * ncb),
+            rng.normal(size=onerec_model.PROFILE_DIM),
+            arrival_s=float(arrivals[i]),
+            priority=1 if long else 0,
+            deadline_s=float(arrivals[i] + (loose_deadline_s if long
+                                            else tight_deadline_s))))
     return requests
 
 
@@ -278,9 +443,8 @@ def _warm_join_shapes(eng, cfg, seed: int = 1):
     for b in (1, 2, 3, 5, 8):            # group buckets 1, 2, 4, 8
         for t in lengths:                # length buckets short / mid / full
             eng.serve_requests([
-                {"tokens": rng.integers(0, vocab, size=t).astype(np.int32),
-                 "profile": rng.normal(size=onerec_model.PROFILE_DIM
-                                       ).astype(np.float32)}
+                make_request(rng.integers(0, vocab, size=t),
+                             rng.normal(size=onerec_model.PROFILE_DIM))
                 for _ in range(b)])
 
 
@@ -401,7 +565,7 @@ def run() -> list:
     stag = measured_staggered()
     report["staggered_poisson"] = stag
     c, f = stag["continuous"], stag["fixed"]
-    print(f"[scheduler A/B, Poisson arrivals @ {stag['rate_rps']:.0f} rps] "
+    print(f"[scheduler A/B, open-loop Poisson @ {stag['rate_rps']:.0f} rps] "
           f"fixed: mean {f['mean_latency_s']*1e3:.0f} ms, "
           f"p99 {f['p99_latency_s']*1e3:.0f} ms | "
           f"continuous: mean {c['mean_latency_s']*1e3:.0f} ms, "
@@ -412,6 +576,29 @@ def run() -> list:
     rows.append(f"serve_stagger/continuous_p99_latency,"
                 f"{c['p99_latency_s']*1e6:.0f},"
                 f"x{f['p99_latency_s']/c['p99_latency_s']:.2f}")
+
+    hold = measured_hold_overload()
+    report["hold_window_overload"] = hold
+    on, off = hold["hold_on"], hold["hold_off"]
+    print(f"[hold-window A/B, {hold['overload']:.1f}x-overloaded open loop "
+          f"@ {hold['rate_rps']:.0f} rps, hold_k={hold['hold_k']} "
+          f"hold_ms={hold['hold_ms']:.0f}] programs "
+          f"{off['prefill_calls'] + off['decode_steps']:.0f} -> "
+          f"{on['prefill_calls'] + on['decode_steps']:.0f} "
+          f"(dispatch -{100*hold['dispatch_reduction']:.0f}%; prefill "
+          f"-{100*hold['prefill_call_reduction']:.0f}%) | throughput "
+          f"{off['throughput_rps']:.1f} -> {on['throughput_rps']:.1f} "
+          f"req/s (x{hold['throughput_gain']:.2f}) | p99 "
+          f"{off['p99_latency_s']*1e3:.0f} -> "
+          f"{on['p99_latency_s']*1e3:.0f} ms | hold rounds "
+          f"{on['hold_rounds']:.0f} | outputs match: "
+          f"{hold['outputs_match']}")
+    rows.append(f"serve_hold/dispatch_reduction,"
+                f"{1000*hold['dispatch_reduction']:.0f},"
+                f"-{100*hold['dispatch_reduction']:.0f}%")
+    rows.append(f"serve_hold/throughput_gain,0,"
+                f"x{hold['throughput_gain']:.2f}")
+    rows.append(f"serve_hold/outputs_match,{int(hold['outputs_match'])},")
 
     rep = measured_prefix_repeat()
     report["prefix_repeat"] = rep
@@ -432,6 +619,23 @@ def run() -> list:
                 f"-{100*rep['prefill_token_reduction']:.0f}%")
     rows.append(f"serve_prefix/outputs_match,"
                 f"{int(rep['outputs_match'])},")
+
+    adm = measured_prefix_admission()
+    report["prefix_admission"] = adm
+    fs, ss = adm["first_sight"], adm["second_sight"]
+    print(f"[prefix-admission A/B, low-repeat Zipf "
+          f"({100*adm['revisit_share']:.0f}% revisits, "
+          f"{adm['prefix_rows']}-row arena)] evictions "
+          f"{fs['prefix_evictions']:.0f} -> {ss['prefix_evictions']:.0f} "
+          f"(-{100*adm['eviction_reduction']:.0f}%) | first-sight "
+          f"record-only offers {ss['prefix_first_sights']:.0f} | hit rate "
+          f"{fs['prefix_hit_rate']:.2f} -> {ss['prefix_hit_rate']:.2f} | "
+          f"outputs match: {adm['outputs_match']}")
+    rows.append(f"serve_prefix_adm/eviction_reduction,"
+                f"{1000*adm['eviction_reduction']:.0f},"
+                f"-{100*adm['eviction_reduction']:.0f}%")
+    rows.append(f"serve_prefix_adm/outputs_match,"
+                f"{int(adm['outputs_match'])},")
 
     sla = measured_chunked_sla()
     report["chunked_prefill_sla"] = sla

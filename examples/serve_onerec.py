@@ -1,7 +1,17 @@
-"""Serving example: continuous-batching request serving through the
+"""Serving example: the open-system request lifecycle through the
 optimized FP8 stack (§5.2 setting — short-context generative
 recommendation with a slot-based KV cache; pass ``--mode fixed`` for the
 paper's padded fixed-batch measurement mode).
+
+Demonstrates the submit/step/poll API end to end:
+
+  1. ``engine.submit(request)`` — non-blocking admission, returns a
+     ``RequestHandle`` (a bounded queue would raise ``AdmissionFull``);
+  2. ``engine.step()`` — one scheduler round; ``handle.poll()`` checks
+     completion without blocking;
+  3. ``handle.cancel()`` — withdraw a request mid-flight, freeing its
+     slot;
+  4. ``engine.drain()`` + ``handle.result()`` — run to empty and collect.
 
     PYTHONPATH=src python examples/serve_onerec.py --requests 96 --ragged
 """
@@ -11,9 +21,9 @@ import argparse
 import jax
 
 from repro.configs.registry import get_arch
-from repro.launch.serve import build_requests
 from repro.models import onerec
 from repro.serving import EngineConfig, ServingEngine
+from repro.serving.requests import build_requests
 
 
 def main():
@@ -36,8 +46,34 @@ def main():
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=args.batch, use_fp8=args.fp8, mode=args.mode,
         n_slots=args.slots))
-    outs, stats = engine.serve_requests(requests)
-    print(f"mode={args.mode} fp8={args.fp8} served {len(outs)} requests | "
+
+    # 1. submit: non-blocking, the engine does no work yet
+    handles = [engine.submit(r) for r in requests]
+    assert all(h.status == "queued" for h in handles)
+
+    # 2. step + poll: drive a few rounds by hand, watching completions land
+    polled = 0
+    for _ in range(3):
+        if not engine.busy:
+            break
+        engine.step()
+        polled = sum(h.poll() is not None for h in handles)
+    print(f"after 3 manual steps: {polled}/{len(handles)} complete")
+
+    # 3. cancel: withdraw the last request wherever it is in the lifecycle
+    victim = handles[-1]
+    where = victim.status
+    cancelled = victim.cancel()
+    print(f"cancel() on the last request (was {where}): {cancelled}")
+
+    # 4. drain and collect (result() would also step the engine by itself)
+    engine.drain()
+    kept = [h for h in handles if not h.cancelled]
+    outs = [h.result() for h in kept]
+    stats = engine.stats()
+
+    print(f"mode={args.mode} fp8={args.fp8} served {len(outs)} requests "
+          f"(+{int(stats['cancelled'])} cancelled) | "
           f"per-request mean {stats['mean_latency_s']*1e3:.1f} ms | "
           f"p50 {stats['p50_latency_s']*1e3:.1f} ms | "
           f"p99 {stats['p99_latency_s']*1e3:.1f} ms | "

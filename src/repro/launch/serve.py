@@ -1,10 +1,17 @@
 """Serving launcher: OneRec-V2 generation with the optimized FP8 stack and
-the continuous-batching slot engine.
+the open-system continuous-batching slot engine.
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 64 \
       [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
-      [--prefix-cache [--prefix-rows 32]] [--prefill-chunk 32] \
-      [--preemption]
+      [--rate 8.0] [--max-queue 64] [--hold-k 4] [--hold-ms 25] \
+      [--prefix-cache [--prefix-rows 32] [--second-sight]] \
+      [--prefill-chunk 32] [--preemption]
+
+With ``--rate`` the launcher runs a REAL arrival-driven serve loop
+(``run_open_loop``): requests are submitted at wall-clock Poisson arrival
+times while the engine steps between them — the open-queueing regime the
+hold-window admission policy targets.  Without it, the closed-batch
+``serve_requests`` shim serves everything queued up front.
 """
 
 from __future__ import annotations
@@ -15,29 +22,10 @@ import jax
 import numpy as np
 
 from repro.configs import registry
-from repro.data.onerec_data import OneRecStreamConfig, SemanticIDStream
 from repro.models import onerec as onerec_model
-from repro.serving import EngineConfig, ServingEngine
-
-
-def build_requests(cfg, n_requests: int, batch: int, seed: int,
-                   ragged: bool):
-    stream = SemanticIDStream(OneRecStreamConfig(
-        codebook_size=cfg.transformer.vocab_size - 64,
-        history_len=cfg.history_len, global_batch=batch, seed=seed))
-    rng = np.random.default_rng(seed)
-    requests = []
-    step = 0
-    while len(requests) < n_requests:
-        r = stream.serve_request_at(step)
-        for i in range(r["tokens"].shape[0]):
-            tokens = r["tokens"][i]
-            if ragged:  # mixed history lengths: truncate to a random prefix
-                n_items = int(rng.integers(2, cfg.history_len + 1))
-                tokens = tokens[:n_items * cfg.n_codebooks]
-            requests.append({"tokens": tokens, "profile": r["profile"][i]})
-        step += 1
-    return requests[:n_requests]
+from repro.serving import EngineConfig, ServingEngine, run_open_loop
+from repro.serving.requests import build_requests  # noqa: F401  (re-export:
+#                        the benches and examples used to import it here)
 
 
 def main():
@@ -53,11 +41,34 @@ def main():
                     help="KV-slot pool size (0 => batch size)")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed history lengths")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s: submit "
+                         "each request at its wall-clock arrival instead "
+                         "of queueing the whole batch up front (0 = "
+                         "closed-batch serve_requests)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission-queue bound; a full queue rejects "
+                         "submissions with AdmissionFull (0 = unbounded). "
+                         "Open-loop mode sheds the rejected requests")
+    ap.add_argument("--hold-k", type=int, default=0,
+                    help="admission hold window: defer the join round "
+                         "until K arrived requests accumulated (continuous "
+                         "mode; batches small prefill programs under open "
+                         "overload)")
+    ap.add_argument("--hold-ms", type=float, default=0.0,
+                    help="max milliseconds the hold window may defer the "
+                         "oldest arrived request (bounds the latency cost "
+                         "of --hold-k; either knob alone also works)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="two-tier KV cache: content-addressed prefix "
                          "reuse across requests (continuous mode)")
     ap.add_argument("--prefix-rows", type=int, default=0,
                     help="prefix-store arena rows (0 => 2x slots)")
+    ap.add_argument("--second-sight", action="store_true",
+                    help="TinyLFU-style prefix-store admission: record a "
+                         "prefix digest on first offer, store the K/V only "
+                         "on the second — one-off traffic stops churning "
+                         "the arena (requires --prefix-cache)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="max history tokens per prefill program (0 = "
                          "monolithic); chunked prefill pages long "
@@ -76,12 +87,32 @@ def main():
     params = onerec_model.init_onerec(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=batch, use_fp8=args.fp8, mode=args.mode,
-        n_slots=args.slots, prefix_cache=args.prefix_cache,
-        prefix_rows=args.prefix_rows, prefill_chunk=args.prefill_chunk,
-        preemption=args.preemption))
+        n_slots=args.slots, max_queue=args.max_queue,
+        hold_k=args.hold_k, hold_ms=args.hold_ms,
+        prefix_cache=args.prefix_cache, prefix_rows=args.prefix_rows,
+        store_on_first_sight=not args.second_sight,
+        prefill_chunk=args.prefill_chunk, preemption=args.preemption))
     requests = build_requests(cfg, args.requests, batch, args.seed,
                               args.ragged)
-    outs, stats = engine.serve_requests(requests)
+
+    if args.rate > 0:
+        # arrival-driven open loop: wall-clock Poisson submission
+        rng = np.random.default_rng(args.seed)
+        offsets = np.cumsum(rng.exponential(1.0 / args.rate,
+                                            size=len(requests)))
+        timed = [dict(r, arrival_s=float(t))
+                 for r, t in zip(requests, offsets)]
+        outs, stats = run_open_loop(engine, timed,
+                                    drop_on_full=bool(args.max_queue))
+        served = [o for o in outs if o is not None]
+        print(f"[serve] open loop @ {args.rate:.1f} req/s offered: served "
+              f"{len(served)}/{len(requests)} "
+              f"(rejected {int(stats['rejected'])}), "
+              f"hold rounds {int(stats['hold_rounds'])}, "
+              f"prefill programs {int(stats['prefill_calls'])}")
+    else:
+        outs, stats = engine.serve_requests(requests)
+
     print(f"[serve] mode={args.mode} fp8={args.fp8} "
           f"requests={len(requests)} slots={int(stats['n_slots'])} "
           f"occupancy={stats['slot_occupancy']:.2f}")
@@ -93,7 +124,10 @@ def main():
               f"saved {int(stats['prefix_tokens_saved'])} prefill tokens, "
               f"{int(stats['prefix_entries'])} entries / "
               f"{int(stats['prefix_store_bytes'])} B stored, "
-              f"peak pinned {int(stats['prefix_bytes_pinned'])} B")
+              f"peak pinned {int(stats['prefix_bytes_pinned'])} B, "
+              f"{int(stats['prefix_evictions'])} evictions"
+              + (f", {int(stats['prefix_first_sights'])} first-sight "
+                 f"record-only offers" if args.second_sight else ""))
     print(f"[serve] per-request latency: "
           f"mean={stats['mean_latency_s']*1e3:.1f}ms "
           f"p50={stats['p50_latency_s']*1e3:.1f}ms "

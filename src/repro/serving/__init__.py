@@ -45,18 +45,31 @@ repeat traffic short-circuits prefill through the prefix store:
 * ``executor.py`` — the jitted prefill/resume/decode/select and
   pool<->arena copy programs with donated cache buffers; FP8-or-BF16 is a
   parameter-tree swap (§4.1 policy), so the A/B is a one-flag switch.
-* ``engine.py`` — the ``ServingEngine`` facade: seed-compatible
-  ``serve_requests`` API; per-request p50/p99 latency, slot-occupancy,
-  prefill-padding and prefix hit-rate / bytes-pinned / tokens-saved
-  metrics, windowed per call.
+* ``engine.py`` — the ``ServingEngine``: the OPEN-SYSTEM request
+  lifecycle API (``submit -> RequestHandle`` with bounded-queue
+  backpressure, ``step``, ``handle.poll/result/cancel``, ``drain``,
+  windowed ``stats``); the seed-compatible closed-batch
+  ``serve_requests`` / ``generate_batch`` are thin shims over it, and
+  ``run_open_loop`` drives wall-clock arrival submission.
+* ``requests.py`` — shared request-dict construction (``make_request``,
+  ``requests_from_arrays``, the synthetic ``build_requests`` workload).
 
-See ``docs/serving.md`` for the admission flow and eviction policy.
+Schedulers are incremental ``step()`` state machines whose queues and
+in-flight state persist across calls; ``SchedulingPolicy`` hold windows
+(``hold_k`` / ``hold_ms``) batch admissions under open overload.
+
+See ``docs/serving.md`` for the lifecycle, admission flow, and eviction
+policy.
 """
 
-from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.engine import (AdmissionFull, EngineConfig,  # noqa: F401
+                                  RequestCancelled, RequestHandle,
+                                  ServingEngine, run_open_loop)
 from repro.serving.executor import PhaseExecutor  # noqa: F401
 from repro.serving.kv_cache import (PrefixEntry, PrefixStore,  # noqa: F401
                                     SlotPool, SlotState, prefix_hash_chain)
+from repro.serving.requests import (build_requests,  # noqa: F401
+                                    make_request, requests_from_arrays)
 from repro.serving.scheduler import (Completion,  # noqa: F401
                                      ContinuousScheduler,
                                      FixedBatchScheduler, Request,

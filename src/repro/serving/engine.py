@@ -1,30 +1,60 @@
-"""OneRec serving engine facade: the system whose latency/throughput the
-paper measures (§5.2).
+"""OneRec serving engine: the open-system request-lifecycle API over the
+serving subsystem (the system whose latency/throughput the paper measures,
+§5.2).
 
-Thin shell over the serving subsystem (see ``repro.serving`` for the
-architecture overview): it wraps raw request dicts into ``Request``s, picks a
-scheduler (``continuous`` slot-based batching or the ``fixed``-batch
-reference mode), runs it against the compiled-phase executor, and reports
-PER-REQUEST latency percentiles plus slot-occupancy utilization.  The
-``serve_requests`` / ``generate_batch`` API of the seed engine is preserved
-for the A/B scripts; metrics are windowed per call (a second call starts
-from a clean slate).
+The engine is an OPEN system — callers drive a request lifecycle instead
+of handing over a closed batch:
+
+  * ``submit(request) -> RequestHandle`` — non-blocking admission into a
+    bounded queue; a full queue raises ``AdmissionFull`` (the explicit
+    backpressure signal — callers shed or retry, the engine never blocks
+    or silently drops);
+  * ``step()`` — advance ONE scheduler round (resume chunked prefills ->
+    retire -> join -> decode) and deliver any completions to their
+    handles;
+  * ``handle.poll()`` / ``handle.result()`` / ``handle.cancel()`` — the
+    per-request side: non-blocking completion check, step-until-done, and
+    mid-flight cancellation (frees the slot and releases prefix-store
+    pins);
+  * ``drain()`` — step (and idle-sleep) until every accepted request
+    retired; sets the scheduler's ``draining`` flag so admission hold
+    windows and fixed-mode tail batches release;
+  * ``stats()`` / ``reset_window()`` — windowed metrics over whatever the
+    caller defines as one measurement.
+
+``serve_requests`` / ``generate_batch`` — the seed engine's closed-batch
+API — are thin shims implemented PURELY in terms of submit + step + drain
+(token-identical to the closed-loop scheduler they replaced), and
+``run_open_loop`` drives true open-loop submission: each request enters at
+its wall-clock arrival, the regime the hold-window A/B measures.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import OneRecConfig
 from repro.serving.executor import PhaseExecutor
 from repro.serving.kv_cache import PrefixStore, SlotPool
+from repro.serving.requests import requests_from_arrays
 from repro.serving.scheduler import (Completion, ContinuousScheduler,
                                      FixedBatchScheduler, Request,
                                      SchedulingPolicy)
+
+
+class AdmissionFull(RuntimeError):
+    """``submit`` backpressure: the bounded admission queue is at capacity.
+    The caller decides — shed the request, retry after stepping, or route
+    to another replica; the engine never blocks a submitter."""
+
+
+class RequestCancelled(RuntimeError):
+    """``result()`` on a handle whose request was cancelled."""
 
 
 @dataclasses.dataclass
@@ -39,16 +69,84 @@ class EngineConfig:
     n_slots: int = 0               # KV-slot pool size; 0 => batch_size
     prefill_bucket_min: int = 16   # smallest ragged-prefill length bucket
     max_prefill_groups: int = 2    # bucket programs per continuous join round
+    # -- open-system admission --
+    max_queue: int = 0             # admission-queue bound; 0 = unbounded
+    #                                (submit raises AdmissionFull when full)
     # -- tier-2 prefix cache (continuous mode only) --
     prefix_cache: bool = False     # content-addressed cross-request KV reuse
     prefix_rows: int = 0           # arena rows (cached prefixes); 0 => 2x slots
     prefix_bytes_budget: int = 0   # LRU byte budget; 0 => all rows usable
+    store_on_first_sight: bool = True   # False = TinyLFU-style second-sight
+    #                                admission (store a prefix only when its
+    #                                content has been offered twice)
     # -- scheduling policy (continuous mode only) --
     prefill_chunk: int = 0         # max history tokens per prefill program
     #                                (0 = monolithic; bounds join-step spikes)
     preemption: bool = False       # free worst decoding slot for a strictly
     #                                higher-priority arrival (resume via the
     #                                prefix store when enabled)
+    hold_k: int = 0                # admission hold window: join only when K
+    hold_ms: float = 0.0           # requests or T ms accumulated (0 = off)
+
+
+class RequestHandle:
+    """The caller's side of one submitted request.
+
+    ``poll()`` is the non-blocking check (``Completion`` or None);
+    ``result()`` steps the engine until THIS request retires and returns
+    its generated item; ``cancel()`` withdraws the request wherever it is
+    in the lifecycle.  Handles stay valid after completion — the
+    ``Completion`` (item, latency, deadline accounting) is kept on the
+    handle, not in the engine.
+    """
+
+    def __init__(self, engine: "ServingEngine", request: Request):
+        self._engine = engine
+        self._request = request
+        self.completion: Optional[Completion] = None
+        self.cancelled = False
+
+    @property
+    def rid(self) -> int:
+        return self._request.rid
+
+    @property
+    def status(self) -> str:
+        """``queued`` | ``running`` | ``done`` | ``cancelled``."""
+        if self.cancelled:
+            return "cancelled"
+        if self.completion is not None:
+            return "done"
+        if any(q is self._request for q in self._engine._sched.queue):
+            return "queued"
+        return "running"
+
+    def done(self) -> bool:
+        return self.completion is not None
+
+    def poll(self) -> Optional[Completion]:
+        """Non-blocking: the ``Completion`` once retired, else None."""
+        return self.completion
+
+    def result(self) -> np.ndarray:
+        """The generated item, stepping the engine until this request
+        retires.  Blocking a single-threaded driver here means no more
+        submissions can race in, so the engine drains toward this handle
+        (hold windows and fixed-mode tails release)."""
+        self._engine._drain_until(
+            lambda: self.completion is not None or self.cancelled)
+        if self.cancelled:
+            raise RequestCancelled(f"request {self.rid} was cancelled")
+        if self.completion is None:
+            raise RuntimeError(f"request {self.rid} never completed "
+                               f"(engine drained without retiring it)")
+        return self.completion.item
+
+    def cancel(self) -> bool:
+        """Withdraw the request; True when it was still queued or in
+        flight (its slot and prefix pins are released), False once it
+        already completed (or was already cancelled)."""
+        return self._engine.cancel(self)
 
 
 class ServingEngine:
@@ -63,26 +161,49 @@ class ServingEngine:
             if engine_cfg.mode != "continuous":
                 raise ValueError("prefix_cache requires continuous mode")
             prefix_rows = engine_cfg.prefix_rows or 2 * self.n_slots
-        if engine_cfg.mode != "continuous" and (engine_cfg.prefill_chunk
-                                                or engine_cfg.preemption):
-            raise ValueError("prefill_chunk / preemption require "
-                             "continuous mode")
+        if not engine_cfg.store_on_first_sight and not engine_cfg.prefix_cache:
+            raise ValueError("second-sight admission requires prefix_cache")
+        if engine_cfg.mode != "continuous" and (
+                engine_cfg.prefill_chunk or engine_cfg.preemption
+                or engine_cfg.hold_k or engine_cfg.hold_ms):
+            raise ValueError("prefill_chunk / preemption / hold windows "
+                             "require continuous mode")
+        if engine_cfg.max_queue and engine_cfg.hold_k > engine_cfg.max_queue:
+            raise ValueError(
+                f"hold_k ({engine_cfg.hold_k}) must not exceed max_queue "
+                f"({engine_cfg.max_queue}): a full admission queue could "
+                f"never accumulate the hold count, livelocking submitters")
+        if engine_cfg.mode == "fixed" and engine_cfg.max_queue \
+                and engine_cfg.max_queue < engine_cfg.batch_size:
+            raise ValueError(
+                f"max_queue ({engine_cfg.max_queue}) must cover batch_size "
+                f"({engine_cfg.batch_size}) in fixed mode: a full admission "
+                f"queue could never form a batch, livelocking submitters")
         self.executor = PhaseExecutor(
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
             prefill_bucket_min=engine_cfg.prefill_bucket_min,
             prefix_rows=prefix_rows)
-        # the store PERSISTS across serve_requests calls (repeat traffic
-        # spans calls); its hit/miss window resets per call like the
-        # executor counters
+        # the store PERSISTS across stats windows (repeat traffic spans
+        # them); its hit/miss window resets with the engine's
         self.prefix_store = PrefixStore(
             prefix_rows, self.executor.arena_row_bytes,
             max_bytes=engine_cfg.prefix_bytes_budget,
-            n_codebooks=cfg.n_codebooks) if prefix_rows else None
-        # windowed per serve_requests call (kept as an attribute for
-        # compatibility with the seed engine's A/B scripts)
+            n_codebooks=cfg.n_codebooks,
+            store_on_first_sight=engine_cfg.store_on_first_sight) \
+            if prefix_rows else None
+        # lifecycle state: ONE pool + ONE scheduler for the engine's whole
+        # life — queues, chunked-prefill segments, and preemption state
+        # persist across submit/step calls (the open-system redesign)
+        self.pool = SlotPool(self.n_slots)
+        self._sched = self._make_scheduler(self.pool)
+        self._rids = itertools.count()
+        self._handles: Dict[int, RequestHandle] = {}
+        # windowed per stats window (kept as an attribute for compatibility
+        # with the seed engine's A/B scripts)
         self.metrics: Dict[str, List[float]] = {"latency_s": [],
                                                 "batch_size": []}
+        self.reset_window()
 
     def _make_scheduler(self, pool: SlotPool):
         if self.ecfg.mode == "fixed":
@@ -93,73 +214,157 @@ class ServingEngine:
                                    prefix_store=self.prefix_store,
                                    policy=SchedulingPolicy(
                                        prefill_chunk=self.ecfg.prefill_chunk,
-                                       preemption=self.ecfg.preemption))
+                                       preemption=self.ecfg.preemption,
+                                       hold_k=self.ecfg.hold_k,
+                                       hold_ms=self.ecfg.hold_ms))
 
-    # -- serving --------------------------------------------------------------
+    # -- request lifecycle ----------------------------------------------------
 
-    def serve_requests(self, requests: List[Dict[str, np.ndarray]]
-                       ) -> Tuple[List[np.ndarray], Dict[str, float]]:
-        """Serve ``requests`` (dicts with ragged "tokens" + "profile",
-        optional "arrival_s" / "deadline_s" offsets from call start and an
-        int "priority" class, lower = more important); returns per-request
-        outputs in input order + per-call stats."""
-        if self.prefix_store is not None:
-            self.prefix_store.reset_window()   # entries persist, stats don't
-        if not requests:
-            return [], {"n_requests": 0.0, "wall_s": 0.0,
-                        "throughput_rps": 0.0, "mean_latency_s": 0.0,
-                        "p50_latency_s": 0.0, "p99_latency_s": 0.0,
-                        "slot_occupancy": 0.0, "n_slots": float(self.n_slots),
-                        "decode_steps": 0.0, "prefill_calls": 0.0,
-                        "mode": self.ecfg.mode, **self._prefix_stats(),
-                        "prefill_padded_rows": 0.0,
-                        "prefill_tokens": 0.0,
-                        "prefill_padded_token_frac": 0.0,
-                        "join_steps": 0.0, "join_mean_s": 0.0,
-                        "join_p50_s": 0.0, "join_p99_s": 0.0,
-                        "decode_stall_frac": 0.0, "preemptions": 0.0,
-                        "deadline_misses": 0.0, "deadline_miss_rate": 0.0,
-                        "class_stats": {}}
+    def _check_history(self, i, n_tokens: int) -> None:
         max_hist = self.cfg.history_len * self.cfg.n_codebooks
-        for i, r in enumerate(requests):
-            if len(r["tokens"]) > max_hist:
-                raise ValueError(
-                    f"request {i}: history of {len(r['tokens'])} tokens "
-                    f"exceeds the model's context ({max_hist} = "
-                    f"history_len x n_codebooks); truncate upstream")
-        t0 = time.perf_counter()
-        reqs = [Request(rid=i, tokens=np.asarray(r["tokens"], np.int32),
-                        profile=np.asarray(r["profile"], np.float32),
-                        arrival_s=t0 + float(r.get("arrival_s", 0.0)),
-                        priority=int(r.get("priority", 0)),
-                        deadline_s=t0 + float(r["deadline_s"])
-                        if r.get("deadline_s") is not None else None)
-                for i, r in enumerate(requests)]
-        pool = SlotPool(self.n_slots)
-        sched = self._make_scheduler(pool)
-        done: List[Completion] = sched.run(reqs)
-        wall = time.perf_counter() - t0
+        if n_tokens > max_hist:
+            raise ValueError(
+                f"request {i}: history of {n_tokens} tokens "
+                f"exceeds the model's context ({max_hist} = "
+                f"history_len x n_codebooks); truncate upstream")
 
-        by_rid = {c.rid: c for c in done}
-        outputs = [by_rid[i].item for i in range(len(requests))]
-        lat = np.asarray([by_rid[i].latency_s for i in range(len(requests))])
-        self.metrics["latency_s"] = list(lat)       # windowed: reset per call
-        self.metrics["batch_size"] = [float(len(requests))]
+    def submit(self, request: Dict,
+               base_s: Optional[float] = None) -> RequestHandle:
+        """Admit one request dict (ragged "tokens" + "profile", optional
+        "arrival_s" / "deadline_s" offsets from ``base_s`` — default NOW —
+        and an int "priority" class, lower = more important) into the
+        scheduler queue.
+
+        Non-blocking: returns a ``RequestHandle`` immediately; the request
+        makes progress only through ``step()`` / ``drain()`` /
+        ``result()``.  Raises ``AdmissionFull`` when a bounded queue
+        (``EngineConfig.max_queue``) is at capacity — the backpressure
+        signal of the open system (the caller sheds or retries after
+        stepping; shed requests are what ``stats()["rejected"]`` counts).
+        ``base_s`` (a ``perf_counter`` timestamp) anchors the offsets for
+        closed-batch drivers whose requests all share one clock — a
+        submission delayed by backpressure must not shift its arrival or
+        gain deadline budget.
+        """
+        tokens = np.asarray(request["tokens"], np.int32)
+        self._check_history("<submit>", len(tokens))
+        if self.ecfg.max_queue \
+                and self._sched.queue_depth >= self.ecfg.max_queue:
+            raise AdmissionFull(
+                f"admission queue full ({self.ecfg.max_queue} requests); "
+                f"step() or drain() to make room")
+        base = time.perf_counter() if base_s is None else base_s
+        r = Request(
+            rid=next(self._rids), tokens=tokens,
+            profile=np.asarray(request["profile"], np.float32),
+            arrival_s=base + float(request.get("arrival_s", 0.0)),
+            priority=int(request.get("priority", 0)),
+            deadline_s=base + float(request["deadline_s"])
+            if request.get("deadline_s") is not None else None)
+        self._sched.enqueue(r)
+        handle = RequestHandle(self, r)
+        self._handles[r.rid] = handle
+        return handle
+
+    def step(self) -> List[Completion]:
+        """Advance the scheduler one round and deliver completions to
+        their handles.  Non-blocking; an idle engine no-ops."""
+        done = self._sched.step()
+        for c in done:
+            handle = self._handles.pop(c.rid, None)
+            if handle is not None:
+                handle.completion = c
+            self._window_done.append(c)
+        return done
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        if handle.cancelled or handle.completion is not None:
+            return False
+        if not self._sched.cancel(handle._request):
+            return False            # fixed-mode in-flight rows can't cancel
+        handle.cancelled = True
+        self._handles.pop(handle.rid, None)
+        self._cancelled += 1
+        return True
+
+    @property
+    def busy(self) -> bool:
+        """True while any accepted request has not retired."""
+        return self._sched.has_work
+
+    def idle_wait_s(self) -> float:
+        """How long ``step()`` would no-op for (next arrival / hold
+        release); drive loops sleep this instead of spinning."""
+        return self._sched.idle_wait_s()
+
+    def _drain_until(self, predicate: Callable[[], bool]) -> None:
+        """Step (and idle-sleep) until ``predicate`` holds or nothing is
+        left to do.  The scheduler runs in ``draining`` mode: the caller
+        is blocked here, so no new submissions can arrive — hold windows
+        and fixed-mode tail batches may release."""
+        sched = self._sched
+        prev, sched.draining = sched.draining, True
+        try:
+            while not predicate() and sched.has_work:
+                self.step()
+                wait = sched.idle_wait_s()
+                if wait > 0:
+                    time.sleep(wait)
+        finally:
+            sched.draining = prev
+
+    def drain(self) -> None:
+        """Step until every accepted request has retired."""
+        self._drain_until(lambda: False)
+
+    # -- windowed metrics -----------------------------------------------------
+
+    def reset_window(self) -> None:
+        """Start a fresh measurement window: zero the executor counters,
+        the scheduler accounting, and the prefix-store stats.  Entries,
+        queues, and in-flight requests are untouched."""
+        if self.prefix_store is not None:
+            self.prefix_store.reset_window()
+        for k in self.executor.counters:
+            self.executor.counters[k] = 0
+        self._sched.reset_window()
+        self._window_done: List[Completion] = []
+        self._rejected = 0
+        self._cancelled = 0
+        self._window_t0 = time.perf_counter()
+
+    def stats(self) -> Dict[str, float]:
+        """Per-window serving stats over the completions since the last
+        ``reset_window()`` (wall clock runs from the reset)."""
+        return self._stats(time.perf_counter() - self._window_t0)
+
+    def _stats(self, wall: float) -> Dict[str, float]:
+        done = self._window_done
+        sched = self._sched
         counters = self.executor.counters
+        lat = np.asarray([c.latency_s for c in done], np.float64)
         join = np.asarray(sched.join_step_s, np.float64)
-        stats = {
-            "n_requests": float(len(requests)),
+        return {
+            "n_requests": float(len(done)),
             "wall_s": wall,
-            "throughput_rps": len(requests) / wall,
-            "mean_latency_s": float(lat.mean()),
-            "p50_latency_s": float(np.percentile(lat, 50)),
-            "p99_latency_s": float(np.percentile(lat, 99)),
+            "throughput_rps": len(done) / wall if wall else 0.0,
+            "mean_latency_s": float(lat.mean()) if lat.size else 0.0,
+            "p50_latency_s": float(np.percentile(lat, 50))
+            if lat.size else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99))
+            if lat.size else 0.0,
             "slot_occupancy": float(np.mean(sched.occupancy))
             if sched.occupancy else 0.0,
             "n_slots": float(self.n_slots),
             "decode_steps": float(counters["decode_steps"]),
             "prefill_calls": float(counters["prefill_calls"]),
             "mode": self.ecfg.mode,
+            # open-system lifecycle accounting ("rejected" = requests SHED
+            # on AdmissionFull, not retried-then-served submissions)
+            "rejected": float(self._rejected),
+            "cancelled": float(self._cancelled),
+            "hold_rounds": float(sched.holds),
+            "queue_depth": float(sched.queue_depth),
             # prefill waste: batch padding (rows) + bucket padding (tokens)
             "prefill_padded_rows": float(counters["prefill_padded_rows"]),
             "prefill_tokens": float(counters["prefill_tokens_batched"]),
@@ -169,7 +374,7 @@ class ServingEngine:
                 if counters["prefill_tokens_batched"] else 0.0,
             # join-step wall time: prefill work one engine round performed
             # (chunked prefill bounds its tail); decode-stall = the share of
-            # the call's wall clock decoders spent waiting on that work
+            # the window's wall clock decoders spent waiting on that work
             "join_steps": float(join.size),
             "join_mean_s": float(join.mean()) if join.size else 0.0,
             "join_p50_s": float(np.percentile(join, 50))
@@ -181,9 +386,46 @@ class ServingEngine:
             **self._sla_stats(done),
             **self._prefix_stats(),
         }
-        for k in counters:
-            counters[k] = 0                          # window counters too
-        return outputs, stats
+
+    # -- closed-batch shims (seed-engine API) ---------------------------------
+
+    def serve_requests(self, requests: List[Dict[str, np.ndarray]]
+                       ) -> Tuple[List[np.ndarray], Dict[str, float]]:
+        """Closed-batch shim over submit + step + drain: serve
+        ``requests`` (offsets are measured from call start) and return
+        per-request outputs in input order + per-call stats.  Token-
+        identical to the closed-loop scheduler it replaced — the shim adds
+        no scheduling of its own."""
+        for i, r in enumerate(requests):
+            self._check_history(i, len(r["tokens"]))
+        self.reset_window()
+        if not requests:
+            return [], self._stats(0.0)
+        sched = self._sched
+        prev, sched.draining = sched.draining, True
+        try:
+            handles = []
+            for r in requests:
+                while True:
+                    try:
+                        # anchor offsets at call start: a submission the
+                        # bounded queue delays keeps its true arrival and
+                        # gains no deadline budget
+                        handles.append(self.submit(r,
+                                                   base_s=self._window_t0))
+                        break
+                    except AdmissionFull:  # bounded queue: step to drain it
+                        self._drain_until(
+                            lambda: sched.queue_depth < self.ecfg.max_queue)
+            self.drain()
+        finally:
+            sched.draining = prev
+        wall = time.perf_counter() - self._window_t0
+
+        outputs = [h.completion.item for h in handles]
+        self.metrics["latency_s"] = [h.completion.latency_s for h in handles]
+        self.metrics["batch_size"] = [float(len(requests))]
+        return outputs, self._stats(wall)
 
     @staticmethod
     def _sla_stats(done: List[Completion]) -> Dict[str, object]:
@@ -220,6 +462,7 @@ class ServingEngine:
             return {"prefix_hit_rate": 0.0, "prefix_hits": 0.0,
                     "prefix_admissions": 0.0, "prefix_tokens_saved": 0.0,
                     "prefix_entries": 0.0, "prefix_evictions": 0.0,
+                    "prefix_first_sights": 0.0,
                     "prefix_store_bytes": 0.0, "prefix_bytes_pinned": 0.0}
         return {"prefix_hit_rate": s.hit_rate,
                 "prefix_hits": float(s.hits),
@@ -227,13 +470,73 @@ class ServingEngine:
                 "prefix_tokens_saved": float(s.tokens_saved),
                 "prefix_entries": float(s.n_entries),
                 "prefix_evictions": float(s.evictions),
+                "prefix_first_sights": float(s.first_sights),
                 "prefix_store_bytes": float(s.bytes_used),
                 "prefix_bytes_pinned": float(s.peak_bytes_pinned)}
 
     def generate_batch(self, tokens: np.ndarray, profile: np.ndarray
                        ) -> np.ndarray:
         """Seed-engine compat: one uniform batch (B, H*3) -> (B, decode_len)."""
-        requests = [{"tokens": tokens[i], "profile": profile[i]}
-                    for i in range(tokens.shape[0])]
-        outputs, _ = self.serve_requests(requests)
+        outputs, _ = self.serve_requests(requests_from_arrays(tokens,
+                                                              profile))
         return np.stack(outputs)
+
+
+def run_open_loop(engine: ServingEngine, requests: List[Dict],
+                  drop_on_full: bool = False
+                  ) -> Tuple[List[Optional[np.ndarray]], Dict[str, float]]:
+    """True open-loop serving: submit each request at its WALL-CLOCK
+    arrival (its "arrival_s" offset from loop start) while stepping the
+    engine between arrivals — the open-queueing-system regime, as opposed
+    to the closed shim that enqueues everything up front.
+
+    "deadline_s" offsets stay anchored to the workload clock (arrival +
+    allowance), so a submission delayed by an overloaded engine does not
+    get extra budget.  With ``drop_on_full`` a bounded admission queue
+    sheds load (``AdmissionFull`` -> output None, counted in
+    ``stats()["rejected"]``); otherwise backpressure propagates to the
+    caller.  Returns (outputs in input order, window stats).
+    """
+    engine.reset_window()
+    t0 = engine._window_t0
+    order = sorted(range(len(requests)),
+                   key=lambda j: requests[j].get("arrival_s", 0.0))
+    handles: List[Optional[RequestHandle]] = [None] * len(requests)
+    for j in order:
+        target = float(requests[j].get("arrival_s", 0.0))
+        while True:
+            now = time.perf_counter() - t0
+            if now >= target:
+                break
+            if engine.busy:
+                counters = engine.executor.counters
+                before = (counters["prefill_calls"]
+                          + counters["decode_steps"])
+                engine.step()
+                wait = engine.idle_wait_s()
+                if wait <= 0 and (counters["prefill_calls"]
+                                  + counters["decode_steps"]) == before:
+                    # blocked on submissions the scheduler can't foresee
+                    # (fixed-mode batch formation, count-only holds):
+                    # nap instead of spinning until the next arrival
+                    wait = 1e-3
+            else:
+                wait = target - now
+            if wait > 0:
+                now = time.perf_counter() - t0
+                time.sleep(min(wait, max(0.0, target - now)))
+        rel = dict(requests[j])
+        rel.pop("arrival_s", None)          # arrival IS the submit instant
+        now = time.perf_counter() - t0
+        if rel.get("deadline_s") is not None:
+            rel["deadline_s"] = float(rel["deadline_s"]) - now
+        try:
+            handles[j] = engine.submit(rel)
+        except AdmissionFull:
+            if not drop_on_full:
+                raise
+            engine._rejected += 1     # shed: the request is never served
+    engine.drain()
+    outputs = [h.completion.item if h is not None and h.completion is not None
+               else None for h in handles]
+    return outputs, engine.stats()

@@ -73,9 +73,15 @@ class SlotPool:
         return slot
 
     def free(self, slot: int) -> SlotState:
-        """Release ``slot``; returns its final state."""
+        """Release ``slot``; returns its final state.  A fully drained pool
+        re-normalizes its free list to the virgin order, so slot assignment
+        — and therefore program batch composition — is a function of the
+        workload, not of how previous windows happened to retire (the pool
+        persists across the engine's serve calls)."""
         state = self._slots.pop(slot)  # KeyError on double-free / bad id
         self._free.append(slot)
+        if not self._slots:
+            self._free = list(range(self.n_slots - 1, -1, -1))
         return state
 
     # -- views ----------------------------------------------------------------
@@ -168,24 +174,43 @@ class PrefixStore:
       * lookup/insert refresh recency; eviction takes the least-recently
         used unpinned entry.
 
+    Admission policy: with ``store_on_first_sight=False`` the store runs
+    TinyLFU-style *second-sight* admission — the first offer of a content
+    family only records its item-boundary digests in a bounded doorkeeper;
+    an arena row is granted when an offer SHARES a boundary with an
+    earlier one (an exact repeat, or a revisiting user's extended
+    history).  One-off traffic (most requests, in a low-repeat regime)
+    then never churns the arena, while anything sighted twice — the
+    traffic that can actually produce hits — is stored exactly as before.
+    ``insert(force=True)`` bypasses the doorkeeper (preemption parks K/V
+    it KNOWS will be re-requested).
+
     Hit/miss/saved-token stats are windowed: ``reset_window()`` zeroes them
     while the entries (and their device rows) persist — the engine windows
     per ``serve_requests`` call, matching its other counters.
     """
 
     def __init__(self, n_rows: int, row_bytes: int,
-                 max_bytes: int = 0, n_codebooks: int = 3):
+                 max_bytes: int = 0, n_codebooks: int = 3,
+                 store_on_first_sight: bool = True,
+                 seen_capacity: int = 0):
         if n_rows <= 0:
             raise ValueError(f"n_rows must be positive, got {n_rows}")
         self.n_rows = n_rows
         self.row_bytes = row_bytes
         self.max_bytes = max_bytes or n_rows * row_bytes
         self.n_codebooks = n_codebooks
+        self.store_on_first_sight = store_on_first_sight
         self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
         # every item-boundary digest of every entry -> (entry key, boundary
         # tokens); one arena row serves all prefixes of its content
         self._index: Dict[str, Tuple[str, int]] = {}
         self._free_rows: List[int] = list(range(n_rows - 1, -1, -1))
+        # second-sight doorkeeper: item-boundary digests seen in offers,
+        # LRU-bounded (sized for whole boundary CHAINS, ~history-length
+        # digests per offer, across a few arena turnovers)
+        self._seen: "OrderedDict[str, None]" = OrderedDict()
+        self._seen_cap = seen_capacity or 64 * n_rows
         self.reset_window()
 
     # -- windowed stats -------------------------------------------------------
@@ -196,6 +221,7 @@ class PrefixStore:
         self.tokens_saved = 0     # history tokens served from the store
         self.evictions = 0
         self.insertions = 0
+        self.first_sights = 0     # offers the doorkeeper recorded-not-stored
         self.peak_bytes_pinned = 0
 
     @property
@@ -277,13 +303,15 @@ class PrefixStore:
 
     def insert(self, profile: np.ndarray, tokens: np.ndarray,
                n_tokens: int,
-               chain: Optional[List[Tuple[int, str]]] = None
-               ) -> Optional[PrefixEntry]:
+               chain: Optional[List[Tuple[int, str]]] = None,
+               force: bool = False) -> Optional[PrefixEntry]:
         """Admit the ``n_tokens``-token prefix of ``profile ⊕ tokens``.
 
         Returns the new entry whose (caller-filled) arena row should
         receive the K/V copy; None when the content is already stored
-        (recency refreshed) or when every row is pinned / over budget.
+        (recency refreshed), when every row is pinned / over budget, or —
+        under second-sight admission — on the content's FIRST offer (the
+        doorkeeper records it; ``force=True`` skips the doorkeeper).
         ``n_tokens`` must be item-aligned.
         """
         if n_tokens <= 0 or n_tokens % self.n_codebooks:
@@ -303,6 +331,23 @@ class PrefixStore:
             # burn a second arena row on duplicate K/V
             self._entries.move_to_end(covered[0])
             return None
+        if not self.store_on_first_sight and not force:
+            # second-sight admission: a "sight" matches on ANY shared item
+            # boundary, not the full digest — a revisiting user's history
+            # EXTENDS between requests, so the full-history digest is
+            # fresh every visit while the visit-1 boundaries recur.  Every
+            # offer records its whole boundary chain (recency-refreshed);
+            # content sharing none of them (one-off traffic) never earns
+            # an arena row.
+            seen = any(d in self._seen for _, d in digests)
+            for _, d in digests:
+                self._seen[d] = None
+                self._seen.move_to_end(d)
+            while len(self._seen) > self._seen_cap:
+                self._seen.popitem(last=False)
+            if not seen:
+                self.first_sights += 1
+                return None
         row = self._take_row()
         if row is None:
             return None

@@ -1,9 +1,26 @@
 """Request schedulers: continuous batching with a scheduling-policy seam,
-and the fixed-batch reference.
+and the fixed-batch reference — both incremental ``step()`` state machines.
 
-``ContinuousScheduler`` is the paper-style high-utilization loop: a request
-queue feeds a fixed pool of KV-cache slots.  Every engine step it
-(1) advances any in-flight CHUNKED prefills by one segment, (2) retires
+Since the open-system API redesign, a scheduler is no longer a run-loop
+over a closed request list: its queue, in-flight slots, chunked-prefill
+segments, and preemption state PERSIST across calls.  The surface is
+
+  * ``enqueue(request)`` — admit a request into the arrival queue (the
+    engine's ``submit``); non-blocking, any arrival time;
+  * ``step()`` — advance one scheduler round (resume chunked prefills ->
+    retire -> join -> decode) and return the ``Completion``s it realized;
+  * ``cancel(request)`` — drop a queued request, or free an in-flight
+    slot mid-decode/mid-prefill and release its prefix-store pin;
+  * ``has_work`` / ``idle_wait_s()`` / ``queue_depth`` — what a drive
+    loop needs to sleep instead of spin;
+  * ``draining`` — set by closed-loop drivers (``ServingEngine.drain``)
+    to promise no further ``enqueue``s, which releases admission hold
+    windows at the tail;
+  * ``run(requests)`` — compatibility wrapper: enqueue + step to empty.
+
+``ContinuousScheduler.step()`` is the paper-style high-utilization round:
+a request queue feeds a fixed pool of KV-cache slots.  Every engine step
+it (1) advances any in-flight CHUNKED prefills by one segment, (2) retires
 finished slots, (3) joins queued requests into free slots via bucketed
 ragged prefill — no tail padding, no waiting for stragglers — and (4) runs
 ONE length-masked decode program over the decoding slots, advancing every
@@ -11,6 +28,15 @@ active request regardless of its depth.
 
 ``SchedulingPolicy`` is the policy seam on top of that loop:
 
+  * **Hold-window admission** (``hold_k`` / ``hold_ms``): under heavy open
+    traffic on a dispatch-overhead-bound backend, admitting every arrival
+    the moment it lands runs one tiny prefill program per request.  A hold
+    window defers the join until K requests have accumulated or the oldest
+    has waited T ms, so admissions batch into fewer, fuller programs —
+    trading a bounded per-request wait for amortized dispatch.  Holds
+    release unconditionally at the drain tail (``draining`` with every
+    queued request arrived), so a closed batch can never deadlock on an
+    unreachable count.
   * **Chunked prefill** (``prefill_chunk > 0``): any prefill longer than
     the chunk budget is split into segments that ride through successive
     engine steps via the executor's ``resume_prefill`` program (the slot
@@ -60,6 +86,24 @@ from repro.serving.kv_cache import (PrefixEntry, PrefixStore, SlotPool,
 _NO_DEADLINE = float("inf")
 
 
+def _run_to_empty(sched) -> List["Completion"]:
+    """Shared closed-batch drive loop: step (and idle-sleep) under the
+    ``draining`` promise until the scheduler is empty.  Both schedulers'
+    ``run()`` wrappers delegate here; the engine's ``_drain_until`` is the
+    predicate-aware analogue that also routes completions to handles."""
+    done: List[Completion] = []
+    prev, sched.draining = sched.draining, True
+    try:
+        while sched.has_work:
+            done.extend(sched.step())
+            wait = sched.idle_wait_s()
+            if wait > 0:
+                time.sleep(wait)
+    finally:
+        sched.draining = prev
+    return done
+
+
 @dataclasses.dataclass(eq=False)     # identity equality: queue.remove()
 class Request:
     rid: int
@@ -92,10 +136,36 @@ class SchedulingPolicy:
     waste (``executor.bucket_length`` rounds segment shapes up).
     ``preemption`` — allow freeing the worst decoding slot when a
     strictly-higher-priority request is waiting and the pool is full.
+    ``hold_k`` / ``hold_ms`` — admission hold window: defer the join round
+    until ``hold_k`` arrived requests have accumulated OR the oldest has
+    waited ``hold_ms`` milliseconds (either bound alone also works; both
+    zero disables holding).  With only ``hold_k`` set, an open system that
+    stops short of K requests relies on the drive loop's ``draining`` flag
+    to release the tail — set ``hold_ms`` too unless a drain is guaranteed.
     """
 
     prefill_chunk: int = 0
     preemption: bool = False
+    hold_k: int = 0
+    hold_ms: float = 0.0
+
+    @property
+    def holds_admission(self) -> bool:
+        return self.hold_k > 1 or self.hold_ms > 0
+
+    def hold_release(self, n_arrived: int, waited_ms: float,
+                     draining_tail: bool) -> bool:
+        """True when an arrived admission window may join now.
+        ``draining_tail`` = the driver promised no more enqueues AND every
+        queued request has arrived — holding longer cannot grow the batch.
+        """
+        if not self.holds_admission:
+            return True
+        if self.hold_k > 1 and n_arrived >= self.hold_k:
+            return True
+        if self.hold_ms > 0 and waited_ms >= self.hold_ms:
+            return True
+        return draining_tail
 
     def sort_key(self, r: Request) -> Tuple[int, float, float]:
         """Admission order: priority class, then earliest deadline, then
@@ -171,10 +241,89 @@ class ContinuousScheduler:
         self._slot_entry: Dict[int, PrefixEntry] = {}
         self._slot_request: Dict[int, Request] = {}
         self._pending: Dict[int, _PendingPrefill] = {}
+        # -- open-system request-lifecycle state (persists across steps) --
+        self.queue: Deque[Request] = deque()   # arrival-sorted
+        self.draining = False     # driver's promise: no further enqueues
         # -- join-step / SLA accounting (read by the engine) --
         self.join_step_s: List[float] = []   # wall time of each prefill round
         self.decode_stall_s = 0.0   # join time spent while decoders waited
         self.preemptions = 0
+        self.holds = 0            # join rounds deferred by the hold window
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def enqueue(self, r: Request) -> None:
+        """Admit ``r`` into the arrival queue (non-blocking).  The queue is
+        kept arrival-sorted — submissions usually arrive in time order, so
+        the common case is an O(1) append; ties keep submission order."""
+        q = self.queue
+        if not q or r.arrival_s >= q[-1].arrival_s:
+            q.append(r)
+            return
+        i = next((i for i, other in enumerate(q)
+                  if other.arrival_s > r.arrival_s), len(q))
+        q.insert(i, r)
+
+    def cancel(self, r: Request) -> bool:
+        """Drop ``r`` wherever it is in the lifecycle: still queued (remove
+        from the queue), mid-chunked-prefill, or mid-decode (free the slot,
+        release its prefix-store pin, clear the device row).  Returns False
+        when ``r`` is not held by this scheduler (already retired)."""
+        try:
+            self.queue.remove(r)             # identity match (eq=False)
+            return True
+        except ValueError:
+            pass
+        slot = next((s for s, held in self._slot_request.items()
+                     if held is r), None)
+        if slot is None:
+            return False
+        self.pool.free(slot)
+        self._slot_request.pop(slot)
+        self._pending.pop(slot, None)        # forfeit unfinished segments
+        entry = self._slot_entry.pop(slot, None)
+        if entry is not None:
+            self.store.release(entry)
+        self.executor.free_slots([slot])
+        return True
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.pool.n_used)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def idle_wait_s(self) -> float:
+        """Seconds a drive loop may sleep before ``step()`` can make
+        progress: 0 while anything is in flight (every step advances it);
+        otherwise the gap to the next arrival or hold-window release."""
+        if self.pool.n_used or not self.queue:
+            return 0.0
+        now = time.perf_counter()
+        head = self.queue[0].arrival_s
+        if head > now:                       # nothing has arrived yet
+            return head - now
+        # arrived but held: wake at the hold deadline or the next arrival,
+        # whichever can release the window first
+        candidates = []
+        if self.policy.hold_ms > 0:
+            candidates.append(head + self.policy.hold_ms / 1e3)
+        nxt = next((r.arrival_s for r in self.queue if r.arrival_s > now),
+                   None)
+        if nxt is not None:
+            candidates.append(nxt)
+        return max(0.0, min(candidates) - now) if candidates else 0.0
+
+    def reset_window(self) -> None:
+        """Zero the per-window accounting (the engine windows per stats
+        call); queue and in-flight state are NOT touched."""
+        self.occupancy = []
+        self.join_step_s = []
+        self.decode_stall_s = 0.0
+        self.preemptions = 0
+        self.holds = 0
 
     # -- step pieces ----------------------------------------------------------
 
@@ -281,8 +430,10 @@ class ContinuousScheduler:
             n_full = (len(r.tokens) // self.store.n_codebooks) \
                 * self.store.n_codebooks
             if n_full > 0:
+                # force past second-sight admission: this K/V WILL be
+                # re-requested (the preempted request resumes through it)
                 entry = self.store.insert(r.profile, r.tokens, n_full,
-                                          chain=r.chain)
+                                          chain=r.chain, force=True)
                 if entry is not None and self.store.is_live(entry):
                     # copy BEFORE free_slots clears the row's occupancy
                     self.executor.prefix_save([slot], [entry.row])
@@ -388,6 +539,13 @@ class ContinuousScheduler:
                          if r.arrival_s <= now), key=self.policy.sort_key)
         if not window:
             return
+        if self.policy.holds_admission:
+            oldest = min(r.arrival_s for r in window)
+            tail = self.draining and all(r.arrival_s <= now for r in queue)
+            if not self.policy.hold_release(len(window),
+                                            (now - oldest) * 1e3, tail):
+                self.holds += 1
+                return
         self._maybe_preempt(window, queue)
         free = self.pool.n_free
         if not free:
@@ -501,33 +659,48 @@ class ContinuousScheduler:
             self._record(s, ids[s, 0], done, freed)
         self.executor.free_slots(freed)  # one clear program per step
 
-    # -- main loop ------------------------------------------------------------
+    # -- the step state machine ----------------------------------------------
+
+    def step(self) -> List[Completion]:
+        """One scheduler round over the persistent state: advance chunked
+        prefills, join arrived requests, decode.  Non-blocking — an empty
+        round (nothing arrived, nothing in flight) is a cheap no-op; drive
+        loops sleep on ``idle_wait_s()`` instead of spinning."""
+        done: List[Completion] = []
+        # join-step accounting: everything before decode is prefill work;
+        # time it only when a prefill program actually ran, and charge it
+        # to decode stall when decoders sat waiting on it
+        had_decoders = bool(self._decoding_slots())
+        t0 = time.perf_counter()
+        n0 = self.executor.counters["prefill_calls"]
+        self._advance_prefills(done)
+        self._join(self.queue, done)
+        if self.executor.counters["prefill_calls"] > n0:
+            dt = time.perf_counter() - t0
+            self.join_step_s.append(dt)
+            if had_decoders:
+                self.decode_stall_s += dt
+        if self._decoding_slots():
+            self._decode_step(done)
+        return done
 
     def run(self, requests: List[Request]) -> List[Completion]:
-        queue: Deque[Request] = deque(sorted(requests,
-                                             key=lambda r: r.arrival_s))
-        done: List[Completion] = []
-        while queue or self.pool.n_used:
-            # join-step accounting: everything before decode is prefill
-            # work; time it only when a prefill program actually ran, and
-            # charge it to decode stall when decoders sat waiting on it
-            had_decoders = bool(self._decoding_slots())
-            t0 = time.perf_counter()
-            n0 = self.executor.counters["prefill_calls"]
-            self._advance_prefills(done)
-            self._join(queue, done)
-            if self.executor.counters["prefill_calls"] > n0:
-                dt = time.perf_counter() - t0
-                self.join_step_s.append(dt)
-                if had_decoders:
-                    self.decode_stall_s += dt
-            if self._decoding_slots():
-                self._decode_step(done)
-            elif not self.pool.n_used and queue:
-                # idle: everything left is still in flight upstream
-                time.sleep(max(0.0, queue[0].arrival_s
-                               - time.perf_counter()))
-        return done
+        """Closed-batch compatibility wrapper over enqueue + step."""
+        for r in requests:
+            self.enqueue(r)
+        return _run_to_empty(self)
+
+
+@dataclasses.dataclass
+class _FixedBatch:
+    """One in-flight lock-step batch of the fixed scheduler."""
+
+    requests: List[Request]     # real members (tail padding excluded)
+    slots: List[int]            # one pool slot per PADDED row
+    gen: List[List[int]]        # generated tokens per padded row
+    last: np.ndarray            # (B, 1) next decode inputs
+    lengths: np.ndarray         # (B,) per-row cache occupancy
+    steps_left: int             # decode steps until retire
 
 
 class FixedBatchScheduler:
@@ -539,6 +712,15 @@ class FixedBatchScheduler:
     the batch max), so outputs are comparable token-for-token.  Reports the
     same join-step samples as the continuous scheduler (here: one monolithic
     prefill per batch) so the engine's join-p99 metric is mode-uniform.
+
+    The step machine mirrors the continuous scheduler's lifecycle surface
+    (``enqueue``/``step``/``cancel``/``has_work``): a batch FORMS when
+    ``batch_size`` submissions are queued and its last member has arrived —
+    in an open system the scheduler cannot know a tail is a tail, so a
+    partial batch launches only under ``draining`` (the drive loop's
+    promise that no more requests are coming).  That wait is precisely the
+    head-of-line blocking the continuous mode removes.  ``cancel`` only
+    reaches QUEUED requests: lock-step rows cannot retire early.
     """
 
     def __init__(self, executor: PhaseExecutor, pool: SlotPool,
@@ -550,62 +732,148 @@ class FixedBatchScheduler:
         self.pool = pool
         self.batch_size = batch_size
         self.decode_len = executor.cfg.decode_len
+        self.queue: Deque[Request] = deque()   # submission order
+        self.draining = False
+        self._active: Optional[_FixedBatch] = None
         self.occupancy: List[float] = []
         self.join_step_s: List[float] = []
         self.decode_stall_s = 0.0    # lock-step: decode never overlaps join
         self.preemptions = 0
+        self.holds = 0               # fixed mode has no admission holds
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def enqueue(self, r: Request) -> None:
+        """Queue ``r`` in submission order (fixed batches chunk the
+        submission sequence positionally, exactly as the seed engine
+        chunked its request list)."""
+        self.queue.append(r)
+
+    def cancel(self, r: Request) -> bool:
+        """Remove a still-queued request; an in-flight lock-step row cannot
+        be released early (the batch retires as a unit), so cancelling an
+        admitted request returns False."""
+        try:
+            self.queue.remove(r)
+            return True
+        except ValueError:
+            return False
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self._active is not None
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def idle_wait_s(self) -> float:
+        """Gap until the next formable batch can launch (its last member's
+        arrival); 0 while a batch decodes or while formation waits on more
+        submissions (the driver, not the clock, unblocks that)."""
+        if self._active is not None or not self.queue:
+            return 0.0
+        need = self._formable()
+        if not need:
+            return 0.0
+        latest = max(self.queue[i].arrival_s for i in range(need))
+        return max(0.0, latest - time.perf_counter())
+
+    def reset_window(self) -> None:
+        self.occupancy = []
+        self.join_step_s = []
+        self.decode_stall_s = 0.0
+        self.preemptions = 0
+        self.holds = 0
+
+    # -- the step state machine ----------------------------------------------
+
+    def _formable(self) -> int:
+        """Members of the next launchable batch: a full ``batch_size``, or
+        the partial tail once the driver promised no more submissions."""
+        if len(self.queue) >= self.batch_size:
+            return self.batch_size
+        return len(self.queue) if self.draining else 0
+
+    def _form_batch(self) -> bool:
+        need = self._formable()
+        if not need:
+            return False
+        chunk = [self.queue[i] for i in range(need)]
+        # a fixed batch launches only once its LAST member has arrived —
+        # exactly the head-of-line blocking continuous batching removes
+        if max(r.arrival_s for r in chunk) > time.perf_counter():
+            return False
+        for _ in range(need):
+            self.queue.popleft()
+        B = self.batch_size
+        padded = chunk + [chunk[-1]] * (B - need)  # tail padding
+        slots = []
+        for r in padded:
+            slots.append(self.pool.alloc(SlotState(
+                request_id=r.rid, length=len(r.tokens) + 1,
+                arrival_s=r.arrival_s, priority=r.priority,
+                deadline_s=r.deadline_s)))
+        t0 = time.perf_counter()
+        logits = self.executor.prefill_insert(
+            [r.tokens for r in padded], [r.profile for r in padded], slots)
+        _, ids = self.executor.select(logits)
+        self.join_step_s.append(time.perf_counter() - t0)
+        ids = ids[:len(slots)]                  # drop bucket-pad rows
+        self._active = _FixedBatch(
+            requests=chunk, slots=slots,
+            gen=[[int(t)] for t in ids[:, 0]],
+            last=np.asarray(ids[:, :1], np.int32),
+            lengths=np.asarray([self.pool[s].length for s in slots],
+                               np.int32),
+            steps_left=self.decode_len - 1)
+        return True
+
+    def _decode_once(self) -> None:
+        b = self._active
+        tokens = np.zeros((self.pool.n_slots, 1), np.int32)
+        lens = np.zeros((self.pool.n_slots,), np.int32)
+        tokens[b.slots, 0] = b.last[:, 0]
+        lens[b.slots] = b.lengths
+        logits = self.executor.decode(tokens, lens)
+        _, ids = self.executor.select(logits)
+        self.occupancy.append(len(b.requests) / self.pool.n_slots)
+        b.lengths = b.lengths + 1
+        b.last = np.asarray(ids[b.slots, :1], np.int32)
+        for row, toks in enumerate(b.gen):
+            toks.append(int(b.last[row, 0]))
+        b.steps_left -= 1
+
+    def _retire(self) -> List[Completion]:
+        b, self._active = self._active, None
+        finish = time.perf_counter()
+        done = []
+        for row, r in enumerate(b.requests):  # drop padded duplicates
+            done.append(Completion(
+                rid=r.rid, item=np.asarray(b.gen[row], np.int32),
+                latency_s=finish - r.arrival_s,
+                priority=r.priority, deadline_s=r.deadline_s,
+                deadline_missed=r.deadline_s is not None
+                and finish > r.deadline_s))
+        retired = sorted(set(b.slots))
+        for s in retired:
+            self.pool.free(s)
+        self.executor.free_slots(retired)   # one clear per batch
+        return done
+
+    def step(self) -> List[Completion]:
+        """One lock-step round: form-and-prefill the next batch, or decode
+        the active one; the batch retires when its last decode lands."""
+        if self._active is None and not self._form_batch():
+            return []
+        if self._active.steps_left > 0:
+            self._decode_once()
+        if self._active.steps_left == 0:
+            return self._retire()
+        return []
 
     def run(self, requests: List[Request]) -> List[Completion]:
-        done: List[Completion] = []
-        B = self.batch_size
-        for start in range(0, len(requests), B):
-            chunk = requests[start:start + B]
-            n = len(chunk)
-            # a fixed batch launches only once its LAST member has arrived —
-            # exactly the head-of-line blocking continuous batching removes
-            time.sleep(max(0.0, max(r.arrival_s for r in chunk)
-                           - time.perf_counter()))
-            padded = chunk + [chunk[-1]] * (B - n)  # tail padding
-            slots = []
-            for r in padded:
-                slots.append(self.pool.alloc(SlotState(
-                    request_id=r.rid, length=len(r.tokens) + 1,
-                    arrival_s=r.arrival_s, priority=r.priority,
-                    deadline_s=r.deadline_s)))
-            t0 = time.perf_counter()
-            logits = self.executor.prefill_insert(
-                [r.tokens for r in padded], [r.profile for r in padded],
-                slots)
-            _, ids = self.executor.select(logits)
-            self.join_step_s.append(time.perf_counter() - t0)
-            ids = ids[:len(slots)]                  # drop bucket-pad rows
-            gen = [[int(t)] for t in ids[:, 0]]
-            last = np.asarray(ids[:, :1], np.int32)
-            lengths = np.asarray([self.pool[s].length for s in slots],
-                                 np.int32)
-            for _ in range(self.decode_len - 1):
-                tokens = np.zeros((self.pool.n_slots, 1), np.int32)
-                lens = np.zeros((self.pool.n_slots,), np.int32)
-                tokens[slots, 0] = last[:, 0]
-                lens[slots] = lengths
-                logits = self.executor.decode(tokens, lens)
-                _, ids = self.executor.select(logits)
-                self.occupancy.append(n / self.pool.n_slots)
-                lengths = lengths + 1
-                last = np.asarray(ids[slots, :1], np.int32)
-                for row, toks in enumerate(gen):
-                    toks.append(int(last[row, 0]))
-            finish = time.perf_counter()
-            for row in range(n):  # drop padded duplicates
-                r = chunk[row]
-                done.append(Completion(
-                    rid=r.rid, item=np.asarray(gen[row], np.int32),
-                    latency_s=finish - r.arrival_s,
-                    priority=r.priority, deadline_s=r.deadline_s,
-                    deadline_missed=r.deadline_s is not None
-                    and finish > r.deadline_s))
-            retired = sorted(set(slots))
-            for s in retired:
-                self.pool.free(s)
-            self.executor.free_slots(retired)   # one clear per batch
-        return done
+        """Closed-batch compatibility wrapper over enqueue + step."""
+        for r in requests:
+            self.enqueue(r)
+        return _run_to_empty(self)

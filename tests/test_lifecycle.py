@@ -1,0 +1,433 @@
+"""Open-system request lifecycle: submit/step/poll parity with the
+closed-batch shim, backpressure, cancellation resource release
+(property-tested), hold-window admission, and second-sight prefix-store
+admission.
+
+All configs lift the MoE capacity bound (capacity_factor=64) so batch
+composition cannot perturb outputs — every comparison here is exact
+token-for-token (see docs/serving.md on capacity-dropped MoE determinism).
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.models import onerec as onerec_model
+from repro.serving import (AdmissionFull, EngineConfig, PrefixStore,
+                           RequestCancelled, ServingEngine, run_open_loop)
+from repro.serving.requests import make_request, requests_from_arrays
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+NCB = 3
+
+
+def _cfg() -> OneRecConfig:
+    return OneRecConfig(
+        name="onerec-lifecycle-test",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-lifecycle-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+def _request_dicts(cfg, n, rng):
+    reqs = []
+    for _ in range(n):
+        n_items = int(rng.integers(2, cfg.history_len + 1))
+        reqs.append(make_request(
+            rng.integers(0, 192, size=n_items * cfg.n_codebooks),
+            rng.normal(size=onerec_model.PROFILE_DIM)))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def lifecycle_setup():
+    cfg = _cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    reqs = _request_dicts(cfg, 9, np.random.default_rng(3))
+    ref_out, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(reqs)
+    return cfg, params, reqs, ref_out
+
+
+# ---------------------------------------------------------------------------
+# submit / step / poll parity
+# ---------------------------------------------------------------------------
+
+
+def test_submit_step_poll_matches_serve_requests(lifecycle_setup):
+    """Driving the engine by hand through the lifecycle API yields the
+    exact tokens of the one-shot closed-batch shim."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous"))
+    handles = [eng.submit(r) for r in reqs]
+    assert all(h.status == "queued" for h in handles)
+    assert all(h.poll() is None for h in handles)
+    while eng.busy:
+        eng.step()
+    assert all(h.status == "done" for h in handles)
+    for h, ref in zip(handles, ref_out):
+        np.testing.assert_array_equal(h.result(), ref)
+        np.testing.assert_array_equal(h.poll().item, ref)
+
+
+def test_interleaved_submit_step_matches_one_shot(lifecycle_setup):
+    """Submissions landing mid-flight (the open-system case) must not
+    change a single token vs queueing everything up front."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous"))
+    handles = [eng.submit(r) for r in reqs[:3]]
+    eng.step()
+    eng.step()
+    handles += [eng.submit(r) for r in reqs[3:]]
+    eng.drain()
+    for h, ref in zip(handles, ref_out):
+        np.testing.assert_array_equal(h.result(), ref)
+
+
+def test_result_drives_the_engine(lifecycle_setup):
+    """``result()`` on a fresh submission steps the engine itself."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous"))
+    handles = [eng.submit(r) for r in reqs]
+    np.testing.assert_array_equal(handles[-1].result(), ref_out[-1])
+    eng.drain()
+
+
+def test_fixed_mode_lifecycle_and_tail_drain(lifecycle_setup):
+    """Fixed mode through submit/step: full batches form on their own; the
+    partial tail launches only under drain (an open system cannot know a
+    tail is a tail)."""
+    cfg, params, reqs, _ = lifecycle_setup
+    ref_out, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="fixed")).serve_requests(reqs)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="fixed"))
+    handles = [eng.submit(r) for r in reqs]       # 9 = 2 batches + tail of 1
+    for _ in range(64):
+        eng.step()
+    assert sum(h.done() for h in handles) == 8    # tail held: no drain yet
+    assert eng.busy
+    eng.drain()
+    for h, ref in zip(handles, ref_out):
+        np.testing.assert_array_equal(h.result(), ref)
+
+
+def test_serve_requests_after_lifecycle_use(lifecycle_setup):
+    """The closed-batch shim and the raw lifecycle API share one persistent
+    scheduler; interleaving them must not leak state."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous"))
+    eng.submit(reqs[0]).result()
+    out, stats = eng.serve_requests(reqs)
+    for a, b in zip(out, ref_out):
+        np.testing.assert_array_equal(a, b)
+    assert stats["n_requests"] == float(len(reqs))
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_rejects_when_queue_full(lifecycle_setup):
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=2, n_slots=2, mode="continuous", max_queue=2))
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    with pytest.raises(AdmissionFull):
+        eng.submit(reqs[2])
+    eng.drain()
+    # a retried-then-served submission is NOT a rejection; only requests
+    # actually shed count (the open-loop drop case below)
+    assert eng.stats()["rejected"] == 0.0
+    eng.submit(reqs[2]).result()                  # room again after drain
+    # the closed shim still serves MORE requests than the bound by
+    # interleaving submission with steps (purely submit/step/drain)
+    out, stats = eng.serve_requests(reqs)
+    for a, b in zip(out, ref_out):
+        np.testing.assert_array_equal(a, b)
+    assert stats["rejected"] == 0.0               # all served, none shed
+
+
+def test_open_loop_sheds_on_full_queue(lifecycle_setup):
+    """drop_on_full: rejected submissions are shed (output None) and
+    counted in stats; without it backpressure propagates to the caller."""
+    cfg, params, reqs, _ = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=1, n_slots=1, mode="continuous", max_queue=1))
+    timed = [dict(r) for r in reqs]               # all arrive at once
+    outs, stats = run_open_loop(eng, timed, drop_on_full=True)
+    shed = sum(o is None for o in outs)
+    assert shed >= 1                              # 1-deep queue must shed
+    assert stats["rejected"] == float(shed)
+    assert stats["n_requests"] == float(len(reqs) - shed)
+    with pytest.raises(AdmissionFull):
+        run_open_loop(eng, timed, drop_on_full=False)
+    eng.drain()                                   # leave the engine clean
+
+
+# ---------------------------------------------------------------------------
+# Cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_and_completed(lifecycle_setup):
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, n_slots=2, mode="continuous"))
+    handles = [eng.submit(r) for r in reqs[:4]]
+    assert handles[3].cancel()                    # still queued
+    assert handles[3].status == "cancelled"
+    assert not handles[3].cancel()                # idempotent: already gone
+    eng.drain()
+    with pytest.raises(RequestCancelled):
+        handles[3].result()
+    assert not handles[0].cancel()                # completed: too late
+    for h, ref in zip(handles[:3], ref_out[:3]):
+        np.testing.assert_array_equal(h.result(), ref)
+    assert eng.stats()["cancelled"] == 1.0
+
+
+@pytest.fixture(scope="module")
+def cancel_engine(lifecycle_setup):
+    """One engine for the whole cancellation property run — a fresh engine
+    per hypothesis example would recompile every program.  A drained
+    engine is clean state except the (persistent-by-design) prefix store,
+    which cannot perturb outputs under the lifted capacity bound."""
+    cfg, params, _, _ = lifecycle_setup
+    return ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, n_slots=3, mode="continuous", prefix_cache=True,
+        prefill_chunk=8))
+
+
+@hypothesis.given(st.sets(st.integers(0, 8), max_size=5),
+                  st.integers(0, 4))
+def test_cancel_releases_slots_and_pins(lifecycle_setup, cancel_engine,
+                                        cancel_ids, pre_steps):
+    """Property: cancelling ANY subset of requests at ANY point in their
+    lifecycle (queued, mid-chunked-prefill, mid-decode) leaves no leaked
+    slot and no leaked prefix pin, and the survivors' outputs are
+    token-identical to the no-cancellation reference."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = cancel_engine
+    handles = [eng.submit(r) for r in reqs]
+    for _ in range(pre_steps):
+        eng.step()
+    cancelled = {i for i in cancel_ids
+                 if handles[i].cancel()}          # False once completed
+    eng.drain()
+    # no leaked slots: the pool is fully free and re-normalized
+    assert eng.pool.n_used == 0
+    assert eng.pool.n_free == eng.n_slots
+    # no leaked pins: every surviving store entry is unpinned
+    assert all(e.refcount == 0
+               for e in eng.prefix_store._entries.values())
+    for i, (h, ref) in enumerate(zip(handles, ref_out)):
+        if i in cancelled:
+            assert h.status == "cancelled" and h.poll() is None
+        else:
+            np.testing.assert_array_equal(h.poll().item, ref)
+
+
+# ---------------------------------------------------------------------------
+# Hold-window admission
+# ---------------------------------------------------------------------------
+
+
+def test_hold_k_defers_until_count(lifecycle_setup):
+    """With hold_k=3 and no time bound, two arrived requests sit in the
+    queue; the third releases the window."""
+    cfg, params, reqs, _ = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", hold_k=3))
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    eng.step()
+    assert eng.pool.n_used == 0                   # held
+    assert eng._sched.holds >= 1
+    eng.submit(reqs[2])
+    eng.step()
+    assert eng.pool.n_used == 3                   # count reached: one join
+    eng.drain()
+
+
+def test_hold_ms_bounds_the_wait(lifecycle_setup):
+    """A count that will never be reached releases on the time bound."""
+    cfg, params, reqs, _ = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", hold_k=8, hold_ms=30.0))
+    eng.submit(reqs[0])
+    eng.step()
+    assert eng.pool.n_used == 0
+    time.sleep(0.04)
+    eng.step()
+    assert eng.pool.n_used == 1                   # hold_ms expired
+    eng.drain()
+
+
+def test_hold_tail_releases_under_drain(lifecycle_setup):
+    """hold_k with NO time bound must still drain a closed batch: the
+    draining tail releases the window (no deadlock)."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", hold_k=100))
+    out, stats = eng.serve_requests(reqs)
+    for a, b in zip(out, ref_out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_hold_window_token_identical(lifecycle_setup):
+    """Holding changes WHEN requests join, never what they generate."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", hold_k=4, hold_ms=20.0))
+    timed = [dict(r, arrival_s=0.01 * i) for i, r in enumerate(reqs)]
+    outs, stats = run_open_loop(eng, timed)
+    for a, b in zip(outs, ref_out):
+        np.testing.assert_array_equal(a, b)
+    assert stats["n_requests"] == float(len(reqs))
+
+
+def test_hold_requires_continuous_mode(lifecycle_setup):
+    cfg, params, _, _ = lifecycle_setup
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(mode="fixed", hold_k=4))
+
+
+def test_livelock_configs_rejected(lifecycle_setup):
+    """Bounds that could never release — a hold count the bounded queue
+    cannot accumulate, or a fixed batch the queue cannot hold — are
+    constructor errors, not open-loop livelocks."""
+    cfg, params, _, _ = lifecycle_setup
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(
+            mode="continuous", hold_k=8, max_queue=4))
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(
+            mode="fixed", batch_size=4, max_queue=2))
+
+
+# ---------------------------------------------------------------------------
+# Second-sight prefix-store admission
+# ---------------------------------------------------------------------------
+
+
+def _toks(n_items, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 100, size=n_items * NCB).astype(np.int32)
+
+
+def _prof(seed=0):
+    return np.random.default_rng(seed).normal(size=8).astype(np.float32)
+
+
+def test_store_second_sight_admission():
+    store = PrefixStore(n_rows=4, row_bytes=100, n_codebooks=NCB,
+                        store_on_first_sight=False)
+    prof, toks = _prof(), _toks(4)
+    assert store.insert(prof, toks, 12) is None    # first sight: recorded
+    assert store.first_sights == 1
+    assert store.n_entries == 0
+    assert store.insert(prof, toks, 12) is not None  # second sight: stored
+    assert store.n_entries == 1
+    # one-off content never earns a row
+    assert store.insert(_prof(1), _toks(4, seed=1), 12) is None
+    assert store.n_entries == 1
+
+
+def test_store_second_sight_matches_extended_history():
+    """A revisiting user EXTENDS their history, so the full digest is
+    fresh every visit — the shared item boundaries are the sight."""
+    store = PrefixStore(n_rows=4, row_bytes=100, n_codebooks=NCB,
+                        store_on_first_sight=False)
+    prof, base = _prof(), _toks(3)
+    assert store.insert(prof, base, 9) is None     # visit 1: recorded
+    grown = np.concatenate([base, _toks(2, seed=9)])
+    assert store.insert(prof, grown, 15) is not None  # visit 2: stored
+    assert store.lookup_longest(prof, grown) is not None
+
+
+def test_store_insert_force_bypasses_doorkeeper():
+    """Preemption parks K/V it KNOWS will be re-requested."""
+    store = PrefixStore(n_rows=4, row_bytes=100, n_codebooks=NCB,
+                        store_on_first_sight=False)
+    assert store.insert(_prof(), _toks(2), 6, force=True) is not None
+    assert store.n_entries == 1
+
+
+def test_engine_second_sight_token_identical(lifecycle_setup):
+    """Second-sight admission changes what the arena stores, never what
+    the engine generates; repeats still produce hits (one visit later)."""
+    cfg, params, reqs, ref_out = lifecycle_setup
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", prefix_cache=True,
+        store_on_first_sight=False))
+    out1, stats1 = eng.serve_requests(reqs)       # all first sights
+    assert stats1["prefix_hit_rate"] == 0.0
+    assert stats1["prefix_first_sights"] > 0
+    out2, stats2 = eng.serve_requests(reqs)       # second sights -> stored
+    out3, stats3 = eng.serve_requests(reqs)       # ... -> hits
+    assert stats3["prefix_hit_rate"] > 0.5
+    for a, b, c, ref in zip(out1, out2, out3, ref_out):
+        np.testing.assert_array_equal(a, ref)
+        np.testing.assert_array_equal(b, ref)
+        np.testing.assert_array_equal(c, ref)
+
+
+def test_second_sight_requires_prefix_cache(lifecycle_setup):
+    cfg, params, _, _ = lifecycle_setup
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(
+            mode="continuous", store_on_first_sight=False))
+
+
+# ---------------------------------------------------------------------------
+# Shared request construction
+# ---------------------------------------------------------------------------
+
+
+def test_requests_from_arrays_matches_generate_batch(lifecycle_setup):
+    """generate_batch is a shim over the shared request builder."""
+    cfg, params, _, _ = lifecycle_setup
+    rng = np.random.default_rng(5)
+    B, T = 4, cfg.history_len * cfg.n_codebooks
+    tokens = rng.integers(0, 192, size=(B, T)).astype(np.int32)
+    profile = rng.normal(size=(B, onerec_model.PROFILE_DIM)
+                         ).astype(np.float32)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous"))
+    out_gb = eng.generate_batch(tokens, profile)
+    out_sr, _ = eng.serve_requests(requests_from_arrays(tokens, profile))
+    np.testing.assert_array_equal(out_gb, np.stack(out_sr))
+    with pytest.raises(ValueError):
+        requests_from_arrays(tokens, profile[:2])
+
+
+def test_make_request_field_mapping():
+    req = make_request(np.arange(6), np.ones(8), arrival_s=0.5,
+                       priority=2, deadline_s=1.5)
+    assert req["tokens"].dtype == np.int32
+    assert req["profile"].dtype == np.float32
+    assert req["arrival_s"] == 0.5 and req["priority"] == 2
+    assert req["deadline_s"] == 1.5
+    assert set(make_request(np.arange(3), np.ones(8))) == \
+        {"tokens", "profile"}
