@@ -45,7 +45,15 @@ Eight measurements:
      chunking bounds that, which shows up in join-step wall-time p99, the
      decode-stall fraction, and the interactive class's deadline-miss rate
      — with a token-for-token output equality check,
-  8. the TPU-v5e projection from the dry-run artifacts: serve latency =
+  8. MULTI-CANDIDATE A/B: real recommendation traffic wants a top-K
+     candidate set per user.  Tree decode serves all K branches of a
+     request from ONE slot with one fused decode program per step;
+     the status-quo alternative is K forced-seed single-candidate
+     requests (K slots, K x the decode rounds through the same pool).
+     Same ranked candidate sets token-for-token (asserted), >= 2x fewer
+     decode program dispatches at K = 4 (asserted), candidate-items/s
+     reported,
+  9. the TPU-v5e projection from the dry-run artifacts: serve latency =
      dominant roofline term of (prefill + decode_len x decode) for the FULL
      4B/0.5B model at batch 32, bf16 vs fp8 — the §5.2 analogue
      (the paper: 139 ms -> 70 ms, throughput 205 -> 394).
@@ -55,11 +63,19 @@ All serving stats rows now include the join-step wall-time distribution
 call's wall clock that decoding slots spent waiting on prefill programs) —
 the metrics the chunked-prefill claim is measured by.
 
-Results are also written to ``results/bench_latency_throughput.json``.
+Reproducibility: every measurement's workload (request content, lengths,
+Poisson gaps, Zipf draws) derives from the explicit ``seed`` recorded in
+its JSON section; the engine itself is deterministic.  Wall-clock-derived
+quantities (calibrated offered rates) are recorded alongside.
+
+Results are also written to ``results/bench_latency_throughput.json``;
+``--only SECTION`` runs a single section (CI runs ``--only
+multi_candidate`` and uploads the JSON as an artifact).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -83,12 +99,12 @@ from repro.serving.requests import build_requests, make_request  # noqa: E402
 JSON_OUT = "results/bench_latency_throughput.json"
 
 
-def measured_cpu(n_requests: int = 32, batch: int = 8):
+def measured_cpu(n_requests: int = 32, batch: int = 8, seed: int = 0):
     """bf16 vs fp8 on the uniform workload (fixed mode, paper batch setting)."""
     cfg = registry.get_arch("onerec-v2").reduced_config()
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
-    requests = build_requests(cfg, n_requests, batch, seed=0, ragged=False)
-    out = {}
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
+    requests = build_requests(cfg, n_requests, batch, seed=seed, ragged=False)
+    out = {"seed": seed}
     for name, fp8 in (("bf16", False), ("fp8", True)):
         eng = ServingEngine(params, cfg, EngineConfig(
             batch_size=batch, use_fp8=fp8, mode="fixed"))
@@ -119,14 +135,15 @@ def _bench_cfg(capacity_factor: float = 1.5) -> OneRecConfig:
         serve_batch=8, beam_width=4)
 
 
-def measured_scheduler_ab(n_requests: int = 30, batch: int = 8):
+def measured_scheduler_ab(n_requests: int = 30, batch: int = 8,
+                          seed: int = 0):
     """Continuous slot-based batching vs fixed-batch reference, fp8 stack,
     ragged arrivals (mixed history lengths, n not a multiple of batch)."""
     assert n_requests % batch != 0, "ragged workload must leave a tail batch"
     cfg = _bench_cfg()
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
-    requests = build_requests(cfg, n_requests, batch, seed=0, ragged=True)
-    out = {}
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
+    requests = build_requests(cfg, n_requests, batch, seed=seed, ragged=True)
+    out = {"seed": seed}
     for mode in ("continuous", "fixed"):
         eng = ServingEngine(params, cfg, EngineConfig(
             batch_size=batch, use_fp8=True, mode=mode))
@@ -150,13 +167,13 @@ def measured_staggered(n_requests: int = 16, batch: int = 8,
     than fixed batching — the dispatch-overhead effect the hold-window
     A/B (``measured_hold_overload``) measures and mitigates."""
     cfg = _bench_cfg()
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
     requests = build_requests(cfg, n_requests, batch, seed=seed, ragged=True)
     rng = np.random.default_rng(seed)
     offsets = np.cumsum(rng.exponential(1.0 / rate_rps, size=n_requests))
     timed = [dict(r, arrival_s=float(t))
              for r, t in zip(requests, offsets)]
-    out = {"rate_rps": rate_rps}
+    out = {"rate_rps": rate_rps, "seed": seed}
     for mode in ("continuous", "fixed"):
         eng = ServingEngine(params, cfg, EngineConfig(
             batch_size=batch, use_fp8=True, mode=mode))
@@ -223,7 +240,7 @@ def measured_hold_overload(n_requests: int = 96, batch: int = 8,
     lifts the MoE capacity bound), and the shape lattice is pre-compiled
     so no run pays XLA compiles mid-flight."""
     cfg = _hold_cfg()
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     ncb = cfg.n_codebooks
     requests = [
@@ -245,11 +262,14 @@ def measured_hold_overload(n_requests: int = 96, batch: int = 8,
         eng.serve_requests([r])
     rate_rps = overload * 8 / (time.perf_counter() - t0)
     hold_ms = 4e3 / rate_rps              # ~4 mean arrival gaps
-    offsets = np.cumsum(rng.exponential(1.0 / rate_rps, size=n_requests))
+    # unit-exponential draws scaled by the calibrated rate: the arrival
+    # PATTERN reproduces from the seed alone; only the absolute time scale
+    # follows this machine's measured service rate (recorded above)
+    offsets = np.cumsum(rng.exponential(1.0, size=n_requests)) / rate_rps
     timed = [dict(r, arrival_s=float(t))
              for r, t in zip(requests, offsets)]
     out = {"rate_rps": rate_rps, "hold_k": hold_k, "hold_ms": hold_ms,
-           "n_slots": n_slots, "overload": overload}
+           "n_slots": n_slots, "overload": overload, "seed": seed}
     outputs = {}
     for name, (hk, hm) in (("hold_off", (0, 0.0)),
                            ("hold_on", (hold_k, hold_ms))):
@@ -328,9 +348,9 @@ def measured_prefix_repeat(n_requests: int = 36, batch: int = 8,
     is exactly what ``prefill_padded_token_frac`` reports).
     """
     cfg = _bench_cfg(capacity_factor=64.0)
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
     requests, share = build_repeat_traffic(cfg, n_requests, n_users, seed)
-    out = {"n_users": n_users, "revisit_share": share}
+    out = {"n_users": n_users, "revisit_share": share, "seed": seed}
     outputs = {}
     for name, prefix in (("cache_on", True), ("cache_off", False)):
         eng = ServingEngine(params, cfg, EngineConfig(
@@ -369,11 +389,11 @@ def measured_prefix_admission(n_requests: int = 36, batch: int = 8,
     ``prefix_evictions`` dropping is the asserted signal.
     """
     cfg = _bench_cfg(capacity_factor=64.0)
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
     requests, share = build_repeat_traffic(cfg, n_requests, n_users, seed,
                                            zipf_a=0.3)
     out = {"n_users": n_users, "revisit_share": share,
-           "prefix_rows": prefix_rows}
+           "prefix_rows": prefix_rows, "seed": seed}
     outputs = {}
     for name, first in (("first_sight", True), ("second_sight", False)):
         eng = ServingEngine(params, cfg, EngineConfig(
@@ -460,9 +480,9 @@ def measured_chunked_sla(n_requests: int = 28, batch: int = 8,
     token-for-token.
     """
     cfg = _bench_cfg(capacity_factor=64.0)
-    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
     requests = build_sla_traffic(cfg, n_requests, seed)
-    out = {"chunk": chunk,
+    out = {"chunk": chunk, "seed": seed,
            "long_history_tokens": cfg.history_len * cfg.n_codebooks}
     outputs = {}
     for name, c in (("monolithic", 0), ("chunked", chunk)):
@@ -482,6 +502,89 @@ def measured_chunked_sla(n_requests: int = 28, batch: int = 8,
     mono_p99 = out["monolithic"]["join_p99_s"]
     out["join_p99_reduction"] = 1.0 - out["chunked"]["join_p99_s"] / mono_p99 \
         if mono_p99 else 0.0
+    return out
+
+
+def _serve_collect(eng, requests):
+    """Closed-batch drive that returns whole Completions (ranked candidate
+    sets included) in input order, not just top-1 items."""
+    eng.reset_window()
+    handles = [eng.submit(r, base_s=eng._window_t0) for r in requests]
+    eng.drain()
+    return [h.completion for h in handles], eng.stats()
+
+
+def measured_multi_candidate(n_requests: int = 16, batch: int = 8,
+                             n_slots: int = 8, k: int = 4, seed: int = 0):
+    """Multi-candidate A/B: tree decode vs K sequential passes.
+
+    Both arms produce the SAME ranked top-``k`` candidate set per request
+    (asserted token-for-token).  The tree arm serves each request from one
+    slot whose ``k`` branches advance in one fused decode program per
+    step.  The sequential arm is the status-quo route to a candidate set:
+    ``k`` forced-seed single-candidate copies of every request (seeds =
+    the tree run's branch seeds) through an otherwise-identical engine —
+    ``k``x the slots, ``k``x the scheduler round-trips, through the same
+    pool.  The claim is dispatch amortization: at k=4 the tree arm must
+    launch >= 2x fewer decode programs (asserted; the bench config makes
+    requests outnumber slots so the sequential arm's extra copies cost
+    real extra pool waves).  Candidate-items/s reported for both arms.
+    The MoE capacity bound is lifted so arm batch compositions cannot
+    perturb outputs.
+    """
+    cfg = _bench_cfg(capacity_factor=64.0)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
+    base = build_requests(cfg, n_requests, batch, seed=seed, ragged=True)
+    multi = [dict(r, n_candidates=k) for r in base]
+
+    def engine():
+        # max_candidates on BOTH arms: cache rows share one shape, so the
+        # only difference between the arms is scheduling
+        return ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, use_fp8=True, mode="continuous",
+            n_slots=n_slots, max_candidates=k))
+
+    out = {"k": k, "n_slots": n_slots, "n_requests": n_requests,
+           "seed": seed}
+    eng = engine()
+    _serve_collect(eng, multi)                   # warmup/compile
+    tree_comps, tree_stats = _serve_collect(eng, multi)
+    out["tree"] = tree_stats
+
+    seq_reqs, owners = [], []
+    for i, c in enumerate(tree_comps):
+        for item in c.items:                     # one copy per branch seed
+            seq_reqs.append(dict(base[i], first_token=int(item[0])))
+            owners.append((i, int(item[0])))
+    eng = engine()
+    _serve_collect(eng, seq_reqs)                # warmup/compile
+    seq_comps, seq_stats = _serve_collect(eng, seq_reqs)
+    out["sequential"] = seq_stats
+
+    # ranked-set equality: every tree branch token-identical to its
+    # forced-seed sequential replay (branch seeds are distinct top-k ids,
+    # so the seed token addresses the branch unambiguously)
+    match = True
+    for (i, seed_tok), c in zip(owners, seq_comps):
+        branch = next(it for it in tree_comps[i].items
+                      if int(it[0]) == seed_tok)
+        match &= bool(np.array_equal(c.item, branch))
+    out["outputs_match"] = match
+    assert match, "tree-decoded candidate sets must be token-identical " \
+        "to their forced-seed sequential replays"
+
+    td = tree_stats["decode_steps"]
+    sd = seq_stats["decode_steps"]
+    out["decode_dispatch_reduction"] = 1.0 - td / sd if sd else 0.0
+    assert td * 2 <= sd, \
+        (f"tree decode must at least halve decode program dispatches at "
+         f"k={k}: {td:.0f} vs {sd:.0f} sequential")
+    # candidate items delivered per second (each tree request yields k)
+    out["tree_items_per_s"] = k * tree_stats["throughput_rps"]
+    out["sequential_items_per_s"] = seq_stats["throughput_rps"]
+    out["items_throughput_gain"] = \
+        out["tree_items_per_s"] / out["sequential_items_per_s"] \
+        if out["sequential_items_per_s"] else 0.0
     return out
 
 
@@ -522,158 +625,191 @@ def projected_tpu(dryrun_dir="results/dryrun",
     return out
 
 
-def run() -> list:
+def run(only=None) -> list:
+    """Run every section (or just ``only``) and write the JSON report."""
     rows = []
     report = {}
 
-    cpu = measured_cpu()
-    report["fp8_ab_uniform"] = cpu
-    m_bf, m_f8 = cpu["bf16"], cpu["fp8"]
-    print(f"\n[CPU wall, reduced model, fixed batch] bf16: "
-          f"{m_bf['mean_latency_s']*1e3:.1f} ms/req, "
-          f"{m_bf['throughput_rps']:.1f} req/s | fp8: "
-          f"{m_f8['mean_latency_s']*1e3:.1f} ms/req, "
-          f"{m_f8['throughput_rps']:.1f} req/s "
-          f"(CPU executes fp8 via emulation — no wall-time win expected)")
-    rows.append(f"serve_cpu/bf16_latency,"
-                f"{m_bf['mean_latency_s']*1e6:.0f},")
-    rows.append(f"serve_cpu/fp8_latency,{m_f8['mean_latency_s']*1e6:.0f},")
+    def want(name):
+        return only is None or only == name
 
-    ab = measured_scheduler_ab()
-    report["scheduler_ab_ragged"] = ab
-    c, f = ab["continuous"], ab["fixed"]
-    print(f"[scheduler A/B, ragged histories, fp8] "
-          f"fixed: {f['throughput_rps']:.1f} req/s, "
-          f"mean {f['mean_latency_s']*1e3:.0f} ms, "
-          f"p50 {f['p50_latency_s']*1e3:.0f} ms, "
-          f"p99 {f['p99_latency_s']*1e3:.0f} ms | "
-          f"continuous: {c['throughput_rps']:.1f} req/s, "
-          f"mean {c['mean_latency_s']*1e3:.0f} ms, "
-          f"p50 {c['p50_latency_s']*1e3:.0f} ms, "
-          f"p99 {c['p99_latency_s']*1e3:.0f} ms | "
-          f"occupancy {c['slot_occupancy']:.2f} | "
-          f"throughput +{100*(c['throughput_rps']/f['throughput_rps']-1):.0f}% "
-          f"latency {100*(c['mean_latency_s']/f['mean_latency_s']-1):+.0f}%")
-    rows.append(f"serve_sched/fixed_mean_latency,"
-                f"{f['mean_latency_s']*1e6:.0f},")
-    rows.append(f"serve_sched/continuous_mean_latency,"
-                f"{c['mean_latency_s']*1e6:.0f},"
-                f"x{f['mean_latency_s']/c['mean_latency_s']:.2f}")
-    rows.append(f"serve_sched/continuous_throughput_gain,0,"
-                f"{c['throughput_rps']/f['throughput_rps']:.2f}x")
+    if want("fp8_ab_uniform"):
+        cpu = measured_cpu()
+        report["fp8_ab_uniform"] = cpu
+        m_bf, m_f8 = cpu["bf16"], cpu["fp8"]
+        print(f"\n[CPU wall, reduced model, fixed batch] bf16: "
+              f"{m_bf['mean_latency_s']*1e3:.1f} ms/req, "
+              f"{m_bf['throughput_rps']:.1f} req/s | fp8: "
+              f"{m_f8['mean_latency_s']*1e3:.1f} ms/req, "
+              f"{m_f8['throughput_rps']:.1f} req/s "
+              f"(CPU executes fp8 via emulation — no wall-time win expected)")
+        rows.append(f"serve_cpu/bf16_latency,"
+                    f"{m_bf['mean_latency_s']*1e6:.0f},")
+        rows.append(f"serve_cpu/fp8_latency,{m_f8['mean_latency_s']*1e6:.0f},")
 
-    stag = measured_staggered()
-    report["staggered_poisson"] = stag
-    c, f = stag["continuous"], stag["fixed"]
-    print(f"[scheduler A/B, open-loop Poisson @ {stag['rate_rps']:.0f} rps] "
-          f"fixed: mean {f['mean_latency_s']*1e3:.0f} ms, "
-          f"p99 {f['p99_latency_s']*1e3:.0f} ms | "
-          f"continuous: mean {c['mean_latency_s']*1e3:.0f} ms, "
-          f"p99 {c['p99_latency_s']*1e3:.0f} ms | "
-          f"p99 {100*(c['p99_latency_s']/f['p99_latency_s']-1):+.0f}%")
-    rows.append(f"serve_stagger/fixed_p99_latency,"
-                f"{f['p99_latency_s']*1e6:.0f},")
-    rows.append(f"serve_stagger/continuous_p99_latency,"
-                f"{c['p99_latency_s']*1e6:.0f},"
-                f"x{f['p99_latency_s']/c['p99_latency_s']:.2f}")
+    if want("scheduler_ab_ragged"):
+        ab = measured_scheduler_ab()
+        report["scheduler_ab_ragged"] = ab
+        c, f = ab["continuous"], ab["fixed"]
+        print(f"[scheduler A/B, ragged histories, fp8] "
+              f"fixed: {f['throughput_rps']:.1f} req/s, "
+              f"mean {f['mean_latency_s']*1e3:.0f} ms, "
+              f"p50 {f['p50_latency_s']*1e3:.0f} ms, "
+              f"p99 {f['p99_latency_s']*1e3:.0f} ms | "
+              f"continuous: {c['throughput_rps']:.1f} req/s, "
+              f"mean {c['mean_latency_s']*1e3:.0f} ms, "
+              f"p50 {c['p50_latency_s']*1e3:.0f} ms, "
+              f"p99 {c['p99_latency_s']*1e3:.0f} ms | "
+              f"occupancy {c['slot_occupancy']:.2f} | "
+              f"throughput +{100*(c['throughput_rps']/f['throughput_rps']-1):.0f}% "
+              f"latency {100*(c['mean_latency_s']/f['mean_latency_s']-1):+.0f}%")
+        rows.append(f"serve_sched/fixed_mean_latency,"
+                    f"{f['mean_latency_s']*1e6:.0f},")
+        rows.append(f"serve_sched/continuous_mean_latency,"
+                    f"{c['mean_latency_s']*1e6:.0f},"
+                    f"x{f['mean_latency_s']/c['mean_latency_s']:.2f}")
+        rows.append(f"serve_sched/continuous_throughput_gain,0,"
+                    f"{c['throughput_rps']/f['throughput_rps']:.2f}x")
 
-    hold = measured_hold_overload()
-    report["hold_window_overload"] = hold
-    on, off = hold["hold_on"], hold["hold_off"]
-    print(f"[hold-window A/B, {hold['overload']:.1f}x-overloaded open loop "
-          f"@ {hold['rate_rps']:.0f} rps, hold_k={hold['hold_k']} "
-          f"hold_ms={hold['hold_ms']:.0f}] programs "
-          f"{off['prefill_calls'] + off['decode_steps']:.0f} -> "
-          f"{on['prefill_calls'] + on['decode_steps']:.0f} "
-          f"(dispatch -{100*hold['dispatch_reduction']:.0f}%; prefill "
-          f"-{100*hold['prefill_call_reduction']:.0f}%) | throughput "
-          f"{off['throughput_rps']:.1f} -> {on['throughput_rps']:.1f} "
-          f"req/s (x{hold['throughput_gain']:.2f}) | p99 "
-          f"{off['p99_latency_s']*1e3:.0f} -> "
-          f"{on['p99_latency_s']*1e3:.0f} ms | hold rounds "
-          f"{on['hold_rounds']:.0f} | outputs match: "
-          f"{hold['outputs_match']}")
-    rows.append(f"serve_hold/dispatch_reduction,"
-                f"{1000*hold['dispatch_reduction']:.0f},"
-                f"-{100*hold['dispatch_reduction']:.0f}%")
-    rows.append(f"serve_hold/throughput_gain,0,"
-                f"x{hold['throughput_gain']:.2f}")
-    rows.append(f"serve_hold/outputs_match,{int(hold['outputs_match'])},")
+    if want("staggered_poisson"):
+        stag = measured_staggered()
+        report["staggered_poisson"] = stag
+        c, f = stag["continuous"], stag["fixed"]
+        print(f"[scheduler A/B, open-loop Poisson @ {stag['rate_rps']:.0f} rps] "
+              f"fixed: mean {f['mean_latency_s']*1e3:.0f} ms, "
+              f"p99 {f['p99_latency_s']*1e3:.0f} ms | "
+              f"continuous: mean {c['mean_latency_s']*1e3:.0f} ms, "
+              f"p99 {c['p99_latency_s']*1e3:.0f} ms | "
+              f"p99 {100*(c['p99_latency_s']/f['p99_latency_s']-1):+.0f}%")
+        rows.append(f"serve_stagger/fixed_p99_latency,"
+                    f"{f['p99_latency_s']*1e6:.0f},")
+        rows.append(f"serve_stagger/continuous_p99_latency,"
+                    f"{c['p99_latency_s']*1e6:.0f},"
+                    f"x{f['p99_latency_s']/c['p99_latency_s']:.2f}")
 
-    rep = measured_prefix_repeat()
-    report["prefix_repeat"] = rep
-    on, off = rep["cache_on"], rep["cache_off"]
-    print(f"[prefix-cache A/B, Zipf repeat traffic, "
-          f"{100*rep['revisit_share']:.0f}% revisits] "
-          f"hit rate {on['prefix_hit_rate']:.2f} | prefill tokens "
-          f"{off['prefill_tokens']:.0f} -> {on['prefill_tokens']:.0f} "
-          f"(-{100*rep['prefill_token_reduction']:.0f}%), "
-          f"saved {on['prefix_tokens_saved']:.0f} history tokens | "
-          f"padded-token frac {off['prefill_padded_token_frac']:.2f} -> "
-          f"{on['prefill_padded_token_frac']:.2f} | throughput "
-          f"{off['throughput_rps']:.1f} -> {on['throughput_rps']:.1f} req/s"
-          f" | outputs match: {rep['outputs_match']}")
-    rows.append(f"serve_prefix/hit_rate,{1000*on['prefix_hit_rate']:.0f},")
-    rows.append(f"serve_prefix/prefill_token_reduction,"
-                f"{1000*rep['prefill_token_reduction']:.0f},"
-                f"-{100*rep['prefill_token_reduction']:.0f}%")
-    rows.append(f"serve_prefix/outputs_match,"
-                f"{int(rep['outputs_match'])},")
+    if want("hold_window_overload"):
+        hold = measured_hold_overload()
+        report["hold_window_overload"] = hold
+        on, off = hold["hold_on"], hold["hold_off"]
+        print(f"[hold-window A/B, {hold['overload']:.1f}x-overloaded open loop "
+              f"@ {hold['rate_rps']:.0f} rps, hold_k={hold['hold_k']} "
+              f"hold_ms={hold['hold_ms']:.0f}] programs "
+              f"{off['prefill_calls'] + off['decode_steps']:.0f} -> "
+              f"{on['prefill_calls'] + on['decode_steps']:.0f} "
+              f"(dispatch -{100*hold['dispatch_reduction']:.0f}%; prefill "
+              f"-{100*hold['prefill_call_reduction']:.0f}%) | throughput "
+              f"{off['throughput_rps']:.1f} -> {on['throughput_rps']:.1f} "
+              f"req/s (x{hold['throughput_gain']:.2f}) | p99 "
+              f"{off['p99_latency_s']*1e3:.0f} -> "
+              f"{on['p99_latency_s']*1e3:.0f} ms | hold rounds "
+              f"{on['hold_rounds']:.0f} | outputs match: "
+              f"{hold['outputs_match']}")
+        rows.append(f"serve_hold/dispatch_reduction,"
+                    f"{1000*hold['dispatch_reduction']:.0f},"
+                    f"-{100*hold['dispatch_reduction']:.0f}%")
+        rows.append(f"serve_hold/throughput_gain,0,"
+                    f"x{hold['throughput_gain']:.2f}")
+        rows.append(f"serve_hold/outputs_match,{int(hold['outputs_match'])},")
 
-    adm = measured_prefix_admission()
-    report["prefix_admission"] = adm
-    fs, ss = adm["first_sight"], adm["second_sight"]
-    print(f"[prefix-admission A/B, low-repeat Zipf "
-          f"({100*adm['revisit_share']:.0f}% revisits, "
-          f"{adm['prefix_rows']}-row arena)] evictions "
-          f"{fs['prefix_evictions']:.0f} -> {ss['prefix_evictions']:.0f} "
-          f"(-{100*adm['eviction_reduction']:.0f}%) | first-sight "
-          f"record-only offers {ss['prefix_first_sights']:.0f} | hit rate "
-          f"{fs['prefix_hit_rate']:.2f} -> {ss['prefix_hit_rate']:.2f} | "
-          f"outputs match: {adm['outputs_match']}")
-    rows.append(f"serve_prefix_adm/eviction_reduction,"
-                f"{1000*adm['eviction_reduction']:.0f},"
-                f"-{100*adm['eviction_reduction']:.0f}%")
-    rows.append(f"serve_prefix_adm/outputs_match,"
-                f"{int(adm['outputs_match'])},")
+    if want("prefix_repeat"):
+        rep = measured_prefix_repeat()
+        report["prefix_repeat"] = rep
+        on, off = rep["cache_on"], rep["cache_off"]
+        print(f"[prefix-cache A/B, Zipf repeat traffic, "
+              f"{100*rep['revisit_share']:.0f}% revisits] "
+              f"hit rate {on['prefix_hit_rate']:.2f} | prefill tokens "
+              f"{off['prefill_tokens']:.0f} -> {on['prefill_tokens']:.0f} "
+              f"(-{100*rep['prefill_token_reduction']:.0f}%), "
+              f"saved {on['prefix_tokens_saved']:.0f} history tokens | "
+              f"padded-token frac {off['prefill_padded_token_frac']:.2f} -> "
+              f"{on['prefill_padded_token_frac']:.2f} | throughput "
+              f"{off['throughput_rps']:.1f} -> {on['throughput_rps']:.1f} req/s"
+              f" | outputs match: {rep['outputs_match']}")
+        rows.append(f"serve_prefix/hit_rate,{1000*on['prefix_hit_rate']:.0f},")
+        rows.append(f"serve_prefix/prefill_token_reduction,"
+                    f"{1000*rep['prefill_token_reduction']:.0f},"
+                    f"-{100*rep['prefill_token_reduction']:.0f}%")
+        rows.append(f"serve_prefix/outputs_match,"
+                    f"{int(rep['outputs_match'])},")
 
-    sla = measured_chunked_sla()
-    report["chunked_prefill_sla"] = sla
-    m, c = sla["monolithic"], sla["chunked"]
-    mi, ci = m["class_stats"]["0"], c["class_stats"]["0"]
-    print(f"[chunked-prefill A/B, Poisson + long-history tail, 2 classes] "
-          f"join p99 {m['join_p99_s']*1e3:.0f} -> {c['join_p99_s']*1e3:.0f} "
-          f"ms (-{100*sla['join_p99_reduction']:.0f}%) | decode-stall "
-          f"{100*m['decode_stall_frac']:.0f}% -> "
-          f"{100*c['decode_stall_frac']:.0f}% of wall | interactive "
-          f"deadline-miss {100*mi['deadline_miss_rate']:.0f}% -> "
-          f"{100*ci['deadline_miss_rate']:.0f}% | interactive p99 "
-          f"{mi['p99_latency_s']*1e3:.0f} -> {ci['p99_latency_s']*1e3:.0f} "
-          f"ms | outputs match: {sla['outputs_match']}")
-    rows.append(f"serve_chunked/monolithic_join_p99,"
-                f"{m['join_p99_s']*1e6:.0f},")
-    rows.append(f"serve_chunked/chunked_join_p99,{c['join_p99_s']*1e6:.0f},"
-                f"-{100*sla['join_p99_reduction']:.0f}%")
-    rows.append(f"serve_chunked/outputs_match,{int(sla['outputs_match'])},")
+    if want("prefix_admission"):
+        adm = measured_prefix_admission()
+        report["prefix_admission"] = adm
+        fs, ss = adm["first_sight"], adm["second_sight"]
+        print(f"[prefix-admission A/B, low-repeat Zipf "
+              f"({100*adm['revisit_share']:.0f}% revisits, "
+              f"{adm['prefix_rows']}-row arena)] evictions "
+              f"{fs['prefix_evictions']:.0f} -> {ss['prefix_evictions']:.0f} "
+              f"(-{100*adm['eviction_reduction']:.0f}%) | first-sight "
+              f"record-only offers {ss['prefix_first_sights']:.0f} | hit rate "
+              f"{fs['prefix_hit_rate']:.2f} -> {ss['prefix_hit_rate']:.2f} | "
+              f"outputs match: {adm['outputs_match']}")
+        rows.append(f"serve_prefix_adm/eviction_reduction,"
+                    f"{1000*adm['eviction_reduction']:.0f},"
+                    f"-{100*adm['eviction_reduction']:.0f}%")
+        rows.append(f"serve_prefix_adm/outputs_match,"
+                    f"{int(adm['outputs_match'])},")
 
-    proj = projected_tpu()
-    if proj:
-        report["tpu_projection"] = proj
-        lb, lf = proj["bf16"]["latency_s"], proj["fp8"]["latency_s"]
-        tb = proj["bf16"]["throughput_rps"]
-        tf = proj["fp8"]["throughput_rps"]
-        print(f"[TPU v5e projection, full 4B model, batch 32] "
-              f"bf16: {lb*1e3:.1f} ms, {tb:.0f} items/s | "
-              f"fp8+opt: {lf*1e3:.1f} ms, {tf:.0f} items/s | "
-              f"latency -{100*(1-lf/lb):.0f}% throughput +{100*(tf/tb-1):.0f}% "
-              f"(paper: -49% / +92%)")
-        rows.append(f"serve_tpu_proj/bf16_latency,{lb*1e6:.0f},")
-        rows.append(f"serve_tpu_proj/fp8_latency,{lf*1e6:.0f},"
-                    f"latency{100*(lf/lb-1):+.0f}%")
-        rows.append(f"serve_tpu_proj/throughput_gain,0,{tf/tb:.2f}x")
-    else:
-        print("[TPU projection] dry-run artifacts missing; run "
-              "repro.launch.dryrun first")
+    if want("chunked_prefill_sla"):
+        sla = measured_chunked_sla()
+        report["chunked_prefill_sla"] = sla
+        m, c = sla["monolithic"], sla["chunked"]
+        mi, ci = m["class_stats"]["0"], c["class_stats"]["0"]
+        print(f"[chunked-prefill A/B, Poisson + long-history tail, 2 classes] "
+              f"join p99 {m['join_p99_s']*1e3:.0f} -> {c['join_p99_s']*1e3:.0f} "
+              f"ms (-{100*sla['join_p99_reduction']:.0f}%) | decode-stall "
+              f"{100*m['decode_stall_frac']:.0f}% -> "
+              f"{100*c['decode_stall_frac']:.0f}% of wall | interactive "
+              f"deadline-miss {100*mi['deadline_miss_rate']:.0f}% -> "
+              f"{100*ci['deadline_miss_rate']:.0f}% | interactive p99 "
+              f"{mi['p99_latency_s']*1e3:.0f} -> {ci['p99_latency_s']*1e3:.0f} "
+              f"ms | outputs match: {sla['outputs_match']}")
+        rows.append(f"serve_chunked/monolithic_join_p99,"
+                    f"{m['join_p99_s']*1e6:.0f},")
+        rows.append(f"serve_chunked/chunked_join_p99,{c['join_p99_s']*1e6:.0f},"
+                    f"-{100*sla['join_p99_reduction']:.0f}%")
+        rows.append(f"serve_chunked/outputs_match,{int(sla['outputs_match'])},")
+
+    if want("multi_candidate"):
+        mc = measured_multi_candidate()
+        report["multi_candidate"] = mc
+        t, q = mc["tree"], mc["sequential"]
+        print(f"[multi-candidate A/B, K={mc['k']}, {mc['n_requests']} "
+              f"requests / {mc['n_slots']} slots] decode programs "
+              f"{q['decode_steps']:.0f} -> {t['decode_steps']:.0f} "
+              f"(-{100*mc['decode_dispatch_reduction']:.0f}%) | "
+              f"{t['branches_per_decode_step']:.1f} branches/dispatch | "
+              f"candidate items/s {mc['sequential_items_per_s']:.1f} -> "
+              f"{mc['tree_items_per_s']:.1f} "
+              f"(x{mc['items_throughput_gain']:.2f}) | ranked sets match: "
+              f"{mc['outputs_match']}")
+        rows.append(f"serve_multi/decode_dispatch_reduction,"
+                    f"{1000*mc['decode_dispatch_reduction']:.0f},"
+                    f"-{100*mc['decode_dispatch_reduction']:.0f}%")
+        rows.append(f"serve_multi/items_throughput_gain,0,"
+                    f"x{mc['items_throughput_gain']:.2f}")
+        rows.append(f"serve_multi/outputs_match,"
+                    f"{int(mc['outputs_match'])},")
+
+    if want("tpu_projection"):
+        proj = projected_tpu()
+        if proj:
+            report["tpu_projection"] = proj
+            lb, lf = proj["bf16"]["latency_s"], proj["fp8"]["latency_s"]
+            tb = proj["bf16"]["throughput_rps"]
+            tf = proj["fp8"]["throughput_rps"]
+            print(f"[TPU v5e projection, full 4B model, batch 32] "
+                  f"bf16: {lb*1e3:.1f} ms, {tb:.0f} items/s | "
+                  f"fp8+opt: {lf*1e3:.1f} ms, {tf:.0f} items/s | "
+                  f"latency -{100*(1-lf/lb):.0f}% throughput +{100*(tf/tb-1):.0f}% "
+                  f"(paper: -49% / +92%)")
+            rows.append(f"serve_tpu_proj/bf16_latency,{lb*1e6:.0f},")
+            rows.append(f"serve_tpu_proj/fp8_latency,{lf*1e6:.0f},"
+                        f"latency{100*(lf/lb-1):+.0f}%")
+            rows.append(f"serve_tpu_proj/throughput_gain,0,{tf/tb:.2f}x")
+        else:
+            print("[TPU projection] dry-run artifacts missing; run "
+                  "repro.launch.dryrun first")
 
     os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
     with open(JSON_OUT, "w") as fh:
@@ -682,5 +818,16 @@ def run() -> list:
     return rows
 
 
+
+
+SECTIONS = ("fp8_ab_uniform", "scheduler_ab_ragged",
+            "staggered_poisson", "hold_window_overload", "prefix_repeat",
+            "prefix_admission", "chunked_prefill_sla", "multi_candidate",
+            "tpu_projection")
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SECTIONS, default=None,
+                    help="run a single bench section (default: all); the "
+                         "JSON report then contains just that section")
+    run(only=ap.parse_args().only)

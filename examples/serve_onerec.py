@@ -11,9 +11,14 @@ Demonstrates the submit/step/poll API end to end:
      completion without blocking;
   3. ``handle.cancel()`` — withdraw a request mid-flight, freeing its
      slot;
-  4. ``engine.drain()`` + ``handle.result()`` — run to empty and collect.
+  4. ``engine.drain()`` + ``handle.result()`` — run to empty and collect;
+  5. ``--n-candidates K`` — multi-candidate tree decode: every request
+     comes back with a RANKED set of K candidate items
+     (``Completion.items`` / ``scores``) decoded by one fused program
+     per step instead of K engine passes.
 
-    PYTHONPATH=src python examples/serve_onerec.py --requests 96 --ragged
+    PYTHONPATH=src python examples/serve_onerec.py --requests 96 --ragged \
+        --n-candidates 4
 """
 
 import argparse
@@ -36,16 +41,21 @@ def main():
     ap.add_argument("--ragged", action="store_true")
     ap.add_argument("--no-fp8", dest="fp8", action="store_false",
                     default=True)
+    ap.add_argument("--n-candidates", type=int, default=1,
+                    help="ranked candidate items per request (tree decode)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="params + workload seed (runs reproduce from it)")
     args = ap.parse_args()
 
     cfg = get_arch("onerec-v2").reduced_config()
-    params = onerec.init_onerec(jax.random.PRNGKey(0), cfg)
-    requests = build_requests(cfg, args.requests, args.batch, seed=0,
-                              ragged=args.ragged)
+    params = onerec.init_onerec(jax.random.PRNGKey(args.seed), cfg)
+    requests = build_requests(cfg, args.requests, args.batch, seed=args.seed,
+                              ragged=args.ragged,
+                              n_candidates=args.n_candidates)
 
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=args.batch, use_fp8=args.fp8, mode=args.mode,
-        n_slots=args.slots))
+        n_slots=args.slots, max_candidates=args.n_candidates))
 
     # 1. submit: non-blocking, the engine does no work yet
     handles = [engine.submit(r) for r in requests]
@@ -71,6 +81,17 @@ def main():
     kept = [h for h in handles if not h.cancelled]
     outs = [h.result() for h in kept]
     stats = engine.stats()
+
+    # 5. multi-candidate completions carry the whole ranked candidate set
+    if args.n_candidates > 1:
+        c = kept[0].completion
+        print(f"ranked candidate set of request {c.rid} "
+              f"(score = cumulative log-prob):")
+        for item, score in zip(c.items, c.scores):
+            print(f"  {item}  score {score:.3f}")
+        print(f"tree decode: {int(stats['decode_multi_steps'])} fused "
+              f"programs advanced {stats['branches_per_decode_step']:.1f} "
+              f"branches per decode dispatch")
 
     print(f"mode={args.mode} fp8={args.fp8} served {len(outs)} requests "
           f"(+{int(stats['cancelled'])} cancelled) | "

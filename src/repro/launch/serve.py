@@ -5,7 +5,7 @@ the open-system continuous-batching slot engine.
       [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
       [--rate 8.0] [--max-queue 64] [--hold-k 4] [--hold-ms 25] \
       [--prefix-cache [--prefix-rows 32] [--second-sight]] \
-      [--prefill-chunk 32] [--preemption]
+      [--prefill-chunk 32] [--preemption] [--n-candidates 4]
 
 With ``--rate`` the launcher runs a REAL arrival-driven serve loop
 (``run_open_loop``): requests are submitted at wall-clock Poisson arrival
@@ -78,7 +78,16 @@ def main():
                     help="free the worst decoding slot for a strictly "
                          "higher-priority arrival (continuous mode; "
                          "resumes via the prefix store when enabled)")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-candidates", type=int, default=1,
+                    help="candidate items decoded per request: one fused "
+                         "tree-decode program advances all K branches of "
+                         "every slot against its shared prefix K/V "
+                         "(continuous mode; completions carry the ranked "
+                         "candidate set)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the params AND the synthetic workload "
+                         "(the engine itself is deterministic); one seed "
+                         "reproduces a run")
     args = ap.parse_args()
 
     mod = registry.get_arch("onerec-v2")
@@ -91,9 +100,10 @@ def main():
         hold_k=args.hold_k, hold_ms=args.hold_ms,
         prefix_cache=args.prefix_cache, prefix_rows=args.prefix_rows,
         store_on_first_sight=not args.second_sight,
-        prefill_chunk=args.prefill_chunk, preemption=args.preemption))
+        prefill_chunk=args.prefill_chunk, preemption=args.preemption,
+        max_candidates=args.n_candidates))
     requests = build_requests(cfg, args.requests, batch, args.seed,
-                              args.ragged)
+                              args.ragged, n_candidates=args.n_candidates)
 
     if args.rate > 0:
         # arrival-driven open loop: wall-clock Poisson submission
@@ -138,6 +148,12 @@ def main():
           f"p99={stats['join_p99_s']*1e3:.1f}ms, "
           f"decode-stall {100*stats['decode_stall_frac']:.0f}% of wall) | "
           f"preemptions={int(stats['preemptions'])}")
+    if args.n_candidates > 1:
+        print(f"[serve] multi-candidate: K={args.n_candidates} | "
+              f"tree-decode programs "
+              f"{int(stats['decode_multi_steps'])}/"
+              f"{int(stats['decode_steps'])} decode dispatches | "
+              f"{stats['branches_per_decode_step']:.1f} branches/dispatch")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,11 @@ Design notes (DESIGN.md §3):
   * The KV cache carries an explicit per-slot ``pos`` array (−1 = empty),
     which uniformly handles linear caches, sliding-window ring buffers, and
     sharded-sequence decode masking.
+  * Multi-candidate TREE decode shares each slot's prefix K/V across C
+    candidate branches in place: branch tokens live in reserved physical
+    spans past the prefix and a tree mask admits (shared prefix) + (own
+    branch) per query — no K/V duplication, one fused program for all
+    branches of all slots (see ``apply_attention``'s tree mode).
 """
 
 from __future__ import annotations
@@ -190,6 +195,8 @@ def apply_attention(
     fill_cache: bool = False,
     lengths: Optional[jax.Array] = None,
     starts: Optional[jax.Array] = None,
+    branch_stride: Optional[int] = None,
+    branch_counts: Optional[jax.Array] = None,
     norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """One attention layer.
@@ -206,6 +213,13 @@ def apply_attention(
         prefix store) — with per-row causal masking on stored positions.
       * ``cache, fill_cache=False``   — decode: ``x`` is (B, 1, D),
         ``cache_index`` is the absolute position of the new token.
+      * ``cache, fill_cache=False, starts, branch_stride`` — TREE decode
+        over a per-slot cache: ``x`` is (B, C, D), C independent candidate
+        branches per row all at logical depth ``lengths[i]``.  Every branch
+        shares the row's prefix K/V in place (no duplication); branch b's
+        own tokens live in a reserved physical span of ``branch_stride``
+        positions starting at ``starts[i] + b * branch_stride``, and the
+        tree mask admits exactly (shared prefix) + (own branch).
 
     Per-slot caches (``pos`` carries a batch axis, see ``init_cache``) use the
     length-masked path: ``lengths`` (B,) gives each row's true sequence
@@ -282,7 +296,65 @@ def apply_attention(
         # ---- decode: write the new token, attend over the cache ----
         S = cache["k"].shape[1]
         per_slot = cache["pos"].ndim == 2
-        if per_slot:
+        if per_slot and branch_stride is not None:
+            # ---- tree decode: C candidate branches per slot row ----
+            # x carries T = C branch tokens, ALL at logical depth
+            # ``lengths[i]`` (so RoPE above already rotated every branch to
+            # the same absolute position).  Physical layout of one row:
+            #
+            #   [0 .. starts[i])                      shared prefix K/V
+            #   [starts[i] + b*R .. + (b+1)*R)        branch b's own tokens
+            #
+            # with R = branch_stride.  Branch b's token at depth
+            # t = lengths[i] - starts[i] writes at starts[i] + b*R + t;
+            # its query sees (prefix) | (own span), never a sibling — the
+            # "tree" is a star of depth-R paths hanging off one prefix.
+            if branch_stride <= 0:
+                raise ValueError("tree decode requires branch_stride > 0")
+            if lengths is None or starts is None:
+                raise ValueError("tree decode requires lengths and starts")
+            C, R = T, branch_stride
+            idx = lengths.astype(jnp.int32)               # (B,) logical pos
+            st = starts.astype(jnp.int32)                 # (B,) branch base
+            b_idx = jnp.arange(C, dtype=jnp.int32)[None, :]       # (1, C)
+            b_off = b_idx * R
+            widx = st[:, None] + b_off + (idx - st)[:, None]      # (B, C)
+            # DROPPED writes (redirect to S, like the single-token path):
+            # inactive rows (idx == 0: freed or mid-chunk prefill) and
+            # dummy branches past a row's real count — a row whose width
+            # later shrinks back to the span-blind single-token decode
+            # must never have populated its unused spans
+            live = (idx > 0)[:, None]
+            if branch_counts is not None:
+                live &= b_idx < branch_counts.astype(jnp.int32)[:, None]
+            widx = jnp.where(live, widx, S)
+            rows = jnp.arange(B)[:, None]
+            ck = cache["k"].at[rows, widx].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[rows, widx].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            cpos = cache["pos"].at[rows, widx].set(
+                jnp.broadcast_to(idx[:, None], (B, C)), mode="drop")
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+            ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+            cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+            if ck.dtype != q.dtype:
+                ck = ck.astype(q.dtype)
+                cv = cv.astype(q.dtype)
+            G = H // K
+            qh = q.reshape(B, C, K, G, hd)
+            scores = _gqa_scores(qh, ck, spec.scale)      # (B,K,G,C,S)
+            phys = jnp.arange(S, dtype=jnp.int32)[None, None, :]  # (1,1,S)
+            own_lo = (st[:, None] + b_off)[..., None]     # (B, C, 1)
+            shared = phys < st[:, None, None]             # (B, 1, S)
+            own = (phys >= own_lo) & (phys < own_lo + R)  # (B, C, S)
+            valid = (cpos[:, None, :] >= 0) \
+                & (cpos[:, None, :] <= idx[:, None, None]) \
+                & (shared | own)                          # (B, C, S)
+            probs = _masked_softmax(scores, valid[:, None, None])
+            out = _gqa_combine(probs, cv).reshape(B, C, H * hd)
+        elif per_slot:
             # length-masked decode: each slot holds its own sequence; the
             # new token lands at that row's absolute index ``lengths[i]``.
             # Rows passed index 0 are inactive (every real row holds at

@@ -50,13 +50,18 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
             cache_index: Optional[jax.Array] = None,
             fill_cache: bool = False,
             lengths: Optional[jax.Array] = None,
-            starts: Optional[jax.Array] = None):
+            starts: Optional[jax.Array] = None,
+            branch_stride: Optional[int] = None,
+            branch_counts: Optional[jax.Array] = None):
     """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM)."""
     if cache is not None and not fill_cache:
-        # decode: single new token, profile already in the cache
+        # decode: new token(s), profile already in the cache; with
+        # ``branch_stride`` the T axis is C candidate branches (tree decode)
         return tfm.forward(params["backbone"], batch["tokens"],
                            cfg.transformer, cache=cache,
-                           cache_index=cache_index, lengths=lengths)
+                           cache_index=cache_index, lengths=lengths,
+                           starts=starts, branch_stride=branch_stride,
+                           branch_counts=branch_counts)
     if starts is not None and fill_cache:
         # resume prefill: suffix tokens only — the profile token (and the
         # cached history prefix) already occupy positions 0 .. starts[i]-1
@@ -98,11 +103,15 @@ def init_cache(cfg: OneRecConfig, batch: int, dtype=jnp.bfloat16) -> dict:
 
 
 def init_slot_cache(cfg: OneRecConfig, n_slots: int,
-                    dtype=jnp.bfloat16) -> dict:
+                    dtype=jnp.bfloat16, extra_len: int = 0) -> dict:
     """Slot-pool KV cache: ``n_slots`` independent per-request rows, each
-    with its own position occupancy (ragged decode depths)."""
+    with its own position occupancy (ragged decode depths).  ``extra_len``
+    reserves additional physical positions per row — the multi-candidate
+    executor passes ``(max_candidates - 1) * (decode_len - 1)`` so every
+    branch's own tokens fit past the shared prefix (tree decode)."""
     return tfm.init_kv_cache(cfg.transformer, n_slots,
-                             cfg.context_len + 1, dtype, per_slot=True)
+                             cfg.context_len + 1 + extra_len, dtype,
+                             per_slot=True)
 
 
 def prefill(params, batch, cfg: OneRecConfig, cache: dict):
@@ -154,9 +163,26 @@ def prefill_into_slots(params, batch, cfg: OneRecConfig, cache: dict,
 
 
 def decode_step_slots(params, tokens, cfg: OneRecConfig, cache: dict,
-                      lengths: jax.Array):
+                      lengths: jax.Array,
+                      starts: Optional[jax.Array] = None,
+                      branch_stride: Optional[int] = None,
+                      branch_counts: Optional[jax.Array] = None):
     """Per-slot decode: tokens (B, 1), each row at its OWN absolute index
-    ``lengths[i]`` (= number of positions already in that slot)."""
+    ``lengths[i]`` (= number of positions already in that slot).
+
+    With ``starts`` (B,) and a ``branch_stride``, TREE decode: ``tokens``
+    (B, C) carry C candidate branches per row, all at logical depth
+    ``lengths[i]``; branch b's K/V lands in its reserved span at
+    ``starts[i] + b * branch_stride`` and attends over (shared prefix) +
+    (own branch) only; ``branch_counts`` (B,) drops dummy-branch writes
+    past each row's real width.  Returns per-branch logits (B, C, V)."""
+    if starts is not None and branch_stride is not None:
+        logits, new_cache = forward(
+            params, {"tokens": tokens}, cfg, cache=cache,
+            lengths=lengths.astype(jnp.int32),
+            starts=starts.astype(jnp.int32), branch_stride=branch_stride,
+            branch_counts=branch_counts)
+        return logits, new_cache
     logits, new_cache = forward(params, {"tokens": tokens}, cfg, cache=cache,
                                 lengths=lengths.astype(jnp.int32))
     return logits[:, -1], new_cache

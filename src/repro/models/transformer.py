@@ -151,13 +151,15 @@ def init_transformer(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
 
 def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
                  kind: LayerKind, positions, cache_lp, cache_index,
-                 fill_cache: bool, lengths=None, starts=None):
+                 fill_cache: bool, lengths=None, starts=None,
+                 branch_stride=None, branch_counts=None):
     h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
                       zero_centered=cfg.zero_centered_norm)
     attn_out, new_cache = apply_attention(
         lp["attn"], h, attn_spec_for(cfg, kind), positions=positions,
         cache=cache_lp, cache_index=cache_index, fill_cache=fill_cache,
-        lengths=lengths, starts=starts, norm_eps=cfg.norm_eps)
+        lengths=lengths, starts=starts, branch_stride=branch_stride,
+        branch_counts=branch_counts, norm_eps=cfg.norm_eps)
     if cfg.use_post_norm:
         attn_out = rmsnorm_apply(lp["post_attn_norm"], attn_out,
                                  eps=cfg.norm_eps,
@@ -182,7 +184,7 @@ def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
 def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
                  spec: StackSpec, positions, cache_stack, cache_index,
                  fill_cache: bool, unroll: bool = False, lengths=None,
-                 starts=None):
+                 starts=None, branch_stride=None, branch_counts=None):
     """scan over the stacked periods of one homogeneous stack."""
 
     def body(carry, xs):
@@ -194,7 +196,7 @@ def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
             c_lp = cache_all.get(key) if cache_all else None
             h, nc = _apply_layer(lp_all[key], h, cfg, kind, positions,
                                  c_lp, cache_index, fill_cache, lengths,
-                                 starts)
+                                 starts, branch_stride, branch_counts)
             # layer-boundary residual sharding: no-op under the base rules;
             # under TRAIN_RULES_SP this seq-shards the saved activations
             h = constrain(h, ("batch", "act_seq", "embed"))
@@ -253,6 +255,8 @@ def forward(
     unroll_layers: bool = False,
     lengths: Optional[jax.Array] = None,
     starts: Optional[jax.Array] = None,
+    branch_stride: Optional[int] = None,
+    branch_counts: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """tokens (B, T) -> (logits (B, T, V) f32, new_cache).
 
@@ -261,7 +265,12 @@ def forward(
     absolute write indices on decode.  ``starts`` (B,) with
     ``fill_cache=True`` engages RESUME prefill: ``tokens`` are each row's
     suffix only, written at absolute positions ``starts[i] + j`` while
-    attending over the K/V already stored in that row's cache.
+    attending over the K/V already stored in that row's cache.  ``starts``
+    with ``fill_cache=False`` and a ``branch_stride`` engages TREE decode:
+    ``tokens`` (B, C) are C candidate-branch tokens per row, all at logical
+    depth ``lengths[i]``, sharing the row's prefix K/V under a tree mask
+    (see ``layers.attention.apply_attention``); ``branch_counts`` (B,)
+    drops the writes of dummy branches past each row's real width.
     """
     if inputs_embeds is not None:
         x = constrain(inputs_embeds.astype(compute_dtype),
@@ -289,7 +298,8 @@ def forward(
         x, nc = _apply_stack(params["stacks"][key], x, cfg, spec, positions,
                              c_stack, cache_index, fill_cache,
                              unroll=unroll_layers, lengths=lengths,
-                             starts=starts)
+                             starts=starts, branch_stride=branch_stride,
+                             branch_counts=branch_counts)
         if new_cache is not None:
             new_cache["stacks"][key] = nc
     x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,

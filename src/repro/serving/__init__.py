@@ -45,12 +45,18 @@ repeat traffic short-circuits prefill through the prefix store:
 * ``executor.py`` — the jitted prefill/resume/decode/select and
   pool<->arena copy programs with donated cache buffers; FP8-or-BF16 is a
   parameter-tree swap (§4.1 policy), so the A/B is a one-flag switch.
+  ``decode_multi`` is the MULTI-CANDIDATE tree-decode program: one fused
+  dispatch advances all K candidate branches of every slot against the
+  slot's shared prefix K/V (branch-axis cache layout + tree mask in
+  ``layers.attention`` — no K/V duplication, no row copies).
 * ``engine.py`` — the ``ServingEngine``: the OPEN-SYSTEM request
   lifecycle API (``submit -> RequestHandle`` with bounded-queue
   backpressure, ``step``, ``handle.poll/result/cancel``, ``drain``,
   windowed ``stats``); the seed-compatible closed-batch
   ``serve_requests`` / ``generate_batch`` are thin shims over it, and
-  ``run_open_loop`` drives wall-clock arrival submission.
+  ``run_open_loop`` drives wall-clock arrival submission.  A request
+  carrying ``"n_candidates": K`` retires with the RANKED candidate set
+  (``Completion.items`` / ``scores``) decoded by the tree program.
 * ``requests.py`` — shared request-dict construction (``make_request``,
   ``requests_from_arrays``, the synthetic ``build_requests`` workload).
 

@@ -64,11 +64,15 @@ class EngineConfig:
     topk: int = 8
     use_radix_topk: bool = False   # Pallas kernel (TPU); lax.top_k otherwise
     greedy: bool = True
-    seed: int = 0
     mode: str = "continuous"       # "continuous" | "fixed"
     n_slots: int = 0               # KV-slot pool size; 0 => batch_size
     prefill_bucket_min: int = 16   # smallest ragged-prefill length bucket
     max_prefill_groups: int = 2    # bucket programs per continuous join round
+    # -- multi-candidate tree decode (continuous mode only) --
+    max_candidates: int = 1        # branch capacity: every slot row reserves
+    #                                (max_candidates - 1) * (decode_len - 1)
+    #                                extra cache positions; requests carry
+    #                                "n_candidates" <= this (and <= topk)
     # -- open-system admission --
     max_queue: int = 0             # admission-queue bound; 0 = unbounded
     #                                (submit raises AdmissionFull when full)
@@ -168,6 +172,18 @@ class ServingEngine:
                 or engine_cfg.hold_k or engine_cfg.hold_ms):
             raise ValueError("prefill_chunk / preemption / hold windows "
                              "require continuous mode")
+        if engine_cfg.max_candidates < 1:
+            raise ValueError(f"max_candidates must be >= 1, got "
+                             f"{engine_cfg.max_candidates}")
+        if engine_cfg.max_candidates > 1 and engine_cfg.mode != "continuous":
+            raise ValueError("multi-candidate decode requires continuous "
+                             "mode (fixed mode is the seed-compat "
+                             "single-item reference)")
+        if engine_cfg.max_candidates > engine_cfg.topk:
+            raise ValueError(
+                f"max_candidates ({engine_cfg.max_candidates}) exceeds "
+                f"topk ({engine_cfg.topk}): branch seeds are drawn from "
+                f"the top-k select program")
         if engine_cfg.max_queue and engine_cfg.hold_k > engine_cfg.max_queue:
             raise ValueError(
                 f"hold_k ({engine_cfg.hold_k}) must not exceed max_queue "
@@ -183,7 +199,8 @@ class ServingEngine:
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
             prefill_bucket_min=engine_cfg.prefill_bucket_min,
-            prefix_rows=prefix_rows)
+            prefix_rows=prefix_rows,
+            n_candidates=engine_cfg.max_candidates)
         # the store PERSISTS across stats windows (repeat traffic spans
         # them); its hit/miss window resets with the engine's
         self.prefix_store = PrefixStore(
@@ -228,12 +245,30 @@ class ServingEngine:
                 f"exceeds the model's context ({max_hist} = "
                 f"history_len x n_codebooks); truncate upstream")
 
+    def _check_candidates(self, request: Dict) -> Tuple[int, Optional[int]]:
+        n_cand = int(request.get("n_candidates", 1))
+        if not 1 <= n_cand <= self.ecfg.max_candidates:
+            raise ValueError(
+                f"n_candidates {n_cand} outside [1, "
+                f"{self.ecfg.max_candidates}] (EngineConfig.max_candidates "
+                f"sizes the branch regions of every cache row up front)")
+        first = request.get("first_token")
+        if first is not None and n_cand != 1:
+            raise ValueError("first_token (forced seed) requires "
+                             "n_candidates == 1")
+        if first is not None and self.ecfg.mode != "continuous":
+            raise ValueError("first_token requires continuous mode (the "
+                             "fixed scheduler never forces seeds)")
+        return n_cand, (int(first) if first is not None else None)
+
     def submit(self, request: Dict,
                base_s: Optional[float] = None) -> RequestHandle:
         """Admit one request dict (ragged "tokens" + "profile", optional
         "arrival_s" / "deadline_s" offsets from ``base_s`` — default NOW —
-        and an int "priority" class, lower = more important) into the
-        scheduler queue.
+        an int "priority" class (lower = more important), and
+        "n_candidates" (decode a ranked set of K candidate items via tree
+        decode; ``Completion.items``/``scores``)) into the scheduler
+        queue.
 
         Non-blocking: returns a ``RequestHandle`` immediately; the request
         makes progress only through ``step()`` / ``drain()`` /
@@ -248,6 +283,7 @@ class ServingEngine:
         """
         tokens = np.asarray(request["tokens"], np.int32)
         self._check_history("<submit>", len(tokens))
+        n_candidates, first_token = self._check_candidates(request)
         if self.ecfg.max_queue \
                 and self._sched.queue_depth >= self.ecfg.max_queue:
             raise AdmissionFull(
@@ -260,7 +296,8 @@ class ServingEngine:
             arrival_s=base + float(request.get("arrival_s", 0.0)),
             priority=int(request.get("priority", 0)),
             deadline_s=base + float(request["deadline_s"])
-            if request.get("deadline_s") is not None else None)
+            if request.get("deadline_s") is not None else None,
+            n_candidates=n_candidates, first_token=first_token)
         self._sched.enqueue(r)
         handle = RequestHandle(self, r)
         self._handles[r.rid] = handle
@@ -358,6 +395,14 @@ class ServingEngine:
             "n_slots": float(self.n_slots),
             "decode_steps": float(counters["decode_steps"]),
             "prefill_calls": float(counters["prefill_calls"]),
+            # multi-candidate tree decode: fused-program dispatches, real
+            # branches advanced, and the amortization ratio (branches each
+            # decode dispatch served; 1.0 = single-candidate traffic)
+            "decode_multi_steps": float(counters["decode_multi_steps"]),
+            "branch_tokens": float(counters["branch_tokens"]),
+            "branches_per_decode_step":
+                counters["branch_tokens"] / counters["decode_steps"]
+                if counters["decode_steps"] else 0.0,
             "mode": self.ecfg.mode,
             # open-system lifecycle accounting ("rejected" = requests SHED
             # on AdmissionFull, not retried-then-served submissions)

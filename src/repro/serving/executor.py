@@ -9,7 +9,13 @@ Core programs, mirroring the paper's one-graph-per-phase design (§5.2):
     (Bp, T-bucket) shape; bucketing keeps the compile count small.
   * ``decode`` — one token for every slot in the pool at its own absolute
     index (length-masked attention), donated cache in / cache out.
+  * ``decode_multi`` — the multi-candidate TREE-decode step: (N, C) branch
+    tokens, C candidate branches per slot, one fused program; every branch
+    attends the slot's shared prefix K/V in place plus its own reserved
+    branch span (``n_candidates`` sizes the spans at cache init).
   * ``select`` — top-k over the logits (RadixTopK kernel or ``lax.top_k``).
+  * ``select_scored`` — top-k + log-partition, so branch scores (log-probs)
+    cost no extra program.
   * ``free_slots`` — one vectorized pos-clear over a batch of retired slots
     (one dispatch per engine step, not one per request).
 
@@ -65,21 +71,39 @@ class PhaseExecutor:
                  use_fp8: bool = True, topk: int = 8,
                  use_radix_topk: bool = False,
                  prefill_bucket_min: int = 16,
-                 prefix_rows: int = 0):
+                 prefix_rows: int = 0,
+                 n_candidates: int = 1):
+        if n_candidates < 1:
+            raise ValueError(f"n_candidates must be >= 1, got {n_candidates}")
+        if n_candidates > topk:
+            raise ValueError(
+                f"n_candidates ({n_candidates}) exceeds topk ({topk}): "
+                f"branch seeds come from the top-k select program")
         self.cfg = cfg
         self.n_slots = n_slots
         self.topk = topk
         self.prefill_bucket_min = prefill_bucket_min
         self.prefix_rows = prefix_rows
+        self.n_candidates = n_candidates
+        # tree decode: branch b's own tokens occupy a reserved span of
+        # branch_stride = decode_len - 1 physical positions past the shared
+        # prefix, so C branches need (C - 1) * stride rows beyond the
+        # single-candidate cache length
+        self.branch_stride = max(cfg.decode_len - 1, 0)
+        extra = (n_candidates - 1) * self.branch_stride
         policy = PAPER_POLICY if use_fp8 else BASELINE_POLICY
         self.params = quantize_params(params, policy)
-        self.cache = onerec_model.init_slot_cache(cfg, n_slots)
+        self.cache = onerec_model.init_slot_cache(cfg, n_slots,
+                                                  extra_len=extra)
         # tier-2 arena: prefix-store rows, same per-row layout as the pool
-        self.arena = (onerec_model.init_slot_cache(cfg, prefix_rows)
+        self.arena = (onerec_model.init_slot_cache(cfg, prefix_rows,
+                                                   extra_len=extra)
                       if prefix_rows > 0 else None)
         self.counters: Dict[str, int] = {"prefill_calls": 0,
                                          "resume_calls": 0,
                                          "decode_steps": 0,
+                                         "decode_multi_steps": 0,
+                                         "branch_tokens": 0,
                                          "prefill_padded_rows": 0,
                                          "prefill_tokens_batched": 0,
                                          "prefill_tokens_real": 0}
@@ -98,7 +122,9 @@ class PhaseExecutor:
 
         @partial(jax.jit, donate_argnums=(1,))
         def prefill_insert_fn(params, pool, tokens, profile, lengths, slots):
-            fresh = onerec_model.init_slot_cache(cfg, tokens.shape[0])
+            # fresh rows share the pool's layout, branch regions included
+            fresh = onerec_model.init_slot_cache(cfg, tokens.shape[0],
+                                                 extra_len=extra)
             last, filled = onerec_model.prefill_into_slots(
                 params, {"tokens": tokens, "profile": profile}, cfg, fresh,
                 lengths)
@@ -115,9 +141,29 @@ class PhaseExecutor:
             return onerec_model.decode_step_slots(params, tokens, cfg, pool,
                                                   lengths)
 
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_multi_fn(params, pool, tokens, lengths, starts, counts):
+            # tree decode: ONE program advances every branch of every slot
+            # (tokens (N, C)); compiles once per branch width C.  ``counts``
+            # drops dummy-branch writes past each row's real width — a row
+            # that later decodes at width 1 (span-blind mask) must never
+            # have populated its unused spans
+            return onerec_model.decode_step_slots(
+                params, tokens, cfg, pool, lengths, starts=starts,
+                branch_stride=self.branch_stride, branch_counts=counts)
+
         @jax.jit
         def select_fn(logits):
             return topk_fn(logits, topk)
+
+        @jax.jit
+        def select_scored_fn(logits):
+            # top-k + the log-partition, so the host can turn any selected
+            # logit into a log-prob (branch scores) without a second pass
+            vals, ids = topk_fn(logits, topk)
+            lse = jax.scipy.special.logsumexp(
+                logits.astype(jnp.float32), axis=-1)
+            return vals, ids, lse
 
         @partial(jax.jit, donate_argnums=(0,))
         def clear_slots_fn(pool, slots):
@@ -178,7 +224,9 @@ class PhaseExecutor:
 
         self._prefill_insert = prefill_insert_fn
         self._decode = decode_fn
+        self._decode_multi = decode_multi_fn
         self._select = select_fn
+        self._select_scored = select_scored_fn
         self._clear_slots = clear_slots_fn
         self._resume_prefill = resume_prefill_fn
         self._prefix_copy_insert = prefix_copy_insert_fn
@@ -310,10 +358,56 @@ class PhaseExecutor:
         self.counters["decode_steps"] += 1
         return logits
 
+    def decode_multi(self, tokens: np.ndarray, lengths: np.ndarray,
+                     starts: np.ndarray, counts: np.ndarray) -> jax.Array:
+        """One TREE-decode step over the whole pool: tokens (N, C) carry C
+        candidate branches per slot, all at that slot's logical depth
+        ``lengths``; ``starts`` is each slot's branch-region base (= its
+        prefix occupancy) and ``counts`` each slot's REAL branch width —
+        writes of dummy branches (b >= counts[i], rows padded up to the
+        program width) are dropped so unused spans stay empty.  Branch b
+        of row i writes its K/V into the row's reserved span at
+        ``starts[i] + b * branch_stride`` and attends over (shared
+        prefix) + (own branch) — no prefix K/V is duplicated.  Inactive
+        rows pass index 0 exactly as in ``decode``.  Returns per-branch
+        logits (N, C, V)."""
+        C = tokens.shape[1]
+        if C > self.n_candidates:
+            raise ValueError(f"{C} branches exceed the executor's "
+                             f"n_candidates capacity ({self.n_candidates})")
+        logits, self.cache = self._decode_multi(
+            self.params, self.cache, jnp.asarray(tokens, np.int32),
+            jnp.asarray(lengths, np.int32), jnp.asarray(starts, np.int32),
+            jnp.asarray(counts, np.int32))
+        logits.block_until_ready()
+        self.counters["decode_steps"] += 1
+        self.counters["decode_multi_steps"] += 1
+        self.counters["branch_tokens"] += int(np.sum(counts))
+        return logits
+
     def select(self, logits) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k over logits; returns host (vals, ids)."""
         vals, ids = self._select(logits)
         return np.asarray(vals), np.asarray(ids)
+
+    def select_scored(self, logits
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Top-k + log-partition over the last axis; returns host
+        (vals, ids, logsumexp).  ``vals[..., j] - logsumexp[...]`` is the
+        log-prob of candidate j — the branch-score currency of
+        multi-candidate decode.  Accepts (N, V) or (N, C, V) logits (the
+        branch axis is flattened for the kernel and restored)."""
+        shape = logits.shape
+        if len(shape) > 2:
+            logits = logits.reshape((-1, shape[-1]))
+        vals, ids, lse = self._select_scored(logits)
+        vals, ids = np.asarray(vals), np.asarray(ids)
+        lse = np.asarray(lse)
+        if len(shape) > 2:
+            vals = vals.reshape(shape[:-1] + (self.topk,))
+            ids = ids.reshape(shape[:-1] + (self.topk,))
+            lse = lse.reshape(shape[:-1])
+        return vals, ids, lse
 
     def free_slots(self, slots: List[int]) -> None:
         """Wipe a batch of retired slots' position occupancy in ONE pos-only

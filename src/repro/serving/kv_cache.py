@@ -37,6 +37,15 @@ import numpy as np
 class SlotState:
     """One occupied slot: the request it serves and its decode progress.
 
+    Decode progress is per CANDIDATE BRANCH (multi-candidate tree decode;
+    single-candidate requests are the ``n_candidates = 1`` special case):
+    ``branches[b]`` holds branch b's generated tokens (the seed token
+    first), ``scores[b]`` its cumulative log-prob, and ``branch_base`` the
+    logical position the branches fork at (= the prefix occupancy when the
+    seeds were drawn; -1 until the prefill completes and seeds the slot).
+    ``length`` stays the SHARED logical depth — all branches of a slot
+    decode in lock-step, one position per engine round.
+
     ``priority`` / ``deadline_s`` mirror the request's SLA class so the
     scheduler's preemption victim selection and deadline accounting read
     pool state only (no back-pointer into the queue).  ``deadline_s`` is an
@@ -45,11 +54,23 @@ class SlotState:
 
     request_id: int
     length: int                 # positions in the cache (profile + history + generated)
-    generated: List[int] = dataclasses.field(default_factory=list)
-    last_token: int = -1        # next decode-step input
+    n_candidates: int = 1
+    branches: List[List[int]] = dataclasses.field(default_factory=list)
+    scores: List[float] = dataclasses.field(default_factory=list)
+    branch_base: int = -1       # logical fork position; -1 = not seeded yet
     arrival_s: float = 0.0
     priority: int = 0           # SLA class: lower = more important
     deadline_s: Optional[float] = None
+
+    @property
+    def generated(self) -> List[int]:
+        """Branch-0 view (single-candidate compatibility)."""
+        return self.branches[0] if self.branches else []
+
+    @property
+    def last_tokens(self) -> List[int]:
+        """Next decode-step input per branch."""
+        return [b[-1] for b in self.branches]
 
 
 class SlotPool:

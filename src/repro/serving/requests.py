@@ -21,9 +21,17 @@ import numpy as np
 
 def make_request(tokens: np.ndarray, profile: np.ndarray, *,
                  arrival_s: float = 0.0, priority: int = 0,
-                 deadline_s: Optional[float] = None) -> Dict:
+                 deadline_s: Optional[float] = None,
+                 n_candidates: int = 1,
+                 first_token: Optional[int] = None) -> Dict:
     """One serving-request dict; optional fields are omitted when unset so
-    the dicts stay minimal (and JSON-friendly for trace replay)."""
+    the dicts stay minimal (and JSON-friendly for trace replay).
+
+    ``n_candidates > 1`` asks for a ranked set of K candidate items per
+    request (tree decode; ``Completion.items`` / ``scores``).
+    ``first_token`` forces the seed token of a single-candidate decode —
+    the constrained-decode hook the differential test harness uses to
+    replay one tree branch as an independent sequential request."""
     req: Dict = {"tokens": np.asarray(tokens, np.int32),
                  "profile": np.asarray(profile, np.float32)}
     if arrival_s:
@@ -32,6 +40,10 @@ def make_request(tokens: np.ndarray, profile: np.ndarray, *,
         req["priority"] = int(priority)
     if deadline_s is not None:
         req["deadline_s"] = float(deadline_s)
+    if n_candidates != 1:
+        req["n_candidates"] = int(n_candidates)
+    if first_token is not None:
+        req["first_token"] = int(first_token)
     return req
 
 
@@ -47,11 +59,14 @@ def requests_from_arrays(tokens: np.ndarray,
 
 
 def build_requests(cfg, n_requests: int, batch: int, seed: int,
-                   ragged: bool) -> List[Dict]:
+                   ragged: bool, n_candidates: int = 1) -> List[Dict]:
     """Synthesize ``n_requests`` requests from the OneRec semantic-ID
     stream (the launcher/example/benchmark workload generator).  With
     ``ragged`` each history is truncated to a random item count, the
-    mixed-length regime continuous batching targets."""
+    mixed-length regime continuous batching targets.  ``seed`` pins the
+    whole stream (content AND lengths) — every workload here is
+    reproducible run-to-run from its seed.  ``n_candidates`` stamps a
+    per-request candidate-set size (tree decode)."""
     from repro.data.onerec_data import OneRecStreamConfig, SemanticIDStream
 
     stream = SemanticIDStream(OneRecStreamConfig(
@@ -67,6 +82,7 @@ def build_requests(cfg, n_requests: int, batch: int, seed: int,
             if ragged:  # mixed history lengths: truncate to a random prefix
                 n_items = int(rng.integers(2, cfg.history_len + 1))
                 tokens = tokens[:n_items * cfg.n_codebooks]
-            requests.append(make_request(tokens, r["profile"][i]))
+            requests.append(make_request(tokens, r["profile"][i],
+                                         n_candidates=n_candidates))
         step += 1
     return requests[:n_requests]

@@ -57,6 +57,19 @@ active request regardless of its depth.
     decode is deterministic, so outputs are token-identical — see
     ``tests/test_scheduling.py``).
 
+**Multi-candidate decode** (``Request.n_candidates = K``): after prefill
+a slot forks into K branches seeded by the top-K next-token logits; every
+decode round then advances ALL branches of ALL decoding slots in one
+fused tree-attention program (``executor.decode_multi``) over the slots'
+shared prefix K/V.  Branches score by cumulative log-prob and the
+retirement emits one ``Completion`` whose ``items`` are the K generated
+items ranked by score (``item`` stays the top-ranked one).  Branch state
+lives on ``SlotState.branches``/``scores``; single-candidate requests are
+the K=1 special case and keep the original decode program byte-for-byte.
+``Request.first_token`` forces the seed of a K=1 decode — the hook the
+differential harness (``tests/test_multi_candidate.py``) uses to replay
+one tree branch as an independent sequential request.
+
 ``FixedBatchScheduler`` reproduces the seed engine's semantics (the paper's
 batch-32 measurement mode): requests are chunked into fixed-size batches,
 the tail batch is padded, and the whole batch decodes in lock-step until its
@@ -112,6 +125,11 @@ class Request:
     arrival_s: float = 0.0      # absolute perf_counter timestamp
     priority: int = 0           # SLA class: lower = more important
     deadline_s: Optional[float] = None  # absolute deadline; None = no SLA
+    n_candidates: int = 1       # candidate items decoded per request (the
+    #                             top-K branches of one tree-decode slot)
+    first_token: Optional[int] = None   # force the seed token (constrained
+    #                             decode / the differential-test reference;
+    #                             requires n_candidates == 1)
     # memoized prefix-digest chain (content is immutable, the scheduler
     # re-plans every round — hash once, not once per round)
     chain: Optional[List[Tuple[int, str]]] = None
@@ -120,11 +138,17 @@ class Request:
 @dataclasses.dataclass
 class Completion:
     rid: int
-    item: np.ndarray            # (decode_len,) generated semantic-ID codes
+    item: np.ndarray            # (decode_len,) top-ranked generated item
     latency_s: float
     priority: int = 0
     deadline_s: Optional[float] = None
     deadline_missed: bool = False
+    # multi-candidate results: every decoded branch, ranked by cumulative
+    # log-prob (items[0] is `item`); `scores` aligns with `items`.  Fixed
+    # mode (the seed-compat reference path) reports the single item
+    # unscored.
+    items: List[np.ndarray] = dataclasses.field(default_factory=list)
+    scores: List[float] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -331,27 +355,57 @@ class ContinuousScheduler:
         """Slots whose prefill is complete (mid-chunk slots don't decode)."""
         return [s for s in self.pool.used_slots() if s not in self._pending]
 
-    def _record(self, slot: int, token: int, done: List[Completion],
-                freed: List[int]) -> None:
+    def _seed_slot(self, slot: int, r: Request, ids_row: np.ndarray,
+                   vals_row: np.ndarray, lse: float, done: List[Completion],
+                   freed: List[int]) -> None:
+        """Fork a freshly prefilled slot into its candidate branches: the
+        top-``n_candidates`` tokens of the prefill logits seed one branch
+        each, scored by their log-prob.  A forced ``first_token`` (the
+        sequential differential reference) seeds the single branch with
+        that token instead (its score is looked up among the top-k when
+        present, else 0 — forcing is a harness hook, not a ranked path)."""
         state = self.pool[slot]
-        state.generated.append(int(token))
-        state.last_token = int(token)
-        if len(state.generated) >= self.decode_len:
-            final = self.pool.free(slot)
-            freed.append(slot)
-            self._slot_request.pop(slot, None)
-            entry = self._slot_entry.pop(slot, None)
-            if entry is not None:       # unpin the prefix backing this slot
-                self.store.release(entry)
-            finish = time.perf_counter()
-            done.append(Completion(
-                rid=final.request_id,
-                item=np.asarray(final.generated, np.int32),
-                latency_s=finish - final.arrival_s,
-                priority=final.priority,
-                deadline_s=final.deadline_s,
-                deadline_missed=final.deadline_s is not None
-                and finish > final.deadline_s))
+        if r.first_token is not None:
+            seeds = [int(r.first_token)]
+            match = np.nonzero(ids_row == r.first_token)[0]
+            lps = [float(vals_row[match[0]] - lse) if match.size else 0.0]
+        else:
+            seeds = [int(t) for t in ids_row[:r.n_candidates]]
+            lps = [float(v - lse) for v in vals_row[:r.n_candidates]]
+        state.n_candidates = len(seeds)
+        state.branch_base = state.length
+        state.branches = [[s] for s in seeds]
+        state.scores = lps
+        self._maybe_retire(slot, done, freed)     # decode_len == 1 corner
+
+    def _maybe_retire(self, slot: int, done: List[Completion],
+                      freed: List[int]) -> None:
+        """Retire ``slot`` once every branch holds a full item: rank the
+        branches by cumulative log-prob (ties keep seed rank — stable) and
+        emit one Completion carrying the whole ranked candidate set."""
+        state = self.pool[slot]
+        if len(state.branches[0]) < self.decode_len:
+            return
+        final = self.pool.free(slot)
+        freed.append(slot)
+        self._slot_request.pop(slot, None)
+        entry = self._slot_entry.pop(slot, None)
+        if entry is not None:           # unpin the prefix backing this slot
+            self.store.release(entry)
+        finish = time.perf_counter()
+        order = sorted(range(final.n_candidates),
+                       key=lambda b: (-final.scores[b], b))
+        items = [np.asarray(final.branches[b], np.int32) for b in order]
+        done.append(Completion(
+            rid=final.request_id,
+            item=items[0],
+            items=items,
+            scores=[final.scores[b] for b in order],
+            latency_s=finish - final.arrival_s,
+            priority=final.priority,
+            deadline_s=final.deadline_s,
+            deadline_missed=final.deadline_s is not None
+            and finish > final.deadline_s))
 
     def _plan(self, r: Request) -> Optional[Tuple[PrefixEntry, int]]:
         """Longest usable cached prefix for ``r`` as ``(entry, n_tokens)``
@@ -508,7 +562,7 @@ class ContinuousScheduler:
             segments = [self._pending[s].left[:chunk] for s in slots]
             starts = [self._pending[s].next_start for s in slots]
             logits = self.executor.resume_prefill(segments, slots, starts)
-            finished: List[Tuple[int, int]] = []   # (group row, slot)
+            finished: List[Tuple[int, int, Request]] = []  # (row, slot, r)
             for i, slot in enumerate(slots):
                 p = self._pending[slot]
                 p.left = p.left[chunk:]
@@ -517,12 +571,13 @@ class ContinuousScheduler:
                     del self._pending[slot]
                     if self.store is not None:
                         self._offer_to_store([p.request], [slot], [p.plan])
-                    finished.append((i, slot))
+                    finished.append((i, slot, p.request))
             if finished:
-                _, ids = self.executor.select(logits)   # full-bucket shape
+                vals, ids, lse = self.executor.select_scored(logits)
                 freed: List[int] = []
-                for i, slot in finished:
-                    self._record(slot, ids[i, 0], done, freed)
+                for i, slot, r in finished:
+                    self._seed_slot(slot, r, ids[i], vals[i],
+                                    float(lse[i]), done, freed)
                 self.executor.free_slots(freed)
 
     # -- admission ------------------------------------------------------------
@@ -593,6 +648,7 @@ class ContinuousScheduler:
             for r in group:
                 slot = self.pool.alloc(SlotState(
                     request_id=r.rid, length=len(r.tokens) + 1,  # + profile
+                    n_candidates=r.n_candidates,
                     arrival_s=r.arrival_s, priority=r.priority,
                     deadline_s=r.deadline_s))
                 slots.append(slot)
@@ -631,32 +687,78 @@ class ContinuousScheduler:
                 self._offer_to_store([c[0] for c in complete],
                                      [c[1] for c in complete],
                                      [c[2] for c in complete])
-            _, ids = self.executor.select(logits)   # full-bucket shape
+            vals, ids, lse = self.executor.select_scored(logits)
             freed: List[int] = []
             for i, slot in enumerate(slots):
                 if slot in self._pending:
                     continue        # mid-chunk: logits are not next-token
-                self._record(slot, ids[i, 0], done, freed)
+                self._seed_slot(slot, group[i], ids[i], vals[i],
+                                float(lse[i]), done, freed)
             # clear before the NEXT group can reallocate a freed slot
             # (reachable only when decode_len == 1: prefill completes)
             self.executor.free_slots(freed)
 
     def _decode_step(self, done: List[Completion]) -> None:
-        """One length-masked decode over the decoding slots of the pool."""
+        """One length-masked decode over the decoding slots of the pool.
+
+        When any active slot carries more than one candidate branch, the
+        round runs the TREE-decode program instead: one fused dispatch
+        advances EVERY branch of EVERY slot against its slot's shared
+        prefix K/V.  The branch width compiles per power-of-two bucket;
+        slots with fewer branches ride along with dummy branches whose
+        cache writes are DROPPED (per-slot ``counts``) and whose outputs
+        are discarded — exactly the padded-row convention of the pool
+        decode, and what keeps a slot clean when it later decodes at
+        width 1 through the span-blind single-token program.
+        """
         pool = self.pool
-        tokens = np.zeros((pool.n_slots, 1), np.int32)
-        lengths = np.zeros((pool.n_slots,), np.int32)
         active = self._decoding_slots()
-        for s in active:
-            tokens[s, 0] = pool[s].last_token
-            lengths[s] = pool[s].length
-        logits = self.executor.decode(tokens, lengths)
-        _, ids = self.executor.select(logits)
+        width = max((pool[s].n_candidates for s in active), default=1)
+        n_branches = sum(pool[s].n_candidates for s in active)
         self.occupancy.append(pool.occupancy)
         freed: List[int] = []
-        for s in active:
-            pool[s].length += 1          # the input token we just wrote
-            self._record(s, ids[s, 0], done, freed)
+        if width == 1:
+            tokens = np.zeros((pool.n_slots, 1), np.int32)
+            lengths = np.zeros((pool.n_slots,), np.int32)
+            for s in active:
+                tokens[s, 0] = pool[s].branches[0][-1]
+                lengths[s] = pool[s].length
+            logits = self.executor.decode(tokens, lengths)
+            self.executor.counters["branch_tokens"] += n_branches
+            vals, ids, lse = self.executor.select_scored(logits)
+            for s in active:
+                st = pool[s]
+                st.length += 1           # the input token we just wrote
+                st.branches[0].append(int(ids[s, 0]))
+                st.scores[0] += float(vals[s, 0] - lse[s])
+                self._maybe_retire(s, done, freed)
+        else:
+            # branch width buckets to a power of two (capped at the
+            # executor's capacity) so mixed-K traffic compiles a handful
+            # of tree programs, not one per distinct K
+            C = min(bucket_length(width, 1), self.executor.n_candidates)
+            tokens = np.zeros((pool.n_slots, C), np.int32)
+            lengths = np.zeros((pool.n_slots,), np.int32)
+            starts = np.zeros((pool.n_slots,), np.int32)
+            counts = np.zeros((pool.n_slots,), np.int32)
+            for s in active:
+                st = pool[s]
+                last = st.last_tokens
+                for b in range(C):       # dummy branches repeat the last
+                    tokens[s, b] = last[min(b, st.n_candidates - 1)]
+                lengths[s] = st.length
+                starts[s] = st.branch_base
+                counts[s] = st.n_candidates
+            logits = self.executor.decode_multi(tokens, lengths, starts,
+                                                counts)
+            vals, ids, lse = self.executor.select_scored(logits)
+            for s in active:
+                st = pool[s]
+                st.length += 1
+                for b in range(st.n_candidates):
+                    st.branches[b].append(int(ids[s, b, 0]))
+                    st.scores[b] += float(vals[s, b, 0] - lse[s, b])
+                self._maybe_retire(s, done, freed)
         self.executor.free_slots(freed)  # one clear program per step
 
     # -- the step state machine ----------------------------------------------
@@ -849,8 +951,9 @@ class FixedBatchScheduler:
         finish = time.perf_counter()
         done = []
         for row, r in enumerate(b.requests):  # drop padded duplicates
+            item = np.asarray(b.gen[row], np.int32)
             done.append(Completion(
-                rid=r.rid, item=np.asarray(b.gen[row], np.int32),
+                rid=r.rid, item=item, items=[item],
                 latency_s=finish - r.arrival_s,
                 priority=r.priority, deadline_s=r.deadline_s,
                 deadline_missed=r.deadline_s is not None

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.base import OneRecConfig, TransformerConfig
 from repro.configs.registry import get_arch
 from repro.core.policy import PAPER_POLICY
 from repro.core.ptq import quantize_params
@@ -82,6 +83,82 @@ def test_onerec_generation_parity():
         index = index + 1
     overlap = float(np.mean(overlaps))
     assert overlap > 0.6, f"teacher-forced top-{K} overlap {overlap}"
+
+
+def test_multi_candidate_branch_topk_overlap():
+    """FP8 vs BF16 on the MULTI-CANDIDATE (tree decode) path,
+    teacher-forced: both precisions advance the same K branches (bf16's
+    greedy branch tokens force every step, so inputs never diverge) over
+    per-slot caches with reserved branch regions, and at every (branch,
+    step) the top-8 candidate sets must overlap strongly.  This is the
+    branch-scoring analogue of ``test_onerec_generation_parity`` — a
+    quantization regression in the tree-attention path (mask, branch
+    scatter, RoPE at the shared depth) drags the overlap toward chance
+    (8/256) and shifts the forced-token log-probs by many nats; both are
+    asserted."""
+    cfg = OneRecConfig(
+        name="onerec-mc-parity",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-mc-parity-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, PAPER_POLICY)
+    B, K, TOP = 4, 4, 8
+    R = cfg.decode_len - 1
+    T = cfg.history_len * cfg.n_codebooks
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks,
+             "profile": jax.random.normal(jax.random.PRNGKey(2),
+                                          (B, onerec_model.PROFILE_DIM))}
+    lengths = jnp.full((B,), T, jnp.int32)
+    caches = {}
+    logits = {}
+    for name, p in (("bf16", params), ("fp8", qparams)):
+        cache = onerec_model.init_slot_cache(cfg, B, extra_len=(K - 1) * R)
+        lg, cache = onerec_model.prefill_into_slots(p, batch, cfg, cache,
+                                                    lengths)
+        caches[name], logits[name] = cache, lg
+    # branch seeds from the bf16 prefill logits (teacher)
+    seeds = jax.lax.top_k(logits["bf16"], K)[1].astype(jnp.int32)  # (B, K)
+    base = lengths + 1                       # profile + history positions
+    overlaps, lp_gaps = [], []
+
+    def _stats(lg_bf, lg_q, forced):
+        """top-k overlap + forced-token log-prob gap at one step; the
+        logits are (B, K, V) branch grids (seed step: (B, V) broadcast)."""
+        lg_bf = np.asarray(lg_bf, np.float32).reshape(-1, cfg.vocab_size)
+        lg_q = np.asarray(lg_q, np.float32).reshape(-1, cfg.vocab_size)
+        forced = np.asarray(forced).reshape(-1)
+        top_bf = np.argsort(-lg_bf, -1)[:, :TOP]
+        top_q = np.argsort(-lg_q, -1)[:, :TOP]
+        overlaps.append(np.mean([len(set(a) & set(b)) / TOP
+                                 for a, b in zip(top_bf, top_q)]))
+        lp = lambda lg: lg[np.arange(len(lg)), forced] \
+            - jax.nn.logsumexp(jnp.asarray(lg), axis=-1)
+        lp_gaps.append(float(np.mean(np.abs(np.asarray(lp(lg_bf))
+                                            - np.asarray(lp(lg_q))))))
+
+    branch_toks = seeds                      # (B, K) forced on BOTH models
+    for t in range(R):
+        lg_bf, caches["bf16"] = onerec_model.decode_step_slots(
+            params, branch_toks, cfg, caches["bf16"], base + t,
+            starts=base, branch_stride=R)
+        lg_q, caches["fp8"] = onerec_model.decode_step_slots(
+            qparams, branch_toks, cfg, caches["fp8"], base + t,
+            starts=base, branch_stride=R)
+        forced = jnp.argmax(lg_bf, axis=-1).astype(jnp.int32)  # (B, K)
+        _stats(lg_bf, lg_q, forced)
+        branch_toks = forced                 # teacher-force the next step
+    overlap = float(np.mean(overlaps))
+    assert overlap > 0.6, f"teacher-forced branch top-{TOP} overlap {overlap}"
+    assert max(lp_gaps) < 1.0, \
+        f"forced-token log-prob gap {lp_gaps} (scale-path defect?)"
 
 
 def test_recsys_score_parity():

@@ -1,0 +1,291 @@
+"""Multi-candidate tree decode: the differential/property harness for the
+serving stack.
+
+Differential half: tree decode's ranked top-K candidate set must be
+TOKEN-IDENTICAL to K independent sequential decodes seeded with the same
+per-branch seed tokens (`first_token` forcing — the status-quo route to a
+candidate set), for BF16 and FP8 parameter trees, and composed with the
+tier-2 prefix cache (`resume_prefill` admission).
+
+Property half: the serving stack now has six interacting features (prefix
+cache, chunked prefill, preemption, hold windows, cancellation,
+multi-candidate).  Random interleavings of submit/step/cancel/drain with
+ALL of them enabled must never leak: slot-pool free count, prefix-store
+refcounts, and the chunked-prefill `_pending` segment map return to
+baseline after `drain()`, and the completions are exactly the
+non-cancelled submissions.
+
+All configs lift the MoE capacity bound (capacity_factor=64) so batch
+composition cannot perturb outputs — comparisons are exact
+token-for-token (see docs/serving.md on capacity-dropped MoE determinism).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.models import onerec as onerec_model
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.requests import make_request
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=8,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+K = 3        # candidate-set size under test
+SEED = 17    # the one explicit seed every workload here derives from
+
+
+def _cfg() -> OneRecConfig:
+    return OneRecConfig(
+        name="onerec-multicand-test",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-multicand-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+def _request_dicts(cfg, n, rng, n_candidates=1):
+    reqs = []
+    for _ in range(n):
+        n_items = int(rng.integers(2, cfg.history_len + 1))
+        reqs.append(make_request(
+            rng.integers(0, 192, size=n_items * cfg.n_codebooks),
+            rng.normal(size=onerec_model.PROFILE_DIM),
+            n_candidates=n_candidates))
+    return reqs
+
+
+def _collect(eng, reqs):
+    """submit + drain, returning whole Completions in input order."""
+    handles = [eng.submit(r) for r in reqs]
+    eng.drain()
+    return [h.completion for h in handles]
+
+
+@pytest.fixture(scope="module")
+def mc_setup():
+    cfg = _cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    reqs = _request_dicts(cfg, 6, np.random.default_rng(SEED),
+                          n_candidates=K)
+    return cfg, params, reqs
+
+
+@pytest.fixture(scope="module")
+def tree_results(mc_setup):
+    """Tree-decode completions per precision (engines are throwaway)."""
+    cfg, params, reqs = mc_setup
+    out = {}
+    for fp8 in (False, True):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            batch_size=4, mode="continuous", use_fp8=fp8,
+            max_candidates=K))
+        out[fp8] = _collect(eng, reqs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Differential parity: tree decode == K forced-seed sequential decodes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fp8", [False, True], ids=["bf16", "fp8"])
+def test_tree_matches_sequential(mc_setup, tree_results, fp8):
+    """Every tree branch must be token-identical to an independent
+    single-candidate decode forced to the same seed token, and the tree's
+    ranking must agree with the sequential branches' own scores."""
+    cfg, params, reqs = mc_setup
+    comps = tree_results[fp8]
+    # same max_candidates on the reference engine: cache rows share one
+    # shape, so the ONLY difference between the arms is tree vs sequential
+    seq = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", use_fp8=fp8, max_candidates=K))
+    for r, c in zip(reqs, comps):
+        assert len(c.items) == K == len(c.scores)
+        assert c.scores == sorted(c.scores, reverse=True)
+        np.testing.assert_array_equal(c.item, c.items[0])
+        seeds = [int(item[0]) for item in c.items]
+        assert len(set(seeds)) == K          # distinct top-K seed tokens
+        seq_reqs = [dict(r, n_candidates=1, first_token=s) for s in seeds]
+        seq_comps = _collect(seq, seq_reqs)
+        for item, score, sc in zip(c.items, c.scores, seq_comps):
+            np.testing.assert_array_equal(item, sc.item)
+            assert score == pytest.approx(sc.scores[0], abs=1e-5)
+
+
+def test_tree_composes_with_prefix_cache(mc_setup, tree_results):
+    """Tree decode over rows admitted through the prefix store
+    (prefix_copy_insert + resume_prefill) and chunked prefill must stay
+    token-identical to the plain tree engine — cold and warm."""
+    cfg, params, reqs = mc_setup
+    ref = tree_results[True]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", use_fp8=True, max_candidates=K,
+        prefix_cache=True, prefill_chunk=6))
+    cold = _collect(eng, reqs)               # misses, chunked prefill
+    eng.reset_window()
+    warm = _collect(eng, reqs)               # hits: row copy + resume
+    assert eng.stats()["prefix_hit_rate"] > 0.5
+    for a, b, c in zip(cold, warm, ref):
+        for x, y, z in zip(a.items, b.items, c.items):
+            np.testing.assert_array_equal(x, z)
+            np.testing.assert_array_equal(y, z)
+
+
+def test_single_candidate_unchanged_by_capacity(mc_setup):
+    """A max_candidates>1 engine serving K=1 requests is token-identical
+    to a plain single-candidate engine (the branch regions are reserved
+    but never populated — capacity must not perturb the decode)."""
+    cfg, params, reqs = mc_setup
+    singles = [dict(r, n_candidates=1) for r in reqs]
+    ref, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous")).serve_requests(singles)
+    out, stats = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous",
+        max_candidates=K)).serve_requests(singles)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert stats["decode_multi_steps"] == 0.0    # K=1 keeps the old program
+
+
+def test_mixed_candidate_widths_one_pool(mc_setup):
+    """Requests with different K share one pool and one tree program per
+    step; each completion carries exactly its own K branches, identical
+    to the homogeneous runs."""
+    cfg, params, reqs = mc_setup
+    mixed = [dict(r, n_candidates=(i % K) + 1) for i, r in enumerate(reqs)]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", max_candidates=K))
+    comps = _collect(eng, mixed)
+    for r, c in zip(mixed, comps):
+        assert len(c.items) == r["n_candidates"]
+    # the K=1 rows of the mixed run must match a pure single-candidate run
+    ref, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", max_candidates=K)).serve_requests(
+        [dict(r, n_candidates=1) for r in mixed])
+    for c, b, r in zip(comps, ref, mixed):
+        if r["n_candidates"] == 1:
+            np.testing.assert_array_equal(c.item, b)
+
+
+def test_width_transition_keeps_singles_clean(mc_setup):
+    """Regression: a K=1 slot that rode the tree program (as a narrow row
+    of a wider dispatch) must stay token-identical after the pool's width
+    drops back to 1 — dummy branches never write K/V, so the span-blind
+    single-token decode that follows sees only the row's real entries."""
+    cfg, params, reqs = mc_setup
+    single = dict(reqs[0], n_candidates=1)
+    wide = dict(reqs[1], n_candidates=K)
+    ref = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous",
+        max_candidates=K)).submit(single).result()
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, mode="continuous", max_candidates=K))
+    hb = eng.submit(wide)
+    eng.step()                  # wide slot seeds + first tree decode
+    ha = eng.submit(single)     # joins a round late: rides width K, then
+    eng.drain()                 # finishes at width 1 after `wide` retires
+    assert hb.completion is not None
+    np.testing.assert_array_equal(ha.completion.item, ref)
+
+
+def test_candidate_validation(mc_setup):
+    cfg, params, reqs = mc_setup
+    with pytest.raises(ValueError):       # capacity below request demand
+        ServingEngine(params, cfg, EngineConfig(
+            batch_size=4, mode="continuous", max_candidates=2)).submit(
+            dict(reqs[0], n_candidates=3))
+    with pytest.raises(ValueError):       # multi requires continuous mode
+        ServingEngine(params, cfg, EngineConfig(
+            mode="fixed", max_candidates=2))
+    with pytest.raises(ValueError):       # seeds come from the top-k program
+        ServingEngine(params, cfg, EngineConfig(
+            mode="continuous", topk=4, max_candidates=8))
+    with pytest.raises(ValueError):       # forcing is single-candidate only
+        ServingEngine(params, cfg, EngineConfig(
+            batch_size=4, mode="continuous", max_candidates=2)).submit(
+            dict(reqs[0], n_candidates=2, first_token=7))
+    with pytest.raises(ValueError):       # fixed mode never forces seeds
+        ServingEngine(params, cfg, EngineConfig(
+            batch_size=4, mode="fixed")).submit(
+            dict(reqs[0], n_candidates=1, first_token=7))
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle property: random interleavings never leak
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def prop_engine(mc_setup):
+    """One engine for the whole property run (a fresh engine per example
+    would recompile every program) with EVERY interacting feature on:
+    prefix cache, chunked prefill, hold windows, preemption, and
+    multi-candidate decode.  Each example drains it back to baseline."""
+    cfg, params, _ = mc_setup
+    return ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, n_slots=3, mode="continuous", max_candidates=2,
+        prefix_cache=True, prefill_chunk=6, hold_k=2, hold_ms=5.0,
+        preemption=True))
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["submit", "step", "cancel", "drain"]),
+              st.integers(0, 5),      # request index / cancel target
+              st.integers(0, 1),      # priority class (exercises preemption)
+              st.integers(1, 2)),     # n_candidates
+    max_size=12)
+
+
+@hypothesis.given(ops=_OPS)
+def test_lifecycle_interleavings_never_leak(mc_setup, prop_engine, ops):
+    """Property: any interleaving of submit/step/cancel/drain — with
+    chunked prefill, hold windows, preemption, the prefix store, and
+    mixed candidate widths all live — returns the engine to baseline:
+    no held slots, no pinned store rows, no orphaned prefill segments,
+    and completions exactly equal to the non-cancelled submissions."""
+    cfg, params, reqs = mc_setup
+    eng = prop_engine
+    handles, cancelled = [], set()
+    for op, a, prio, k in ops:
+        if op == "submit" and len(handles) < 6:
+            r = dict(reqs[a % len(reqs)], n_candidates=k, priority=prio)
+            handles.append(eng.submit(r))
+        elif op == "step":
+            eng.step()
+        elif op == "cancel" and handles:
+            h = handles[a % len(handles)]
+            if h.cancel():                # False once completed
+                cancelled.add(h.rid)
+        elif op == "drain":
+            eng.drain()
+    eng.drain()
+    sched = eng._sched
+    # slot pool back to baseline (free list re-normalized by design)
+    assert eng.pool.n_used == 0
+    assert eng.pool.n_free == eng.n_slots
+    # no orphaned chunked-prefill segments, slot->request/entry maps empty
+    assert not sched._pending
+    assert not sched._slot_request
+    assert not sched._slot_entry
+    # arena refcounts at baseline: nothing left pinned
+    assert all(e.refcount == 0
+               for e in eng.prefix_store._entries.values())
+    assert not sched.queue and not eng.busy
+    # completions are EXACTLY the non-cancelled submissions
+    done = {h.rid for h in handles if h.completion is not None}
+    assert done == {h.rid for h in handles} - cancelled
+    for h in handles:
+        if h.completion is not None:
+            assert len(h.completion.items) == h._request.n_candidates
+            assert h.completion.scores == sorted(h.completion.scores,
+                                                 reverse=True)
