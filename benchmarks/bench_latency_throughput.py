@@ -1,6 +1,6 @@
 """Paper §5.2: end-to-end serving latency + throughput.
 
-Eight measurements:
+Ten measurements:
   1. FP16(BF16) baseline vs the optimized FP8 stack on the uniform batch-32
      style workload (CPU wall-clock, reduced OneRec-V2; CPU has no fp8
      compute units so the quantization win does NOT show in wall time — the
@@ -53,7 +53,18 @@ Eight measurements:
      Same ranked candidate sets token-for-token (asserted), >= 2x fewer
      decode program dispatches at K = 4 (asserted), candidate-items/s
      reported,
-  9. the TPU-v5e projection from the dry-run artifacts: serve latency =
+  9. FP8-KV CAPACITY A/B at an EQUAL device KV-byte budget: K/V stored
+     fp8 (e4m3, per-(position, head) scales) costs ``head_dim + 4`` bytes
+     per cached position per head vs ``2 * head_dim`` in bf16, so the
+     same budget holds ~1.9x the slot rows + stored-prefix rows at the
+     production-shaped ``head_dim=64``.  Both arms serve the identical
+     Zipf repeat stream through prefix-cache engines sized to the shared
+     budget — the fp8 arm's extra arena rows stop the evictions that cap
+     the bf16 arm's hit rate (capacity ratio >= 1.8 asserted, throughput
+     gain reported) — plus a teacher-forced top-8 candidate-overlap check
+     against bf16 K/V with the same params (>= 0.6 asserted, the
+     ``tests/test_fp8_parity.py`` threshold),
+ 10. the TPU-v5e projection from the dry-run artifacts: serve latency =
      dominant roofline term of (prefill + decode_len x decode) for the FULL
      4B/0.5B model at batch 32, bf16 vs fp8 — the §5.2 analogue
      (the paper: 139 ms -> 70 ms, throughput 205 -> 394).
@@ -85,6 +96,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from benchmarks.analytic import cell_analytics  # noqa: E402
@@ -625,6 +637,134 @@ def projected_tpu(dryrun_dir="results/dryrun",
     return out
 
 
+def _kv_capacity_cfg() -> OneRecConfig:
+    """FP8-KV capacity-A/B config: same reduced family as ``_bench_cfg``
+    but a production-shaped ``head_dim=64``.  The byte win is head_dim-
+    dependent — a cached position costs ``2 * head_dim`` bytes per head
+    in bf16 vs ``head_dim + 4`` in fp8 (1-byte payload + one f32
+    per-(position, head) scale): 128 -> 68 B here (1.88x), but only
+    32 -> 20 B at the scheduler benches' head_dim 16.  MoE capacity is
+    unbounded so batch composition cannot perturb the cross-arm decode.
+    """
+    return OneRecConfig(
+        name="onerec-v2-kvbench",
+        history_len=64,
+        transformer=TransformerConfig(
+            name="onerec-v2-kvbench-backbone",
+            n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=64,
+            d_ff=256, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=128, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=256, remat=False),
+        serve_batch=8, beam_width=4)
+
+
+def _slot_row_bytes(cfg, dtype=None) -> int:
+    """Device bytes one KV row costs under ``dtype`` (all leaves — fp8
+    scale planes and the pos lane included; the arena rows share this
+    layout, so one probe prices both tiers)."""
+    cache = onerec_model.init_slot_cache(cfg, 1, dtype=dtype)
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(cache))
+
+
+def _kv_topk_overlap(cfg, params, k: int = 8, seed: int = 1):
+    """Teacher-forced top-k candidate overlap, fp8 K/V vs bf16 K/V with
+    the SAME bf16 params (the ``tests/test_fp8_parity.py`` metric): the
+    bf16 arm picks every forced token, both arms score it."""
+    B = 4
+    T = cfg.history_len * cfg.n_codebooks
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+             "profile": jax.random.normal(jax.random.fold_in(key, 1),
+                                          (B, onerec_model.PROFILE_DIM))}
+    lengths = jnp.full((B,), T, jnp.int32)
+    c_bf = onerec_model.init_slot_cache(cfg, B)
+    c_q = onerec_model.init_slot_cache(cfg, B, dtype=jnp.float8_e4m3fn)
+    lg_bf, c_bf = onerec_model.prefill_into_slots(params, batch, cfg, c_bf,
+                                                  lengths)
+    lg_q, c_q = onerec_model.prefill_into_slots(params, batch, cfg, c_q,
+                                                lengths)
+    idx = lengths + 1
+    tok = jnp.argmax(lg_bf, -1).astype(jnp.int32)[:, None]
+    V = cfg.vocab_size
+    overlaps = []
+    for t in range(cfg.decode_len):
+        lg_bf, c_bf = onerec_model.decode_step_slots(params, tok, cfg, c_bf,
+                                                     idx + t)
+        lg_q, c_q = onerec_model.decode_step_slots(params, tok, cfg, c_q,
+                                                   idx + t)
+        a = np.argsort(-np.asarray(lg_bf, np.float32).reshape(-1, V))[:, :k]
+        b = np.argsort(-np.asarray(lg_q, np.float32).reshape(-1, V))[:, :k]
+        overlaps.append(np.mean([len(set(x) & set(y)) / k
+                                 for x, y in zip(a, b)]))
+        tok = jnp.argmax(lg_bf, -1).astype(jnp.int32)[:, None]
+    return float(np.mean(overlaps))
+
+
+def measured_kv_fp8_capacity(n_requests: int = 48, batch: int = 8,
+                             n_users: int = 16, bf16_rows: int = 6,
+                             seed: int = 0):
+    """FP8-KV capacity A/B at an EQUAL device KV-byte budget.
+
+    The budget is what the bf16 arm's two tiers cost (``batch`` slot rows
+    + ``bf16_rows`` arena rows at the probed bf16 row price).  The fp8
+    arm spends the SAME bytes at the fp8 row price: the scheduler keeps
+    ``batch`` slots (same dispatch width — the comparison isolates
+    storage) and every remaining row becomes prefix-arena capacity.  On
+    Zipf repeat traffic over more users than the bf16 arena can hold,
+    the bf16 arm churns rows (evictions cap its hit rate) while the fp8
+    arm holds every user's prefix.  Capacity ratio >= 1.8 is asserted;
+    throughput/hit-rate deltas are reported; decode quality is gated by
+    the teacher-forced top-8 overlap (>= 0.6, the parity-test threshold).
+
+    CPU caveat (same as the fp8-compute A/B): the host has no fp8 units,
+    so every attention read pays an EMULATED dequant — the fp8 arm's CPU
+    wall time is overhead-dominated and its throughput ratio is NOT the
+    accelerator story.  The byte win shows in the capacity ratio, the
+    eviction count, and the hit rate, which are machine-independent.
+    """
+    cfg = _kv_capacity_cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
+    requests, share = build_repeat_traffic(cfg, n_requests, n_users, seed)
+
+    bf16_row = _slot_row_bytes(cfg)
+    fp8_row = _slot_row_bytes(cfg, jnp.float8_e4m3fn)
+    bf16_cap = batch + bf16_rows
+    budget = bf16_cap * bf16_row
+    fp8_cap = budget // fp8_row
+    fp8_rows = int(fp8_cap - batch)
+    ratio = fp8_cap / bf16_cap
+    assert ratio >= 1.8, \
+        f"fp8 K/V must hold >= 1.8x the rows per byte (got {ratio:.2f})"
+
+    out = {"n_users": n_users, "revisit_share": share, "seed": seed,
+           "kv_byte_budget": int(budget),
+           "bf16_row_bytes": int(bf16_row), "fp8_row_bytes": int(fp8_row),
+           "row_byte_ratio": bf16_row / fp8_row,
+           "bf16_capacity": int(bf16_cap), "fp8_capacity": int(fp8_cap),
+           "capacity_ratio": ratio}
+    for name, kv_dtype, rows in (("bf16_kv", "bfloat16", bf16_rows),
+                                 ("fp8_kv", "float8_e4m3fn", fp8_rows)):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, use_fp8=True, mode="continuous",
+            kv_dtype=kv_dtype, prefill_bucket_min=4,
+            prefix_cache=True, prefix_rows=rows))
+        # two warmups (the measured_prefix_repeat pattern): all-at-once
+        # compiles the join-group shapes, a spaced pass compiles the
+        # per-arrival/resume shapes and brings the store to steady state
+        eng.serve_requests([dict(r, arrival_s=0.0) for r in requests])
+        eng.serve_requests(requests)
+        _, stats = eng.serve_requests(requests)
+        out[name] = stats
+        assert int(stats["kv_bytes"]) <= budget, \
+            f"{name} arm exceeds the shared KV-byte budget"
+    out["throughput_gain"] = (out["fp8_kv"]["throughput_rps"]
+                              / out["bf16_kv"]["throughput_rps"])
+    out["topk_overlap"] = _kv_topk_overlap(cfg, params, seed=seed + 1)
+    assert out["topk_overlap"] >= 0.6, \
+        f"fp8-KV teacher-forced top-8 overlap {out['topk_overlap']:.2f}"
+    return out
+
+
 def run(only=None) -> list:
     """Run every section (or just ``only``) and write the JSON report."""
     rows = []
@@ -791,6 +931,32 @@ def run(only=None) -> list:
         rows.append(f"serve_multi/outputs_match,"
                     f"{int(mc['outputs_match'])},")
 
+    if want("kv_fp8_capacity"):
+        kv = measured_kv_fp8_capacity()
+        report["kv_fp8_capacity"] = kv
+        b, f = kv["bf16_kv"], kv["fp8_kv"]
+        print(f"[fp8-KV capacity A/B, equal {kv['kv_byte_budget']/1e6:.1f} MB"
+              f" KV budget, head_dim 64] row {kv['bf16_row_bytes']} -> "
+              f"{kv['fp8_row_bytes']} B (x{kv['row_byte_ratio']:.2f}) | "
+              f"slot+prefix rows {kv['bf16_capacity']} -> "
+              f"{kv['fp8_capacity']} (x{kv['capacity_ratio']:.2f}) | "
+              f"hit rate {b['prefix_hit_rate']:.2f} -> "
+              f"{f['prefix_hit_rate']:.2f}, evictions "
+              f"{b['prefix_evictions']:.0f} -> {f['prefix_evictions']:.0f} | "
+              f"throughput {b['throughput_rps']:.1f} -> "
+              f"{f['throughput_rps']:.1f} req/s "
+              f"(x{kv['throughput_gain']:.2f}; CPU emulates the fp8 "
+              f"dequant — the byte win, not wall time, is the signal "
+              f"here) | teacher-forced top-8 overlap "
+              f"{kv['topk_overlap']:.2f}")
+        rows.append(f"serve_kv_fp8/capacity_ratio,"
+                    f"{1000*kv['capacity_ratio']:.0f},"
+                    f"x{kv['capacity_ratio']:.2f}")
+        rows.append(f"serve_kv_fp8/throughput_gain,0,"
+                    f"x{kv['throughput_gain']:.2f}")
+        rows.append(f"serve_kv_fp8/topk_overlap,"
+                    f"{1000*kv['topk_overlap']:.0f},")
+
     if want("tpu_projection"):
         proj = projected_tpu()
         if proj:
@@ -823,7 +989,7 @@ def run(only=None) -> list:
 SECTIONS = ("fp8_ab_uniform", "scheduler_ab_ragged",
             "staggered_poisson", "hold_window_overload", "prefix_repeat",
             "prefix_admission", "chunked_prefill_sla", "multi_candidate",
-            "tpu_projection")
+            "kv_fp8_capacity", "tpu_projection")
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

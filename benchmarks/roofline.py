@@ -16,6 +16,16 @@ multipliers (repro/launch/dryrun.py).
 MODEL_FLOPS = 6·N·D (train, N = active params for MoE) or 2·N·D
 (inference); the ratio MODEL_FLOPS / (chips x HLO_FLOPs) flags
 remat/redundancy waste.
+
+A separate DECODE-ATTENTION section places the per-step attention read on
+the same roofline for BF16-KV vs FP8-KV storage (``--kv-fp8``): decode
+attention is two gemvs against the whole cache, so its time is the KV
+bytes streamed from HBM.  FP8 K/V cuts a cached (position, head) from
+``2 * head_dim`` bytes to ``head_dim + 4`` (e4m3 payload + one f32
+scale), shifting arithmetic intensity up by the same ~1.9x and the memory
+term down with it — the analytic companion to the ``kv_fp8_capacity``
+serving bench.  Written under the ``decode_attention`` key of
+``results/roofline.json`` (cell rows live under ``cells``).
 """
 
 from __future__ import annotations
@@ -124,14 +134,85 @@ def format_table(rows: List[Dict], mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+def kv_bytes_per_pos_head(head_dim: int, kv_dtype: str) -> float:
+    """HBM bytes one cached (position, kv-head) costs under ``kv_dtype``.
+
+    BF16 is the raw payload; fp8 e4m3 adds one f32 amax scale per
+    (position, head) — the granularity ``layers/attention.py`` stores.
+    """
+    if "float8" in kv_dtype:
+        return head_dim * 1.0 + 4.0
+    return head_dim * 2.0
+
+
+def decode_attention_roofline(batch: Optional[int] = None) -> List[Dict]:
+    """Per-decode-step attention roofline, BF16-KV vs FP8-KV storage.
+
+    One decode token runs two gemvs per layer against the full cache
+    (QK^T and PV: ``2 * 2 * H * head_dim * S`` FLOPs each way) while
+    streaming every cached K and V row once — so the attention term is
+    HBM-bound and scales with KV bytes, not FLOPs.  Quantized storage
+    moves the operating point along the bandwidth roof: same FLOPs,
+    ~1.9x fewer bytes, ~1.9x the arithmetic intensity.
+    """
+    from repro.configs import registry  # deferred: dry-run paths need no jax
+
+    cfg = registry.get_arch("onerec-v2").CONFIG
+    t = cfg.transformer
+    B = batch or cfg.serve_batch
+    S = cfg.context_len
+    # QK^T + PV gemvs, 2 FLOPs/MAC, all layers, whole batch
+    flops = 2 * 2 * t.n_layers * B * t.n_heads * t.head_dim * S
+    rows = []
+    for kv_dtype in ("bfloat16", "float8_e4m3fn"):
+        kv_bytes = (2 * t.n_layers * B * S * t.n_kv_heads
+                    * kv_bytes_per_pos_head(t.head_dim, kv_dtype))
+        t_compute = flops / PEAK_FLOPS
+        t_memory = kv_bytes / HBM_BW
+        rows.append({
+            "arch": cfg.name, "kv_dtype": kv_dtype,
+            "batch": B, "kv_len": S,
+            "attn_flops": flops, "kv_bytes": kv_bytes,
+            "bytes_per_pos_head": kv_bytes_per_pos_head(t.head_dim,
+                                                        kv_dtype),
+            "arithmetic_intensity": flops / kv_bytes,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "dominant": "compute" if t_compute >= t_memory else "memory",
+        })
+    bf, f8 = rows
+    for r in rows:
+        r["memory_term_speedup_vs_bf16"] = \
+            bf["t_memory_s"] / r["t_memory_s"]
+    assert f8["dominant"] == "memory", \
+        "decode attention must stay HBM-bound — check the constants"
+    return rows
+
+
+def format_decode_attention(rows: List[Dict]) -> str:
+    hdr = (f"{'decode attn (B=' + str(rows[0]['batch']) + ')':22s} "
+           f"{'B/pos/head':>10s} {'AI(fl/B)':>9s} {'mem(s)':>9s} "
+           f"{'comp(s)':>9s} {'dom':>6s} {'vs bf16':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['kv_dtype']:22s} {r['bytes_per_pos_head']:10.0f} "
+            f"{r['arithmetic_intensity']:9.2f} {r['t_memory_s']:9.2e} "
+            f"{r['t_compute_s']:9.2e} {r['dominant'][:6]:>6s} "
+            f"x{r['memory_term_speedup_vs_bf16']:7.2f}")
+    return "\n".join(lines)
+
+
 def main():
     rows = load_all()
     print(format_table(rows, "single"))
     print()
+    dec = decode_attention_roofline()
+    print(format_decode_attention(dec))
+    print()
     out = "results/roofline.json"
     with open(out, "w") as f:
-        json.dump(rows, f, indent=1)
-    print(f"wrote {out} ({len(rows)} rows)")
+        json.dump({"cells": rows, "decode_attention": dec}, f, indent=1)
+    print(f"wrote {out} ({len(rows)} cell rows + decode-attention A/B)")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,10 @@ def main():
     ap.add_argument("--ragged", action="store_true")
     ap.add_argument("--no-fp8", dest="fp8", action="store_false",
                     default=True)
+    ap.add_argument("--kv-fp8", action="store_true",
+                    help="store K/V fp8 (e4m3) with per-(position, head) "
+                         "scales in both cache tiers — half the KV bytes "
+                         "per slot row, dequantized at the attention read")
     ap.add_argument("--n-candidates", type=int, default=1,
                     help="ranked candidate items per request (tree decode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -55,6 +59,7 @@ def main():
 
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=args.batch, use_fp8=args.fp8, mode=args.mode,
+        kv_dtype="float8_e4m3fn" if args.kv_fp8 else "bfloat16",
         n_slots=args.slots, max_candidates=args.n_candidates))
 
     # 1. submit: non-blocking, the engine does no work yet
@@ -93,7 +98,9 @@ def main():
               f"programs advanced {stats['branches_per_decode_step']:.1f} "
               f"branches per decode dispatch")
 
-    print(f"mode={args.mode} fp8={args.fp8} served {len(outs)} requests "
+    print(f"mode={args.mode} fp8={args.fp8} kv={stats['kv_dtype']} "
+          f"({int(stats['kv_row_bytes'])} B/slot row) "
+          f"served {len(outs)} requests "
           f"(+{int(stats['cancelled'])} cancelled) | "
           f"per-request mean {stats['mean_latency_s']*1e3:.1f} ms | "
           f"p50 {stats['p50_latency_s']*1e3:.1f} ms | "

@@ -144,6 +144,33 @@ def quantize_per_channel(w: jax.Array, contract_axis: int = -2, fmt=E4M3) -> Qua
     return QuantizedTensor(cast_to_fp8(w, scale, fmt), scale, "per_channel")
 
 
+def is_fp8_dtype(dtype) -> bool:
+    """True when ``dtype`` is one of the FP8 storage formats."""
+    return jnp.dtype(dtype).type in FP8_MAX
+
+
+def quantize_kv(x: jax.Array, fmt=E4M3) -> Tuple[jax.Array, jax.Array]:
+    """KV-cache quantization: one dynamic scale per (position, head).
+
+    ``x`` is (..., heads, head_dim); the amax reduces over head_dim only, so
+    every appended token of every KV head carries its own scale — the
+    per-row scale is recomputed from the token's own amax at write time
+    (amax tracking at the finest granularity the cache layout stores).
+    Returns ``(fp8 data, f32 scale)`` with ``scale.shape == x.shape[:-1]``.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = _amax_to_scale(amax, fmt)
+    return cast_to_fp8(x, scale[..., None], fmt), scale
+
+
+def dequantize_kv(data: jax.Array, scale: jax.Array,
+                  dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of ``quantize_kv``: broadcast the per-(position, head) scale
+    back over head_dim.  This is the in-register dequant at the attention
+    read — FP8 is the storage/bandwidth format, compute stays ``dtype``."""
+    return (data.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
 def quantize_per_token(x: jax.Array, fmt=E4M3) -> QuantizedTensor:
     """Runtime dynamic activation quantization: one scale per row/token.
 

@@ -2,7 +2,7 @@
 the open-system continuous-batching slot engine.
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 64 \
-      [--no-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
+      [--no-fp8] [--kv-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
       [--rate 8.0] [--max-queue 64] [--hold-k 4] [--hold-ms 25] \
       [--prefix-cache [--prefix-rows 32] [--second-sight]] \
       [--prefill-chunk 32] [--preemption] [--n-candidates 4]
@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--no-fp8", dest="fp8", action="store_false",
                     default=True)
+    ap.add_argument("--kv-fp8", action="store_true",
+                    help="store K/V in fp8 (e4m3) with per-(position, head) "
+                         "scales in BOTH cache tiers (slot pool + prefix "
+                         "arena) — roughly halves KV bytes per row, so an "
+                         "equal device-byte budget holds ~2x the slots and "
+                         "stored prefixes; reads dequantize in-register")
     ap.add_argument("--mode", choices=("continuous", "fixed"),
                     default="continuous")
     ap.add_argument("--slots", type=int, default=0,
@@ -96,6 +102,7 @@ def main():
     params = onerec_model.init_onerec(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=batch, use_fp8=args.fp8, mode=args.mode,
+        kv_dtype="float8_e4m3fn" if args.kv_fp8 else "bfloat16",
         n_slots=args.slots, max_queue=args.max_queue,
         hold_k=args.hold_k, hold_ms=args.hold_ms,
         prefix_cache=args.prefix_cache, prefix_rows=args.prefix_rows,
@@ -124,6 +131,9 @@ def main():
         outs, stats = engine.serve_requests(requests)
 
     print(f"[serve] mode={args.mode} fp8={args.fp8} "
+          f"kv={stats['kv_dtype']} "
+          f"({int(stats['kv_row_bytes'])} B/row, "
+          f"{int(stats['kv_bytes'])} B total) "
           f"requests={len(requests)} slots={int(stats['n_slots'])} "
           f"occupancy={stats['slot_occupancy']:.2f}")
     if args.prefix_cache:

@@ -26,7 +26,8 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import matmul_any
+from repro.core.quant import (dequantize_kv, is_fp8_dtype, matmul_any,
+                              quantize_kv)
 from repro.distributed.sharding import constrain
 from repro.layers.common import dense_init
 from repro.layers.norms import rmsnorm_apply, rmsnorm_init
@@ -91,19 +92,52 @@ def init_cache(batch: int, cache_len: int, spec: AttnSpec, *,
     its own occupancy, so requests at different sequence lengths / decode
     depths coexist in one batch.  This is the layout the continuous-batching
     serving engine uses.
+
+    FP8 storage: when ``dtype`` is an fp8 format the cache gains
+    ``k_scale`` / ``v_scale`` leaves — one f32 scale per (position, KV head),
+    shape (..., B, S, Kv) — and every write path quantizes through
+    ``quantize_kv`` while reads dequantize in-register.  A BF16 cache tree
+    is structurally unchanged (no scale leaves).
     """
     pos_shape = (*stack, batch, cache_len) if per_slot else (*stack, cache_len)
-    return {
+    cache = {
         "k": jnp.zeros((*stack, batch, cache_len, spec.n_kv_heads, spec.head_dim), dtype),
         "v": jnp.zeros((*stack, batch, cache_len, spec.n_kv_heads, spec.head_dim), dtype),
         "pos": jnp.full(pos_shape, -1, jnp.int32),
     }
+    if is_fp8_dtype(dtype):
+        scale_shape = (*stack, batch, cache_len, spec.n_kv_heads)
+        cache["k_scale"] = jnp.zeros(scale_shape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(scale_shape, jnp.float32)
+    return cache
 
 
 def cache_len_for(spec: AttnSpec, max_target_len: int) -> int:
     if spec.window and spec.window < max_target_len:
         return spec.window
     return max_target_len
+
+
+def _store_kv(cache, k, v):
+    """New K/V in storage form: a cast for BF16 caches, ``quantize_kv`` for
+    FP8 ones.  Returns ``(k_store, v_store, k_scale, v_scale)``; the scales
+    are None for non-FP8 caches (no scale leaves exist to update)."""
+    if "k_scale" in cache:
+        fmt = cache["k"].dtype.type
+        kq, ks = quantize_kv(k, fmt)
+        vq, vs = quantize_kv(v, fmt)
+        return kq, vq, ks, vs
+    return k.astype(cache["k"].dtype), v.astype(cache["v"].dtype), None, None
+
+
+def _read_kv(ck, cv, cks, cvs, dtype):
+    """Cache K/V in compute form: in-register dequant for FP8 storage
+    (scales present), plain upcast for any other low-precision cache."""
+    if cks is not None:
+        return dequantize_kv(ck, cks, dtype), dequantize_kv(cv, cvs, dtype)
+    if ck.dtype != dtype:
+        return ck.astype(dtype), cv.astype(dtype)
+    return ck, cv
 
 
 # ---------------------------------------------------------------------------
@@ -272,18 +306,20 @@ def apply_attention(
         # are DROPPED by the scatter — nothing past a row's real suffix ever
         # lands in its cache, so no wrap/clobber of the stored prefix
         widx = jnp.where(pos2d < end[:, None], pos2d, S)
-        ck = cache["k"].at[rows, widx].set(
-            k.astype(cache["k"].dtype), mode="drop")
-        cv = cache["v"].at[rows, widx].set(
-            v.astype(cache["v"].dtype), mode="drop")
+        ks, vs, k_sc, v_sc = _store_kv(cache, k, v)   # (B,T,K,hd) / (B,T,K)
+        ck = cache["k"].at[rows, widx].set(ks, mode="drop")
+        cv = cache["v"].at[rows, widx].set(vs, mode="drop")
         cpos = cache["pos"].at[rows, widx].set(pos2d, mode="drop")
         new_cache = {"k": ck, "v": cv, "pos": cpos}
+        cks = cvs = None
+        if k_sc is not None:
+            cks = cache["k_scale"].at[rows, widx].set(k_sc, mode="drop")
+            cvs = cache["v_scale"].at[rows, widx].set(v_sc, mode="drop")
+            new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
 
         ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
         cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
-        if ck.dtype != q.dtype:
-            ck = ck.astype(q.dtype)
-            cv = cv.astype(q.dtype)
+        ck, cv = _read_kv(ck, cv, cks, cvs, q.dtype)
         # queries attend over the whole cache: stored prefix + new suffix
         G = H // K
         qh = q.reshape(B, T, K, G, hd)
@@ -329,19 +365,21 @@ def apply_attention(
                 live &= b_idx < branch_counts.astype(jnp.int32)[:, None]
             widx = jnp.where(live, widx, S)
             rows = jnp.arange(B)[:, None]
-            ck = cache["k"].at[rows, widx].set(
-                k.astype(cache["k"].dtype), mode="drop")
-            cv = cache["v"].at[rows, widx].set(
-                v.astype(cache["v"].dtype), mode="drop")
+            ks, vs, k_sc, v_sc = _store_kv(cache, k, v)  # (B,C,K,hd)/(B,C,K)
+            ck = cache["k"].at[rows, widx].set(ks, mode="drop")
+            cv = cache["v"].at[rows, widx].set(vs, mode="drop")
             cpos = cache["pos"].at[rows, widx].set(
                 jnp.broadcast_to(idx[:, None], (B, C)), mode="drop")
             new_cache = {"k": ck, "v": cv, "pos": cpos}
+            cks = cvs = None
+            if k_sc is not None:
+                cks = cache["k_scale"].at[rows, widx].set(k_sc, mode="drop")
+                cvs = cache["v_scale"].at[rows, widx].set(v_sc, mode="drop")
+                new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
 
             ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
             cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
-            if ck.dtype != q.dtype:
-                ck = ck.astype(q.dtype)
-                cv = cv.astype(q.dtype)
+            ck, cv = _read_kv(ck, cv, cks, cvs, q.dtype)
             G = H // K
             qh = q.reshape(B, C, K, G, hd)
             scores = _gqa_scores(qh, ck, spec.scale)      # (B,K,G,C,S)
@@ -366,18 +404,20 @@ def apply_attention(
             idx = idx.astype(jnp.int32)
             rows = jnp.arange(B)
             slot = jnp.where(idx > 0, idx % S, S)
-            ck = cache["k"].at[rows, slot].set(
-                k[:, 0].astype(cache["k"].dtype), mode="drop")
-            cv = cache["v"].at[rows, slot].set(
-                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            ks, vs, k_sc, v_sc = _store_kv(cache, k[:, 0], v[:, 0])
+            ck = cache["k"].at[rows, slot].set(ks, mode="drop")
+            cv = cache["v"].at[rows, slot].set(vs, mode="drop")
             cpos = cache["pos"].at[rows, slot].set(idx, mode="drop")
             new_cache = {"k": ck, "v": cv, "pos": cpos}
+            cks = cvs = None
+            if k_sc is not None:
+                cks = cache["k_scale"].at[rows, slot].set(k_sc, mode="drop")
+                cvs = cache["v_scale"].at[rows, slot].set(v_sc, mode="drop")
+                new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
 
             ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
             cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
-            if ck.dtype != q.dtype:
-                ck = ck.astype(q.dtype)
-                cv = cv.astype(q.dtype)
+            ck, cv = _read_kv(ck, cv, cks, cvs, q.dtype)
             if spec.use_kernel:
                 from repro.kernels.batch_attention.ops import batch_attention
                 out = batch_attention(q, ck, cv, idx[:, None], cpos,
@@ -396,19 +436,23 @@ def apply_attention(
         else:
             idx = cache_index if cache_index is not None else jnp.int32(0)
             slot = idx % S  # ring buffer for windowed layers; linear otherwise
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            ks, vs, k_sc, v_sc = _store_kv(cache, k, v)  # (B,1,K,hd)/(B,1,K)
+            ck = jax.lax.dynamic_update_slice(cache["k"], ks, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vs, (0, slot, 0, 0))
             cpos = jax.lax.dynamic_update_slice(
                 cache["pos"], idx[None].astype(jnp.int32), (slot,))
             new_cache = {"k": ck, "v": cv, "pos": cpos}
+            cks = cvs = None
+            if k_sc is not None:
+                cks = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], k_sc, (0, slot, 0))
+                cvs = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], v_sc, (0, slot, 0))
+                new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
 
             ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
             cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
-            if ck.dtype != q.dtype:  # low-precision (fp8) KV cache: upcast reads
-                ck = ck.astype(q.dtype)
-                cv = cv.astype(q.dtype)
+            ck, cv = _read_kv(ck, cv, cks, cvs, q.dtype)
             if spec.use_kernel:
                 # the paper's §4.2 batch-parallel fused attention kernel
                 from repro.kernels.batch_attention.ops import batch_attention
@@ -435,8 +479,8 @@ def apply_attention(
         if cache is not None and fill_cache:
             S = cache["k"].shape[1]
             keep = min(S, T)
-            k_tail = k[:, T - keep:].astype(cache["k"].dtype)
-            v_tail = v[:, T - keep:].astype(cache["v"].dtype)
+            k_tail, v_tail, k_sc, v_sc = _store_kv(
+                cache, k[:, T - keep:], v[:, T - keep:])
             pos_tail = positions[T - keep:].astype(jnp.int32)
             slots = pos_tail % S
             ck = cache["k"].at[:, slots].set(k_tail)
@@ -453,6 +497,9 @@ def apply_attention(
             else:
                 cpos = cache["pos"].at[slots].set(pos_tail)
             new_cache = {"k": ck, "v": cv, "pos": cpos}
+            if k_sc is not None:
+                new_cache["k_scale"] = cache["k_scale"].at[:, slots].set(k_sc)
+                new_cache["v_scale"] = cache["v_scale"].at[:, slots].set(v_sc)
 
     out = constrain(out, ("batch", "seq", "qkv_out"))
     proj = matmul_any(out, params["o_proj"]["kernel"])

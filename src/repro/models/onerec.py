@@ -97,18 +97,22 @@ def train_loss(params, batch, cfg: OneRecConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: OneRecConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+def init_cache(cfg: OneRecConfig, batch: int, dtype=None) -> dict:
+    """KV cache; ``dtype=None`` resolves ``cfg.transformer.kv_cache_dtype``
+    (bfloat16 unless configured otherwise — e.g. fp8 KV storage)."""
     return tfm.init_kv_cache(cfg.transformer, batch,
                              cfg.context_len + 1, dtype)
 
 
 def init_slot_cache(cfg: OneRecConfig, n_slots: int,
-                    dtype=jnp.bfloat16, extra_len: int = 0) -> dict:
+                    dtype=None, extra_len: int = 0) -> dict:
     """Slot-pool KV cache: ``n_slots`` independent per-request rows, each
     with its own position occupancy (ragged decode depths).  ``extra_len``
     reserves additional physical positions per row — the multi-candidate
     executor passes ``(max_candidates - 1) * (decode_len - 1)`` so every
-    branch's own tokens fit past the shared prefix (tree decode)."""
+    branch's own tokens fit past the shared prefix (tree decode).
+    ``dtype=None`` resolves ``cfg.transformer.kv_cache_dtype``; an fp8
+    dtype stores K/V quantized with per-(position, head) scale leaves."""
     return tfm.init_kv_cache(cfg.transformer, n_slots,
                              cfg.context_len + 1 + extra_len, dtype,
                              per_slot=True)

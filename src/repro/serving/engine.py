@@ -61,6 +61,11 @@ class RequestCancelled(RuntimeError):
 class EngineConfig:
     batch_size: int = 32           # fixed-mode batch; default pool size
     use_fp8: bool = True
+    kv_dtype: str = "bfloat16"     # K/V storage dtype for BOTH cache tiers:
+    #                                "bfloat16" (default, byte-for-byte the
+    #                                legacy layout) | "float8_e4m3fn" (fp8
+    #                                payload + per-(position, head) f32
+    #                                scales; ~half the KV bytes per row)
     topk: int = 8
     use_radix_topk: bool = False   # Pallas kernel (TPU); lax.top_k otherwise
     greedy: bool = True
@@ -195,12 +200,17 @@ class ServingEngine:
                 f"max_queue ({engine_cfg.max_queue}) must cover batch_size "
                 f"({engine_cfg.batch_size}) in fixed mode: a full admission "
                 f"queue could never form a batch, livelocking submitters")
+        if engine_cfg.kv_dtype not in ("bfloat16", "float8_e4m3fn"):
+            raise ValueError(
+                f"kv_dtype must be 'bfloat16' or 'float8_e4m3fn', got "
+                f"{engine_cfg.kv_dtype!r}")
         self.executor = PhaseExecutor(
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
             prefill_bucket_min=engine_cfg.prefill_bucket_min,
             prefix_rows=prefix_rows,
-            n_candidates=engine_cfg.max_candidates)
+            n_candidates=engine_cfg.max_candidates,
+            kv_dtype=engine_cfg.kv_dtype)
         # the store PERSISTS across stats windows (repeat traffic spans
         # them); its hit/miss window resets with the engine's
         self.prefix_store = PrefixStore(
@@ -393,6 +403,11 @@ class ServingEngine:
             "slot_occupancy": float(np.mean(sched.occupancy))
             if sched.occupancy else 0.0,
             "n_slots": float(self.n_slots),
+            # KV capacity accounting from ACTUAL buffer dtypes (fp8 payload
+            # + scale leaves when kv_dtype is fp8, not an assumed itemsize)
+            "kv_dtype": self.ecfg.kv_dtype,
+            "kv_row_bytes": float(self.executor.pool_row_bytes),
+            "kv_bytes": float(self.executor.kv_bytes),
             "decode_steps": float(counters["decode_steps"]),
             "prefill_calls": float(counters["prefill_calls"]),
             # multi-candidate tree decode: fused-program dispatches, real

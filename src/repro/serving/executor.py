@@ -72,7 +72,8 @@ class PhaseExecutor:
                  use_radix_topk: bool = False,
                  prefill_bucket_min: int = 16,
                  prefix_rows: int = 0,
-                 n_candidates: int = 1):
+                 n_candidates: int = 1,
+                 kv_dtype: Optional[str] = None):
         if n_candidates < 1:
             raise ValueError(f"n_candidates must be >= 1, got {n_candidates}")
         if n_candidates > topk:
@@ -85,18 +86,25 @@ class PhaseExecutor:
         self.prefill_bucket_min = prefill_bucket_min
         self.prefix_rows = prefix_rows
         self.n_candidates = n_candidates
+        # K/V storage dtype for BOTH cache tiers (pool + arena); None
+        # resolves the model config's kv_cache_dtype (bfloat16 default).
+        # An fp8 dtype stores K/V quantized with per-(position, head) scale
+        # leaves riding every row — all copy programs move them together.
+        self.kv_dtype = jnp.dtype(kv_dtype or cfg.transformer.kv_cache_dtype)
         # tree decode: branch b's own tokens occupy a reserved span of
         # branch_stride = decode_len - 1 physical positions past the shared
         # prefix, so C branches need (C - 1) * stride rows beyond the
         # single-candidate cache length
         self.branch_stride = max(cfg.decode_len - 1, 0)
         extra = (n_candidates - 1) * self.branch_stride
+        kv_dt = self.kv_dtype
         policy = PAPER_POLICY if use_fp8 else BASELINE_POLICY
         self.params = quantize_params(params, policy)
-        self.cache = onerec_model.init_slot_cache(cfg, n_slots,
+        self.cache = onerec_model.init_slot_cache(cfg, n_slots, dtype=kv_dt,
                                                   extra_len=extra)
         # tier-2 arena: prefix-store rows, same per-row layout as the pool
         self.arena = (onerec_model.init_slot_cache(cfg, prefix_rows,
+                                                   dtype=kv_dt,
                                                    extra_len=extra)
                       if prefix_rows > 0 else None)
         self.counters: Dict[str, int] = {"prefill_calls": 0,
@@ -122,8 +130,10 @@ class PhaseExecutor:
 
         @partial(jax.jit, donate_argnums=(1,))
         def prefill_insert_fn(params, pool, tokens, profile, lengths, slots):
-            # fresh rows share the pool's layout, branch regions included
+            # fresh rows share the pool's layout (dtype and scale leaves
+            # included), branch regions included
             fresh = onerec_model.init_slot_cache(cfg, tokens.shape[0],
+                                                 dtype=kv_dt,
                                                  extra_len=extra)
             last, filled = onerec_model.prefill_into_slots(
                 params, {"tokens": tokens, "profile": profile}, cfg, fresh,
@@ -202,14 +212,16 @@ class PhaseExecutor:
                 if "pos" in p:
                     picked = a["pos"][:, rows]
                     keep = (picked >= 0) & (picked < lengths[None, :, None])
-                    return {
-                        "k": p["k"].at[:, slots].set(
-                            a["k"][:, rows].astype(p["k"].dtype)),
-                        "v": p["v"].at[:, slots].set(
-                            a["v"][:, rows].astype(p["v"].dtype)),
-                        "pos": p["pos"].at[:, slots].set(
-                            jnp.where(keep, picked, -1)),
-                    }
+                    # every non-pos leaf (k/v payload AND any fp8 scale
+                    # arrays) rides the copy wholesale — pool and arena
+                    # share one dtype, so a stored prefix round-trips
+                    # bit-identically, scales included
+                    out = {key: p[key].at[:, slots].set(
+                        a[key][:, rows].astype(p[key].dtype))
+                        for key in p if key != "pos"}
+                    out["pos"] = p["pos"].at[:, slots].set(
+                        jnp.where(keep, picked, -1))
+                    return out
                 return {k: walk(p[k], a[k]) for k in p}
             return walk(pool, arena)
 
@@ -332,12 +344,31 @@ class PhaseExecutor:
 
     @property
     def arena_row_bytes(self) -> int:
-        """Device bytes one arena row (= one cached prefix) occupies."""
+        """Device bytes one arena row (= one cached prefix) occupies,
+        computed from the ACTUAL buffer dtypes — fp8 K/V payload plus its
+        f32 scale leaves, not an assumed bf16 itemsize — so the
+        ``PrefixStore`` byte budget, ``bytes_pinned`` accounting, and
+        eviction thresholds mean real bytes for any KV dtype."""
         if self.arena is None:
             return 0
         total = sum(leaf.nbytes
                     for leaf in jax.tree_util.tree_leaves(self.arena))
         return total // self.prefix_rows
+
+    @property
+    def pool_row_bytes(self) -> int:
+        """Device bytes one slot-pool row occupies (same dtype-honest
+        accounting as ``arena_row_bytes``)."""
+        total = sum(leaf.nbytes
+                    for leaf in jax.tree_util.tree_leaves(self.cache))
+        return total // self.n_slots
+
+    @property
+    def kv_bytes(self) -> int:
+        """Total device bytes of both KV tiers (slot pool + prefix arena)."""
+        trees = [self.cache] + ([self.arena] if self.arena is not None else [])
+        return sum(leaf.nbytes for tree in trees
+                   for leaf in jax.tree_util.tree_leaves(tree))
 
     def decode(self, tokens: np.ndarray, lengths: np.ndarray) -> jax.Array:
         """One decode step over the whole pool: tokens (N, 1) at per-slot

@@ -161,6 +161,239 @@ def test_multi_candidate_branch_topk_overlap():
         f"forced-token log-prob gap {lp_gaps} (scale-path defect?)"
 
 
+# ---------------------------------------------------------------------------
+# FP8 KV cache (storage quantization, orthogonal to the FP8 *weight* path
+# above): K/V lives in e4m3 with per-(position, head) f32 scales in both
+# cache tiers, dequantized at the attention read.  The quality currency is
+# the same teacher-forced top-K overlap — both models share ONE set of
+# bf16 params, so any overlap loss is the KV storage path alone.
+# ---------------------------------------------------------------------------
+
+FP8_KV = "float8_e4m3fn"
+
+
+def _tiny_cfg(name: str) -> OneRecConfig:
+    """The multi-candidate parity test's tiny backbone (capacity_factor
+    lifted so MoE batch composition can't perturb comparisons)."""
+    return OneRecConfig(
+        name=name, history_len=8,
+        transformer=TransformerConfig(
+            name=f"{name}-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+def _topk_overlap(lg_a, lg_b, k=8):
+    """Mean top-k candidate-set overlap between two logit grids whose
+    leading dims index (row[, branch])."""
+    V = lg_a.shape[-1]
+    a = np.argsort(-np.asarray(lg_a, np.float32).reshape(-1, V), -1)[:, :k]
+    b = np.argsort(-np.asarray(lg_b, np.float32).reshape(-1, V), -1)[:, :k]
+    return float(np.mean([len(set(x) & set(y)) / k for x, y in zip(a, b)]))
+
+
+def test_bf16_cache_has_no_scale_leaves():
+    """The BF16 default layout is byte-for-byte the legacy one: fp8 scale
+    leaves appear ONLY when the KV dtype is fp8 (every compiled program's
+    tree structure — and therefore its XLA signature — is unchanged)."""
+    cfg = _tiny_cfg("onerec-kv-default")
+    cache = onerec_model.init_slot_cache(cfg, 2)
+    paths = [jax.tree_util.keystr(p) for p, _
+             in jax.tree_util.tree_leaves_with_path(cache)]
+    assert not any("scale" in p for p in paths), paths
+    cache8 = onerec_model.init_slot_cache(cfg, 2, dtype=jnp.float8_e4m3fn)
+    paths8 = [jax.tree_util.keystr(p) for p, _
+              in jax.tree_util.tree_leaves_with_path(cache8)]
+    assert any("k_scale" in p for p in paths8)
+    assert any("v_scale" in p for p in paths8)
+
+
+def _mk_request(cfg, seed, n_items=None):
+    rng = np.random.default_rng(seed)
+    n_items = n_items or cfg.history_len
+    toks = rng.integers(0, cfg.vocab_size,
+                        n_items * cfg.n_codebooks).astype(np.int32)
+    prof = rng.normal(size=onerec_model.PROFILE_DIM).astype(np.float32)
+    return toks, prof
+
+
+def test_fp8_kv_pool_arena_roundtrip_bit_identical():
+    """prefix_save + prefix_copy_insert move the fp8 payload AND its scale
+    leaves together with no dtype conversion, so a stored prefix restores
+    bit-identically — the invariant that makes the arena a lossless tier."""
+    from repro.serving.executor import PhaseExecutor
+    cfg = _tiny_cfg("onerec-kv-roundtrip")
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    ex = PhaseExecutor(params, cfg, n_slots=2, use_fp8=False, prefix_rows=2,
+                       prefill_bucket_min=4, kv_dtype=FP8_KV)
+    toks, prof = _mk_request(cfg, 1)
+    ex.prefill_insert([toks], [prof], [0])
+
+    def snap(tree, slot):
+        return {jax.tree_util.keystr(p): np.asarray(leaf[:, slot])
+                for p, leaf in jax.tree_util.tree_leaves_with_path(tree)}
+
+    before = snap(ex.cache, 0)
+    assert any("k_scale" in k for k in before)
+    ex.prefix_save([0], [1])
+    ex.free_slots([0])                       # wipes pos; payload now stale
+    ex.prefix_copy_insert([1], [0], [len(toks) + 1])
+    after = snap(ex.cache, 0)
+    for key in before:
+        a, b = before[key], after[key]
+        if "pos" in key:
+            assert np.array_equal(a, b), f"pos row changed through {key}"
+        else:
+            assert np.array_equal(a.view(np.uint8), b.view(np.uint8)), \
+                f"round trip not bit-identical at {key}"
+
+
+def test_fp8_kv_single_decode_overlap():
+    """Teacher-forced top-8 overlap through prefill + single-token decode
+    with fp8 K/V storage vs bf16 K/V, SAME bf16 params — isolates the KV
+    quantize/dequant path.  A scale-path defect drags overlap toward
+    chance (8/256)."""
+    cfg = _tiny_cfg("onerec-kv-single")
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    B = 4
+    T = cfg.history_len * cfg.n_codebooks
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                          cfg.vocab_size),
+             "profile": jax.random.normal(jax.random.PRNGKey(2),
+                                          (B, onerec_model.PROFILE_DIM))}
+    lengths = jnp.full((B,), T, jnp.int32)
+    c_bf = onerec_model.init_slot_cache(cfg, B)
+    c_q = onerec_model.init_slot_cache(cfg, B, dtype=jnp.float8_e4m3fn)
+    lg_bf, c_bf = onerec_model.prefill_into_slots(params, batch, cfg, c_bf,
+                                                  lengths)
+    lg_q, c_q = onerec_model.prefill_into_slots(params, batch, cfg, c_q,
+                                                lengths)
+    idx = lengths + 1
+    tok = jnp.argmax(lg_bf, -1).astype(jnp.int32)[:, None]   # bf16 teacher
+    overlaps = []
+    for t in range(cfg.decode_len):
+        lg_bf, c_bf = onerec_model.decode_step_slots(params, tok, cfg, c_bf,
+                                                     idx + t)
+        lg_q, c_q = onerec_model.decode_step_slots(params, tok, cfg, c_q,
+                                                   idx + t)
+        overlaps.append(_topk_overlap(lg_bf, lg_q))
+        tok = jnp.argmax(lg_bf, -1).astype(jnp.int32)[:, None]
+    overlap = float(np.mean(overlaps))
+    assert overlap > 0.6, f"fp8-KV single-decode top-8 overlap {overlap}"
+
+
+def test_fp8_kv_tree_decode_overlap():
+    """The multi-candidate tree path with fp8 K/V: branch scatters write
+    quantized spans + scales, the tree mask reads through the dequant."""
+    cfg = _tiny_cfg("onerec-kv-tree")
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    B, K = 4, 4
+    R = cfg.decode_len - 1
+    T = cfg.history_len * cfg.n_codebooks
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                          cfg.vocab_size),
+             "profile": jax.random.normal(jax.random.PRNGKey(2),
+                                          (B, onerec_model.PROFILE_DIM))}
+    lengths = jnp.full((B,), T, jnp.int32)
+    extra = (K - 1) * R
+    c_bf = onerec_model.init_slot_cache(cfg, B, extra_len=extra)
+    c_q = onerec_model.init_slot_cache(cfg, B, dtype=jnp.float8_e4m3fn,
+                                       extra_len=extra)
+    lg_bf, c_bf = onerec_model.prefill_into_slots(params, batch, cfg, c_bf,
+                                                  lengths)
+    lg_q, c_q = onerec_model.prefill_into_slots(params, batch, cfg, c_q,
+                                                lengths)
+    seeds = jax.lax.top_k(lg_bf, K)[1].astype(jnp.int32)
+    base = lengths + 1
+    toks = seeds
+    overlaps, lp_gaps = [], []
+    for t in range(R):
+        lg_bf, c_bf = onerec_model.decode_step_slots(
+            params, toks, cfg, c_bf, base + t, starts=base, branch_stride=R)
+        lg_q, c_q = onerec_model.decode_step_slots(
+            params, toks, cfg, c_q, base + t, starts=base, branch_stride=R)
+        overlaps.append(_topk_overlap(lg_bf, lg_q))
+        forced = np.asarray(jnp.argmax(lg_bf, -1)).reshape(-1)
+        lp = lambda lg: (np.asarray(lg, np.float32).reshape(-1, cfg.vocab_size)
+                         [np.arange(forced.size), forced]
+                         - np.asarray(jax.nn.logsumexp(
+                             jnp.asarray(lg, jnp.float32), axis=-1)).reshape(-1))
+        lp_gaps.append(float(np.mean(np.abs(lp(lg_bf) - lp(lg_q)))))
+        toks = jnp.argmax(lg_bf, -1).astype(jnp.int32)
+    overlap = float(np.mean(overlaps))
+    assert overlap > 0.6, f"fp8-KV tree-decode top-8 overlap {overlap}"
+    assert max(lp_gaps) < 1.0, \
+        f"fp8-KV forced-token log-prob gap {lp_gaps} (scale-path defect?)"
+
+
+def test_fp8_kv_prefix_resume_overlap():
+    """The full tier-2 flow under fp8 K/V — prefill, store to the arena,
+    restore into a fresh slot, resume-prefill the suffix, decode — keeps
+    teacher-forced top-8 overlap vs the identical bf16-KV flow."""
+    from repro.serving.executor import PhaseExecutor
+    cfg = _tiny_cfg("onerec-kv-resume")
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    n_prefix_items = cfg.history_len - 2
+    toks, prof = _mk_request(cfg, 3)
+    prefix = toks[:n_prefix_items * cfg.n_codebooks]
+    suffix = toks[n_prefix_items * cfg.n_codebooks:]
+    start = len(prefix) + 1                       # profile + prefix tokens
+    execs = {}
+    logits = {}
+    for name, kv in (("bf16", "bfloat16"), ("fp8", FP8_KV)):
+        ex = PhaseExecutor(params, cfg, n_slots=2, use_fp8=False,
+                           prefix_rows=2, prefill_bucket_min=4, kv_dtype=kv)
+        ex.prefill_insert([prefix], [prof], [0])
+        ex.prefix_save([0], [0])
+        ex.free_slots([0])
+        ex.prefix_copy_insert([0], [1], [start])  # restore into ANOTHER slot
+        logits[name] = ex.resume_prefill([suffix], [1], [start])
+        execs[name] = ex
+    overlaps = [_topk_overlap(logits["bf16"][:1], logits["fp8"][:1])]
+    depth = len(toks) + 1
+    tok = np.asarray(jnp.argmax(logits["bf16"][:1], -1), np.int32)
+    for t in range(cfg.decode_len):
+        lens = np.array([0, depth + t], np.int32)     # slot 1 decodes
+        toks2 = np.array([[0], [int(tok.ravel()[0])]], np.int32)
+        lg_bf = execs["bf16"].decode(toks2, lens)
+        lg_q = execs["fp8"].decode(toks2, lens)
+        overlaps.append(_topk_overlap(lg_bf[1:], lg_q[1:]))
+        tok = np.asarray(jnp.argmax(lg_bf[1:], -1), np.int32)
+    overlap = float(np.mean(overlaps))
+    assert overlap > 0.6, f"fp8-KV prefix-resume top-8 overlap {overlap}"
+
+
+def test_fp8_kv_engine_composition():
+    """fp8 K/V composes with prefix cache + chunked prefill + preemption +
+    multi-candidate tree decode in one engine: repeat traffic hits the
+    store, and the whole stack is deterministic (two fresh engines serving
+    the same stream produce identical ranked outputs)."""
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.serving.requests import build_requests
+    cfg = _tiny_cfg("onerec-kv-engine")
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    ecfg = dict(batch_size=4, use_fp8=False, mode="continuous", n_slots=4,
+                kv_dtype=FP8_KV, prefix_cache=True, prefix_rows=8,
+                prefill_chunk=6, preemption=True, max_candidates=2,
+                prefill_bucket_min=4)
+    reqs = build_requests(cfg, 12, 4, 0, True, n_candidates=2)
+
+    def run():
+        eng = ServingEngine(params, cfg, EngineConfig(**ecfg))
+        o1, _ = eng.serve_requests(reqs)
+        o2, s2 = eng.serve_requests(reqs)     # revisit pass: store is warm
+        return o1 + o2, s2
+
+    outs_a, stats = run()
+    assert stats["prefix_hit_rate"] > 0, "warm pass never hit the store"
+    assert stats["kv_dtype"] == FP8_KV
+    outs_b, _ = run()
+    assert all(np.array_equal(a, b) for a, b in zip(outs_a, outs_b))
+
+
 def test_recsys_score_parity():
     cfg = get_arch("din").reduced_config()
     params = recsys_model.init_recsys(jax.random.PRNGKey(0), cfg)
