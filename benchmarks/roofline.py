@@ -145,8 +145,10 @@ def kv_bytes_per_pos_head(head_dim: int, kv_dtype: str) -> float:
     return head_dim * 2.0
 
 
-def decode_attention_roofline(batch: Optional[int] = None) -> List[Dict]:
-    """Per-decode-step attention roofline, BF16-KV vs FP8-KV storage.
+def decode_attention_roofline(batch: Optional[int] = None,
+                              page_size: int = 32) -> List[Dict]:
+    """Per-decode-step attention roofline, BF16-KV vs FP8-KV storage,
+    contiguous rows vs the paged-gather layout.
 
     One decode token runs two gemvs per layer against the full cache
     (QK^T and PV: ``2 * 2 * H * head_dim * S`` FLOPs each way) while
@@ -154,6 +156,15 @@ def decode_attention_roofline(batch: Optional[int] = None) -> List[Dict]:
     HBM-bound and scales with KV bytes, not FLOPs.  Quantized storage
     moves the operating point along the bandwidth roof: same FLOPs,
     ~1.9x fewer bytes, ~1.9x the arithmetic intensity.
+
+    The PAGED rows price the page-table indirection the paged KV pool
+    adds to each step: one int32 table entry per (request, page) streamed
+    to build the gather, and the gather itself reads the row padded to a
+    whole number of ``page_size``-position pages (``S_padded``).  Both
+    are small next to the K/V stream (the table is rounding error; the
+    padding is bounded by ``page_size / S``) — the layout's capacity win
+    (see the ``paged_kv`` serving bench) costs a few percent on the
+    bandwidth roof, asserted < 25%.
     """
     from repro.configs import registry  # deferred: dry-run paths need no jax
 
@@ -161,59 +172,95 @@ def decode_attention_roofline(batch: Optional[int] = None) -> List[Dict]:
     t = cfg.transformer
     B = batch or cfg.serve_batch
     S = cfg.context_len
+    n_pages_row = -(-S // page_size)
     # QK^T + PV gemvs, 2 FLOPs/MAC, all layers, whole batch
     flops = 2 * 2 * t.n_layers * B * t.n_heads * t.head_dim * S
     rows = []
     for kv_dtype in ("bfloat16", "float8_e4m3fn"):
-        kv_bytes = (2 * t.n_layers * B * S * t.n_kv_heads
-                    * kv_bytes_per_pos_head(t.head_dim, kv_dtype))
-        t_compute = flops / PEAK_FLOPS
-        t_memory = kv_bytes / HBM_BW
-        rows.append({
-            "arch": cfg.name, "kv_dtype": kv_dtype,
-            "batch": B, "kv_len": S,
-            "attn_flops": flops, "kv_bytes": kv_bytes,
-            "bytes_per_pos_head": kv_bytes_per_pos_head(t.head_dim,
-                                                        kv_dtype),
-            "arithmetic_intensity": flops / kv_bytes,
-            "t_compute_s": t_compute, "t_memory_s": t_memory,
-            "dominant": "compute" if t_compute >= t_memory else "memory",
-        })
-    bf, f8 = rows
+        per_head = kv_bytes_per_pos_head(t.head_dim, kv_dtype)
+        for layout in ("contiguous", "paged"):
+            s_eff = S if layout == "contiguous" else n_pages_row * page_size
+            kv_bytes = 2 * t.n_layers * B * s_eff * t.n_kv_heads * per_head
+            table_bytes = (0 if layout == "contiguous"
+                           else t.n_layers * B * n_pages_row * 4)
+            total = kv_bytes + table_bytes
+            t_compute = flops / PEAK_FLOPS
+            t_memory = total / HBM_BW
+            rows.append({
+                "arch": cfg.name, "kv_dtype": kv_dtype, "layout": layout,
+                "batch": B, "kv_len": S, "kv_len_padded": s_eff,
+                "page_size": page_size if layout == "paged" else 0,
+                "attn_flops": flops, "kv_bytes": kv_bytes,
+                "page_table_bytes": table_bytes,
+                "bytes_per_pos_head": per_head,
+                "arithmetic_intensity": flops / total,
+                "t_compute_s": t_compute, "t_memory_s": t_memory,
+                "dominant": ("compute" if t_compute >= t_memory
+                             else "memory"),
+            })
+    bf = rows[0]                       # bf16 contiguous is the baseline
     for r in rows:
         r["memory_term_speedup_vs_bf16"] = \
             bf["t_memory_s"] / r["t_memory_s"]
-    assert f8["dominant"] == "memory", \
+        if r["layout"] == "paged":
+            base = next(x for x in rows
+                        if x["kv_dtype"] == r["kv_dtype"]
+                        and x["layout"] == "contiguous")
+            r["paged_overhead"] = r["t_memory_s"] / base["t_memory_s"] - 1.0
+            assert r["paged_overhead"] < 0.25, \
+                "page indirection must stay rounding error on the roof"
+    assert all(r["dominant"] == "memory" for r in rows
+               if "float8" in r["kv_dtype"]), \
         "decode attention must stay HBM-bound — check the constants"
     return rows
 
 
 def format_decode_attention(rows: List[Dict]) -> str:
     hdr = (f"{'decode attn (B=' + str(rows[0]['batch']) + ')':22s} "
-           f"{'B/pos/head':>10s} {'AI(fl/B)':>9s} {'mem(s)':>9s} "
-           f"{'comp(s)':>9s} {'dom':>6s} {'vs bf16':>8s}")
+           f"{'layout':>11s} {'B/pos/head':>10s} {'AI(fl/B)':>9s} "
+           f"{'mem(s)':>9s} {'dom':>6s} {'vs bf16':>8s} {'pg ovh':>7s}")
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
+        ovh = (f"{100 * r['paged_overhead']:6.2f}%"
+               if r["layout"] == "paged" else f"{'—':>7s}")
         lines.append(
-            f"{r['kv_dtype']:22s} {r['bytes_per_pos_head']:10.0f} "
+            f"{r['kv_dtype']:22s} {r['layout']:>11s} "
+            f"{r['bytes_per_pos_head']:10.0f} "
             f"{r['arithmetic_intensity']:9.2f} {r['t_memory_s']:9.2e} "
-            f"{r['t_compute_s']:9.2e} {r['dominant'][:6]:>6s} "
-            f"x{r['memory_term_speedup_vs_bf16']:7.2f}")
+            f"{r['dominant'][:6]:>6s} "
+            f"x{r['memory_term_speedup_vs_bf16']:7.2f} {ovh}")
     return "\n".join(lines)
 
 
-def main():
-    rows = load_all()
-    print(format_table(rows, "single"))
-    print()
-    dec = decode_attention_roofline()
-    print(format_decode_attention(dec))
-    print()
+SECTIONS = ("cells", "decode_attention")
+
+
+def main(only: Optional[str] = None):
+    report = {}
+    if only in (None, "cells"):
+        rows = load_all()
+        report["cells"] = rows
+        print(format_table(rows, "single"))
+        print()
+    if only in (None, "decode_attention"):
+        dec = decode_attention_roofline()
+        report["decode_attention"] = dec
+        print(format_decode_attention(dec))
+        print()
     out = "results/roofline.json"
+    os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
-        json.dump({"cells": rows, "decode_attention": dec}, f, indent=1)
-    print(f"wrote {out} ({len(rows)} cell rows + decode-attention A/B)")
+        json.dump(report, f, indent=1)
+    n_cells = len(report.get("cells", []))
+    print(f"wrote {out} ({n_cells} cell rows"
+          + (" + decode-attention A/B" if "decode_attention" in report
+             else "") + ")")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SECTIONS, default=None,
+                    help="run a single roofline section (default: all); "
+                         "the JSON report then contains just that section")
+    main(only=ap.parse_args().only)

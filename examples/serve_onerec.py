@@ -45,6 +45,14 @@ def main():
                     help="store K/V fp8 (e4m3) with per-(position, head) "
                          "scales in both cache tiers — half the KV bytes "
                          "per slot row, dequantized at the attention read")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV layout: one refcounted device page pool "
+                         "+ per-request page tables instead of contiguous "
+                         "slot rows + prefix arena — prefix hits become "
+                         "page-table edits (zero-copy), branch/chunk spans "
+                         "allocate pages on demand (continuous mode only)")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="positions per KV page under --paged")
     ap.add_argument("--n-candidates", type=int, default=1,
                     help="ranked candidate items per request (tree decode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -60,7 +68,8 @@ def main():
     engine = ServingEngine(params, cfg, EngineConfig(
         batch_size=args.batch, use_fp8=args.fp8, mode=args.mode,
         kv_dtype="float8_e4m3fn" if args.kv_fp8 else "bfloat16",
-        n_slots=args.slots, max_candidates=args.n_candidates))
+        n_slots=args.slots, max_candidates=args.n_candidates,
+        paged=args.paged, page_size=args.page_size))
 
     # 1. submit: non-blocking, the engine does no work yet
     handles = [engine.submit(r) for r in requests]
@@ -98,6 +107,13 @@ def main():
               f"programs advanced {stats['branches_per_decode_step']:.1f} "
               f"branches per decode dispatch")
 
+    if args.paged:
+        print(f"paged KV: {int(stats['pages_total'])} pages of "
+              f"{int(stats['page_size'])} positions "
+              f"({int(stats['pages_free'])} free after drain, "
+              f"{int(stats['kv_bytes_pinned'])} B pinned, "
+              f"{int(stats['cow_copies'])} COW page copies, "
+              f"{int(stats['prefix_row_copies'])} full-row copies)")
     print(f"mode={args.mode} fp8={args.fp8} kv={stats['kv_dtype']} "
           f"({int(stats['kv_row_bytes'])} B/slot row) "
           f"served {len(outs)} requests "

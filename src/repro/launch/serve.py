@@ -5,7 +5,8 @@ the open-system continuous-batching slot engine.
       [--no-fp8] [--kv-fp8] [--mode fixed|continuous] [--slots 16] [--ragged] \
       [--rate 8.0] [--max-queue 64] [--hold-k 4] [--hold-ms 25] \
       [--prefix-cache [--prefix-rows 32] [--second-sight]] \
-      [--prefill-chunk 32] [--preemption] [--n-candidates 4]
+      [--prefill-chunk 32] [--preemption] [--n-candidates 4] \
+      [--paged [--page-size 32] [--pages 256]]
 
 With ``--rate`` the launcher runs a REAL arrival-driven serve loop
 (``run_open_loop``): requests are submitted at wall-clock Poisson arrival
@@ -90,6 +91,21 @@ def main():
                          "every slot against its shared prefix K/V "
                          "(continuous mode; completions carry the ranked "
                          "candidate set)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV layout: ONE refcounted device page pool "
+                         "+ per-request page tables replaces the contiguous "
+                         "slot rows and prefix arena — a prefix hit maps "
+                         "the stored pages read-only into the new request "
+                         "(zero-copy, at most one boundary COW page) and "
+                         "branch/chunk spans allocate pages on demand "
+                         "(continuous mode only)")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="positions per KV page under --paged (16-64 is "
+                         "the useful range: smaller pages waste less on "
+                         "ragged tails, larger ones shrink the table)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size under --paged (0 = auto-size to "
+                         "the contiguous layout's slot+arena footprint)")
     ap.add_argument("--seed", type=int, default=0,
                     help="seeds the params AND the synthetic workload "
                          "(the engine itself is deterministic); one seed "
@@ -108,7 +124,8 @@ def main():
         prefix_cache=args.prefix_cache, prefix_rows=args.prefix_rows,
         store_on_first_sight=not args.second_sight,
         prefill_chunk=args.prefill_chunk, preemption=args.preemption,
-        max_candidates=args.n_candidates))
+        max_candidates=args.n_candidates,
+        paged=args.paged, page_size=args.page_size, n_pages=args.pages))
     requests = build_requests(cfg, args.requests, batch, args.seed,
                               args.ragged, n_candidates=args.n_candidates)
 
@@ -136,6 +153,13 @@ def main():
           f"{int(stats['kv_bytes'])} B total) "
           f"requests={len(requests)} slots={int(stats['n_slots'])} "
           f"occupancy={stats['slot_occupancy']:.2f}")
+    if args.paged:
+        print(f"[serve] paged KV: {int(stats['pages_total'])} pages x "
+              f"{int(stats['page_size'])} positions "
+              f"({int(stats['pages_free'])} free, "
+              f"{int(stats['kv_bytes_pinned'])} B pinned after drain) | "
+              f"prefix hits: {int(stats['prefix_row_copies'])} full-row "
+              f"copies, {int(stats['cow_copies'])} COW page copies")
     if args.prefix_cache:
         print(f"[serve] prefix cache: hit-rate "
               f"{stats['prefix_hit_rate']:.2f} "

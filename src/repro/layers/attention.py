@@ -112,6 +112,35 @@ def init_cache(batch: int, cache_len: int, spec: AttnSpec, *,
     return cache
 
 
+def init_page_cache(n_positions: int, spec: AttnSpec, *,
+                    stack: Tuple[int, ...] = (),
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Unified PAGE-POOL cache: one flat position heap shared by every
+    request and by the prefix store — k/v (..., NP, Kv, hd) and pos
+    (..., NP) with -1 = empty, where NP counts physical positions
+    (``n_pages * page_size`` plus one trailing SENTINEL page that is never
+    written; page tables map unallocated logical pages onto it, so its
+    permanent ``pos = -1`` masks those reads out).  There is no batch
+    axis: a request's row is materialized per program by gathering
+    through its page table (``page_gather`` in ``apply_attention``), and
+    writes scatter to host-computed flat physical indices
+    (``page_scatter``; out-of-range = dropped).  FP8 storage adds the
+    same per-(position, head) scale leaves as ``init_cache``.
+    """
+    cache = {
+        "k": jnp.zeros((*stack, n_positions, spec.n_kv_heads,
+                        spec.head_dim), dtype),
+        "v": jnp.zeros((*stack, n_positions, spec.n_kv_heads,
+                        spec.head_dim), dtype),
+        "pos": jnp.full((*stack, n_positions), -1, jnp.int32),
+    }
+    if is_fp8_dtype(dtype):
+        scale_shape = (*stack, n_positions, spec.n_kv_heads)
+        cache["k_scale"] = jnp.zeros(scale_shape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(scale_shape, jnp.float32)
+    return cache
+
+
 def cache_len_for(spec: AttnSpec, max_target_len: int) -> int:
     if spec.window and spec.window < max_target_len:
         return spec.window
@@ -231,6 +260,8 @@ def apply_attention(
     starts: Optional[jax.Array] = None,
     branch_stride: Optional[int] = None,
     branch_counts: Optional[jax.Array] = None,
+    page_scatter: Optional[jax.Array] = None,
+    page_gather: Optional[jax.Array] = None,
     norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """One attention layer.
@@ -263,6 +294,17 @@ def apply_attention(
     that row's own prefix — slots at different decode depths coexist in one
     batch.  Per-slot caches assume full (non-windowed) attention with
     ``cache_len >= T``.
+
+    PAGED caches (``init_page_cache``: no batch axis, one flat position
+    heap) run the same three cached modes — resume prefill, single
+    decode, tree decode — through host-computed index arrays instead of
+    row arithmetic: ``page_scatter`` holds the flat physical index each
+    new K/V lands at (out-of-range = dropped write) and ``page_gather``
+    (B, Sp) materializes each row's LOGICALLY DENSE view of the pool.
+    Because page tables are dense in logical position, index s of the
+    gathered view IS logical position s — the causal/tree masks below
+    apply to the view unchanged, and unmapped logical pages read the
+    sentinel page (``pos = -1``, masked out, exactly-zero probability).
     """
     B, T, _ = x.shape
     H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
@@ -290,7 +332,81 @@ def apply_attention(
     v = constrain(v, ("batch", "seq", "kv_heads", None))
 
     new_cache = None
-    if cache is not None and fill_cache and starts is not None:
+    if cache is not None and page_gather is not None:
+        # ---- paged cache: scatter writes, gather a logically dense view --
+        if spec.window:
+            raise ValueError("paged cache requires full attention")
+        if page_scatter is None:
+            raise ValueError("paged cache requires page_scatter")
+        pgi = page_gather.astype(jnp.int32)               # (B, Sp)
+        psc = page_scatter.astype(jnp.int32)
+        if fill_cache:
+            # resume prefill: suffix K/V at host-resolved physical slots
+            if starts is None:
+                raise ValueError("paged prefill runs as a resume fill")
+            pos2d = positions.astype(jnp.int32)           # (B, T) absolute
+            ks, vs, k_sc, v_sc = _store_kv(cache, k, v)
+            wpos = pos2d
+            q_pos = pos2d                                 # (B, T) queries
+        elif branch_stride is not None:
+            # tree decode: psc already points every live branch at its
+            # reserved span slot (dead branches/rows at the drop index)
+            if lengths is None:
+                raise ValueError("paged tree decode requires lengths")
+            idx = lengths.astype(jnp.int32)               # (B,)
+            ks, vs, k_sc, v_sc = _store_kv(cache, k, v)   # (B,C,K,hd)
+            wpos = jnp.broadcast_to(idx[:, None], psc.shape)
+            q_pos = None
+        else:
+            # single-token decode: one physical slot per live row
+            idx = (lengths if lengths is not None else cache_index)
+            idx = idx.astype(jnp.int32)
+            ks, vs, k_sc, v_sc = _store_kv(cache, k[:, 0], v[:, 0])
+            wpos = idx
+            q_pos = None
+        ck = cache["k"].at[psc].set(ks, mode="drop")
+        cv = cache["v"].at[psc].set(vs, mode="drop")
+        cpos = cache["pos"].at[psc].set(wpos, mode="drop")
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        cks = cvs = None
+        if k_sc is not None:
+            cks = cache["k_scale"].at[psc].set(k_sc, mode="drop")
+            cvs = cache["v_scale"].at[psc].set(v_sc, mode="drop")
+            new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
+
+        # per-row dense view: (B, Sp) physical indices -> (B, Sp, K, hd);
+        # view index == logical position, so the contiguous-path masks
+        # apply verbatim with S -> Sp
+        ckv = constrain(ck[pgi], ("batch", "kv_seq", "kv_heads", None))
+        cvv = constrain(cv[pgi], ("batch", "kv_seq", "kv_heads", None))
+        cposv = cpos[pgi]                                 # (B, Sp)
+        ckv, cvv = _read_kv(ckv, cvv,
+                            None if cks is None else cks[pgi],
+                            None if cvs is None else cvs[pgi], q.dtype)
+        G = H // K
+        Sp = pgi.shape[1]
+        qh = q.reshape(B, T, K, G, hd)
+        scores = _gqa_scores(qh, ckv, spec.scale)         # (B,K,G,T,Sp)
+        if fill_cache:
+            valid = (cposv[:, None, :] >= 0) \
+                & (cposv[:, None, :] <= q_pos[:, :, None])    # (B,T,Sp)
+        elif branch_stride is not None:
+            st = starts.astype(jnp.int32)
+            R = branch_stride
+            b_off = jnp.arange(T, dtype=jnp.int32)[None, :] * R   # (1, C)
+            phys = jnp.arange(Sp, dtype=jnp.int32)[None, None, :]
+            own_lo = (st[:, None] + b_off)[..., None]     # (B, C, 1)
+            shared = phys < st[:, None, None]
+            own = (phys >= own_lo) & (phys < own_lo + R)
+            valid = (cposv[:, None, :] >= 0) \
+                & (cposv[:, None, :] <= idx[:, None, None]) \
+                & (shared | own)                          # (B, C, Sp)
+        else:
+            valid = ((cposv >= 0)
+                     & (cposv <= idx[:, None]))[:, None]  # (B, 1, Sp)
+        probs = _masked_softmax(scores, valid[:, None, None])
+        out = _gqa_combine(probs, cvv).reshape(B, T, H * hd)
+    elif cache is not None and fill_cache and starts is not None:
         # ---- resume prefill: suffix fill at per-row offsets ----
         if cache["pos"].ndim != 2:
             raise ValueError("resume prefill requires a per-slot cache")

@@ -52,8 +52,13 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
             lengths: Optional[jax.Array] = None,
             starts: Optional[jax.Array] = None,
             branch_stride: Optional[int] = None,
-            branch_counts: Optional[jax.Array] = None):
-    """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM)."""
+            branch_counts: Optional[jax.Array] = None,
+            page_scatter: Optional[jax.Array] = None,
+            page_gather: Optional[jax.Array] = None):
+    """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM).
+
+    ``page_scatter`` / ``page_gather`` run the cached modes against the
+    paged pool (``init_page_pool``) instead of a per-slot cache."""
     if cache is not None and not fill_cache:
         # decode: new token(s), profile already in the cache; with
         # ``branch_stride`` the T axis is C candidate branches (tree decode)
@@ -61,7 +66,9 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
                            cfg.transformer, cache=cache,
                            cache_index=cache_index, lengths=lengths,
                            starts=starts, branch_stride=branch_stride,
-                           branch_counts=branch_counts)
+                           branch_counts=branch_counts,
+                           page_scatter=page_scatter,
+                           page_gather=page_gather)
     if starts is not None and fill_cache:
         # resume prefill: suffix tokens only — the profile token (and the
         # cached history prefix) already occupy positions 0 .. starts[i]-1
@@ -70,7 +77,8 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
         return tfm.forward(params["backbone"], batch["tokens"],
                            cfg.transformer, inputs_embeds=embeds,
                            cache=cache, fill_cache=True, lengths=lengths,
-                           starts=starts)
+                           starts=starts, page_scatter=page_scatter,
+                           page_gather=page_gather)
     embeds = _embed_with_profile(params, batch["tokens"], batch["profile"], cfg)
     return tfm.forward(params["backbone"], batch["tokens"], cfg.transformer,
                        inputs_embeds=embeds, cache=cache,
@@ -118,6 +126,16 @@ def init_slot_cache(cfg: OneRecConfig, n_slots: int,
                              per_slot=True)
 
 
+def init_page_pool(cfg: OneRecConfig, n_pages: int, page_size: int,
+                   dtype=None) -> dict:
+    """Paged serving cache: ONE flat pool of ``n_pages`` x ``page_size``
+    positions (plus a sentinel page) shared by every request AND the
+    prefix store — the paged replacement for ``init_slot_cache`` + the
+    executor's arena.  Rows become host-side page tables; a stored prefix
+    is extra refcounts on the pages it covers (zero-copy hits)."""
+    return tfm.init_kv_page_pool(cfg.transformer, n_pages, page_size, dtype)
+
+
 def prefill(params, batch, cfg: OneRecConfig, cache: dict):
     """Encode [profile + history]; returns last logits + filled cache."""
     logits, new_cache = forward(params, batch, cfg, cache=cache,
@@ -136,7 +154,9 @@ def decode_step(params, tokens, cfg: OneRecConfig, cache: dict,
 
 def prefill_into_slots(params, batch, cfg: OneRecConfig, cache: dict,
                        lengths: jax.Array,
-                       starts: Optional[jax.Array] = None):
+                       starts: Optional[jax.Array] = None,
+                       page_scatter: Optional[jax.Array] = None,
+                       page_gather: Optional[jax.Array] = None):
     """Ragged prefill into a per-slot cache.
 
     ``batch["tokens"]`` is right-padded to a common T; ``lengths`` (B,) gives
@@ -160,7 +180,9 @@ def prefill_into_slots(params, batch, cfg: OneRecConfig, cache: dict,
         seq_lens = lengths.astype(jnp.int32)      # suffix tokens only
         logits, new_cache = forward(params, batch, cfg, cache=cache,
                                     fill_cache=True, lengths=seq_lens,
-                                    starts=starts.astype(jnp.int32))
+                                    starts=starts.astype(jnp.int32),
+                                    page_scatter=page_scatter,
+                                    page_gather=page_gather)
     last = jnp.take_along_axis(
         logits, (seq_lens - 1)[:, None, None], axis=1)[:, 0]
     return last, new_cache
@@ -170,7 +192,9 @@ def decode_step_slots(params, tokens, cfg: OneRecConfig, cache: dict,
                       lengths: jax.Array,
                       starts: Optional[jax.Array] = None,
                       branch_stride: Optional[int] = None,
-                      branch_counts: Optional[jax.Array] = None):
+                      branch_counts: Optional[jax.Array] = None,
+                      page_scatter: Optional[jax.Array] = None,
+                      page_gather: Optional[jax.Array] = None):
     """Per-slot decode: tokens (B, 1), each row at its OWN absolute index
     ``lengths[i]`` (= number of positions already in that slot).
 
@@ -185,10 +209,13 @@ def decode_step_slots(params, tokens, cfg: OneRecConfig, cache: dict,
             params, {"tokens": tokens}, cfg, cache=cache,
             lengths=lengths.astype(jnp.int32),
             starts=starts.astype(jnp.int32), branch_stride=branch_stride,
-            branch_counts=branch_counts)
+            branch_counts=branch_counts, page_scatter=page_scatter,
+            page_gather=page_gather)
         return logits, new_cache
     logits, new_cache = forward(params, {"tokens": tokens}, cfg, cache=cache,
-                                lengths=lengths.astype(jnp.int32))
+                                lengths=lengths.astype(jnp.int32),
+                                page_scatter=page_scatter,
+                                page_gather=page_gather)
     return logits[:, -1], new_cache
 
 

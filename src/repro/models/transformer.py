@@ -26,7 +26,8 @@ from repro.core.quant import matmul_any
 from repro.core.stats import tap as stats_tap
 from repro.distributed.sharding import constrain
 from repro.layers.attention import (AttnSpec, apply_attention, cache_len_for,
-                                    init_attention, init_cache)
+                                    init_attention, init_cache,
+                                    init_page_cache)
 from repro.layers.common import dense_init
 from repro.layers.mlp import apply_mlp, init_mlp
 from repro.layers.moe import MoESpec, apply_moe, init_moe, make_moe_spec
@@ -152,14 +153,16 @@ def init_transformer(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
 def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
                  kind: LayerKind, positions, cache_lp, cache_index,
                  fill_cache: bool, lengths=None, starts=None,
-                 branch_stride=None, branch_counts=None):
+                 branch_stride=None, branch_counts=None,
+                 page_scatter=None, page_gather=None):
     h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
                       zero_centered=cfg.zero_centered_norm)
     attn_out, new_cache = apply_attention(
         lp["attn"], h, attn_spec_for(cfg, kind), positions=positions,
         cache=cache_lp, cache_index=cache_index, fill_cache=fill_cache,
         lengths=lengths, starts=starts, branch_stride=branch_stride,
-        branch_counts=branch_counts, norm_eps=cfg.norm_eps)
+        branch_counts=branch_counts, page_scatter=page_scatter,
+        page_gather=page_gather, norm_eps=cfg.norm_eps)
     if cfg.use_post_norm:
         attn_out = rmsnorm_apply(lp["post_attn_norm"], attn_out,
                                  eps=cfg.norm_eps,
@@ -184,7 +187,8 @@ def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
 def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
                  spec: StackSpec, positions, cache_stack, cache_index,
                  fill_cache: bool, unroll: bool = False, lengths=None,
-                 starts=None, branch_stride=None, branch_counts=None):
+                 starts=None, branch_stride=None, branch_counts=None,
+                 page_scatter=None, page_gather=None):
     """scan over the stacked periods of one homogeneous stack."""
 
     def body(carry, xs):
@@ -196,7 +200,8 @@ def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
             c_lp = cache_all.get(key) if cache_all else None
             h, nc = _apply_layer(lp_all[key], h, cfg, kind, positions,
                                  c_lp, cache_index, fill_cache, lengths,
-                                 starts, branch_stride, branch_counts)
+                                 starts, branch_stride, branch_counts,
+                                 page_scatter, page_gather)
             # layer-boundary residual sharding: no-op under the base rules;
             # under TRAIN_RULES_SP this seq-shards the saved activations
             h = constrain(h, ("batch", "act_seq", "embed"))
@@ -257,6 +262,8 @@ def forward(
     starts: Optional[jax.Array] = None,
     branch_stride: Optional[int] = None,
     branch_counts: Optional[jax.Array] = None,
+    page_scatter: Optional[jax.Array] = None,
+    page_gather: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """tokens (B, T) -> (logits (B, T, V) f32, new_cache).
 
@@ -271,6 +278,13 @@ def forward(
     depth ``lengths[i]``, sharing the row's prefix K/V under a tree mask
     (see ``layers.attention.apply_attention``); ``branch_counts`` (B,)
     drops the writes of dummy branches past each row's real width.
+
+    ``page_scatter`` / ``page_gather`` switch the SAME cached modes onto a
+    paged pool (``init_kv_page_pool``): writes land at host-computed flat
+    physical indices and reads gather each row's logically dense view
+    through its page table (see ``layers.attention``).  Both index arrays
+    are scan constants — one set serves every layer of every stack, since
+    pages are allocated in POSITION space, shared by all layers.
     """
     if inputs_embeds is not None:
         x = constrain(inputs_embeds.astype(compute_dtype),
@@ -299,7 +313,9 @@ def forward(
                              c_stack, cache_index, fill_cache,
                              unroll=unroll_layers, lengths=lengths,
                              starts=starts, branch_stride=branch_stride,
-                             branch_counts=branch_counts)
+                             branch_counts=branch_counts,
+                             page_scatter=page_scatter,
+                             page_gather=page_gather)
         if new_cache is not None:
             new_cache["stacks"][key] = nc
     x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
@@ -332,6 +348,28 @@ def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
             stack_cache[f"p{pi}"] = init_cache(
                 batch, clen, aspec, stack=(spec.n_periods,), dtype=dtype,
                 per_slot=per_slot)
+        cache["stacks"][str(si)] = stack_cache
+    return cache
+
+
+def init_kv_page_pool(cfg: TransformerConfig, n_pages: int, page_size: int,
+                      dtype=None) -> dict:
+    """Unified PAGED serving cache: ``n_pages`` fixed-size pages of
+    ``page_size`` positions in one flat heap (plus a trailing sentinel
+    page), shared by the slot pool and the prefix store.  Requires full
+    attention, like every per-slot serving cache — a ring-buffered window
+    has no stable logical-position <-> page mapping."""
+    dtype = dtype or jnp.dtype(cfg.kv_cache_dtype)
+    if cfg.sliding_window:
+        raise ValueError("paged KV caches require full attention")
+    n_positions = (n_pages + 1) * page_size      # + the sentinel page
+    cache: Dict[str, Any] = {"stacks": {}}
+    for si, spec in enumerate(layer_plan(cfg)):
+        stack_cache = {}
+        for pi, kind in enumerate(spec.kinds):
+            aspec = attn_spec_for(cfg, kind)
+            stack_cache[f"p{pi}"] = init_page_cache(
+                n_positions, aspec, stack=(spec.n_periods,), dtype=dtype)
         cache["stacks"][str(si)] = stack_cache
     return cache
 

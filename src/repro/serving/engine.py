@@ -96,6 +96,19 @@ class EngineConfig:
     #                                prefix store when enabled)
     hold_k: int = 0                # admission hold window: join only when K
     hold_ms: float = 0.0           # requests or T ms accumulated (0 = off)
+    # -- paged KV layout (continuous mode only) --
+    paged: bool = False            # ONE refcounted page pool + per-slot page
+    #                                tables replaces the contiguous slot pool
+    #                                AND the prefix arena: prefix hits become
+    #                                page-table edits (zero-copy), branch
+    #                                spans allocate on demand (K=1 traffic
+    #                                reserves nothing)
+    page_size: int = 32            # logical positions per page (16-64 keeps
+    #                                boundary-COW waste low without
+    #                                fragmenting the gather)
+    n_pages: int = 0               # device pool size; 0 => auto-size to the
+    #                                contiguous layout's device bytes
+    #                                ((n_slots + prefix_rows) worst-case rows)
 
 
 class RequestHandle:
@@ -204,21 +217,56 @@ class ServingEngine:
             raise ValueError(
                 f"kv_dtype must be 'bfloat16' or 'float8_e4m3fn', got "
                 f"{engine_cfg.kv_dtype!r}")
+        n_pages = 0
+        if engine_cfg.paged:
+            if engine_cfg.mode != "continuous":
+                raise ValueError("the paged KV layout requires continuous "
+                                 "mode (fixed mode is the seed-compat "
+                                 "contiguous reference)")
+            if engine_cfg.page_size <= 0:
+                raise ValueError(f"page_size must be positive, got "
+                                 f"{engine_cfg.page_size}")
+            # 0 auto-sizes the pool to the CONTIGUOUS layout's device
+            # bytes — (n_slots + prefix_rows) worst-case rows — so paged
+            # vs contiguous A/Bs compare layouts, not budgets
+            s_row = (cfg.context_len + 1
+                     + (engine_cfg.max_candidates - 1)
+                     * max(cfg.decode_len - 1, 0))
+            n_pages = engine_cfg.n_pages or \
+                -(-(self.n_slots + prefix_rows) * s_row
+                  // engine_cfg.page_size)
         self.executor = PhaseExecutor(
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
             prefill_bucket_min=engine_cfg.prefill_bucket_min,
             prefix_rows=prefix_rows,
             n_candidates=engine_cfg.max_candidates,
-            kv_dtype=engine_cfg.kv_dtype)
+            kv_dtype=engine_cfg.kv_dtype,
+            paged=engine_cfg.paged, page_size=engine_cfg.page_size,
+            n_pages=n_pages)
         # the store PERSISTS across stats windows (repeat traffic spans
         # them); its hit/miss window resets with the engine's
-        self.prefix_store = PrefixStore(
-            prefix_rows, self.executor.arena_row_bytes,
-            max_bytes=engine_cfg.prefix_bytes_budget,
-            n_codebooks=cfg.n_codebooks,
-            store_on_first_sight=engine_cfg.store_on_first_sight) \
-            if prefix_rows else None
+        if not prefix_rows:
+            self.prefix_store = None
+        elif engine_cfg.paged:
+            # paged tier 2: entries are page refcounts, priced per page;
+            # the byte budget defaults to the whole pool (live-slot
+            # pressure is handled by the scheduler's evict_for_pages
+            # reclaim, not a static split), and eviction releases pages
+            # through the executor so freed pages read virgin
+            self.prefix_store = PrefixStore(
+                prefix_rows, self.executor.page_bytes,
+                max_bytes=engine_cfg.prefix_bytes_budget
+                or (n_pages + 1) * self.executor.page_bytes,
+                n_codebooks=cfg.n_codebooks,
+                store_on_first_sight=engine_cfg.store_on_first_sight,
+                release_pages=self.executor.release_pages)
+        else:
+            self.prefix_store = PrefixStore(
+                prefix_rows, self.executor.arena_row_bytes,
+                max_bytes=engine_cfg.prefix_bytes_budget,
+                n_codebooks=cfg.n_codebooks,
+                store_on_first_sight=engine_cfg.store_on_first_sight)
         # lifecycle state: ONE pool + ONE scheduler for the engine's whole
         # life — queues, chunked-prefill segments, and preemption state
         # persist across submit/step calls (the open-system redesign)
@@ -445,7 +493,29 @@ class ServingEngine:
             "preemptions": float(sched.preemptions),
             **self._sla_stats(done),
             **self._prefix_stats(),
+            **self._paged_stats(),
         }
+
+    def _paged_stats(self) -> Dict[str, float]:
+        """Paged-layout metrics (zeros when the contiguous layout is in
+        use, mirroring ``_prefix_stats``'s always-present pattern)."""
+        pp = self.executor.page_pool
+        if pp is None:
+            return {"pages_total": 0.0, "pages_free": 0.0,
+                    "page_size": 0.0, "kv_bytes_pinned": 0.0,
+                    "cow_copies": 0.0, "prefix_row_copies":
+                    float(self.executor.counters["prefix_row_copies"])}
+        return {"pages_total": float(pp.n_pages),
+                "pages_free": float(pp.n_free),
+                "page_size": float(pp.page_size),
+                # bytes actually pinned by live tables + store entries —
+                # the number the contiguous layout can't report better
+                # than "rows x worst-case row"
+                "kv_bytes_pinned": float(pp.n_used
+                                         * self.executor.page_bytes),
+                "cow_copies": float(self.executor.counters["cow_copies"]),
+                "prefix_row_copies":
+                    float(self.executor.counters["prefix_row_copies"])}
 
     # -- closed-batch shims (seed-engine API) ---------------------------------
 

@@ -52,6 +52,8 @@ from repro.configs.base import OneRecConfig
 from repro.core.policy import BASELINE_POLICY, PAPER_POLICY
 from repro.core.ptq import quantize_params
 from repro.models import onerec as onerec_model
+from repro.models import transformer as tfm_model
+from repro.serving.kv_cache import PagePool
 
 
 def bucket_length(n: int, minimum: int = 16) -> int:
@@ -73,7 +75,10 @@ class PhaseExecutor:
                  prefill_bucket_min: int = 16,
                  prefix_rows: int = 0,
                  n_candidates: int = 1,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 paged: bool = False,
+                 page_size: int = 32,
+                 n_pages: int = 0):
         if n_candidates < 1:
             raise ValueError(f"n_candidates must be >= 1, got {n_candidates}")
         if n_candidates > topk:
@@ -100,13 +105,45 @@ class PhaseExecutor:
         kv_dt = self.kv_dtype
         policy = PAPER_POLICY if use_fp8 else BASELINE_POLICY
         self.params = quantize_params(params, policy)
-        self.cache = onerec_model.init_slot_cache(cfg, n_slots, dtype=kv_dt,
-                                                  extra_len=extra)
-        # tier-2 arena: prefix-store rows, same per-row layout as the pool
-        self.arena = (onerec_model.init_slot_cache(cfg, prefix_rows,
-                                                   dtype=kv_dt,
-                                                   extra_len=extra)
-                      if prefix_rows > 0 else None)
+        # per-request worst-case footprint in positions: profile + full
+        # history + first decode token, plus every reserved branch span
+        s_row = cfg.context_len + 1 + extra
+        self.paged = bool(paged)
+        if self.paged:
+            # -- PAGED layout: one flat pool of n_pages fixed-size pages
+            # (plus a trailing sentinel page) replaces slot pool AND arena.
+            # A slot is a host page table; a stored prefix is extra
+            # refcounts on the pages it covers (zero-copy hits).
+            self._p_max = -(-s_row // page_size)   # table entries per slot
+            if n_pages < self._p_max:
+                raise ValueError(
+                    f"n_pages ({n_pages}) below one request's footprint "
+                    f"({self._p_max} pages of {page_size} positions)")
+            self.page_size = page_size
+            self.n_pages = n_pages
+            self._sentinel = n_pages               # virgin page, pos = -1
+            self._drop = (n_pages + 1) * page_size  # OOB flat scatter index
+            self._sp = self._p_max * page_size     # gathered view length
+            self.page_pool = PagePool(n_pages, page_size)
+            # dense table matrix (slot -> page per logical page index);
+            # unmapped entries point at the sentinel page so empty slots
+            # gather an all-masked view — exactly a contiguous freed row
+            self._table_mat = np.full((n_slots, self._p_max),
+                                      self._sentinel, np.int32)
+            self._slot_pages: Dict[int, List[int]] = {}
+            self.cache = onerec_model.init_page_pool(cfg, n_pages, page_size,
+                                                     dtype=kv_dt)
+            self.arena = None
+        else:
+            self.page_pool = None
+            self.cache = onerec_model.init_slot_cache(cfg, n_slots,
+                                                      dtype=kv_dt,
+                                                      extra_len=extra)
+            # tier-2 arena: prefix-store rows, same per-row layout as the pool
+            self.arena = (onerec_model.init_slot_cache(cfg, prefix_rows,
+                                                       dtype=kv_dt,
+                                                       extra_len=extra)
+                          if prefix_rows > 0 else None)
         self.counters: Dict[str, int] = {"prefill_calls": 0,
                                          "resume_calls": 0,
                                          "decode_steps": 0,
@@ -114,7 +151,10 @@ class PhaseExecutor:
                                          "branch_tokens": 0,
                                          "prefill_padded_rows": 0,
                                          "prefill_tokens_batched": 0,
-                                         "prefill_tokens_real": 0}
+                                         "prefill_tokens_real": 0,
+                                         "prefix_row_copies": 0,
+                                         "cow_copies": 0,
+                                         "pages_granted": 0}
         # NOTE: every phase entry point below gates on completion via
         # block_until_ready before returning, so async dispatch can't smear
         # one phase's device work into the next host-side measurement — the
@@ -234,6 +274,92 @@ class PhaseExecutor:
                 lambda a, p: a.at[:, rows].set(p[:, slots].astype(a.dtype)),
                 arena, pool)
 
+        # -- paged-layout programs: the same phases, indexed through host-
+        # computed flat physical positions (page_scatter) and per-row dense
+        # gather views (page_gather) instead of contiguous row arithmetic.
+        # The host owns every page table, so live/drop gating moves out of
+        # the programs entirely: an invalid write is simply an out-of-range
+        # scatter index, dropped by XLA.
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def prefill_insert_paged_fn(params, pool, tokens, profile, lengths,
+                                    psc):
+            # fresh prefill needs NO paged attention: run the contiguous
+            # fill into a throwaway per-slot cache sized to this bucket
+            # (logits only depend on the filled rows), then scatter every
+            # leaf's positions to their granted pages.  psc (B, T+1) holds
+            # the flat physical index of logical position l for each row
+            # (out-of-range past the row's occupancy = dropped).
+            b, t_eff = tokens.shape[0], tokens.shape[1] + 1
+            fresh = tfm_model.init_kv_cache(cfg.transformer, b, t_eff,
+                                            dtype=kv_dt, per_slot=True)
+            last, filled = onerec_model.prefill_into_slots(
+                params, {"tokens": tokens, "profile": profile}, cfg, fresh,
+                lengths)
+            pool = jax.tree_util.tree_map(
+                lambda p, f: p.at[:, psc].set(f.astype(p.dtype),
+                                              mode="drop"),
+                pool, filled)
+            return last, pool
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def resume_prefill_paged_fn(params, pool, tokens, lengths, starts,
+                                    psc, pgi):
+            return onerec_model.prefill_into_slots(
+                params, {"tokens": tokens}, cfg, pool, lengths,
+                starts=starts, page_scatter=psc, page_gather=pgi)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_paged_fn(params, pool, tokens, lengths, psc, pgi):
+            return onerec_model.decode_step_slots(
+                params, tokens, cfg, pool, lengths,
+                page_scatter=psc, page_gather=pgi)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_multi_paged_fn(params, pool, tokens, lengths, starts,
+                                  psc, pgi):
+            # dummy-branch / inactive-row writes are already redirected to
+            # the drop index by the host psc builder, so no branch_counts
+            # reach the program
+            return onerec_model.decode_step_slots(
+                params, tokens, cfg, pool, lengths, starts=starts,
+                branch_stride=self.branch_stride,
+                page_scatter=psc, page_gather=pgi)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def free_pages_fn(pool, pages):
+            # clear the pos lane of a batch of freed pages so re-granted
+            # pages read virgin (same invariant as clear_slots_fn); padded
+            # ids point past the sentinel page and are dropped
+            flat = (pages[:, None] * page_size
+                    + jnp.arange(page_size, dtype=jnp.int32)[None, :])
+            flat = flat.reshape(-1)
+
+            def walk(tree):
+                if "pos" in tree:
+                    return {**tree,
+                            "pos": tree["pos"].at[:, flat].set(
+                                -1, mode="drop")}
+                return {k: walk(v) for k, v in tree.items()}
+            return walk(pool)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def page_copy_fn(pool, src, dst):
+            # copy-on-write of ONE boundary page: gather the source page's
+            # positions and scatter them at the destination page.  The host
+            # sets dst past the match boundary to the drop index, so the
+            # destination page stays virgin (pos = -1) there — every leaf
+            # (k/v payload, pos, fp8 scales) copies uniformly.
+            return jax.tree_util.tree_map(
+                lambda p: p.at[:, dst].set(p[:, src], mode="drop"), pool)
+
+        self._prefill_insert_paged = prefill_insert_paged_fn
+        self._resume_prefill_paged = resume_prefill_paged_fn
+        self._decode_paged = decode_paged_fn
+        self._decode_multi_paged = decode_multi_paged_fn
+        self._free_pages = free_pages_fn
+        self._page_copy = page_copy_fn
+
         self._prefill_insert = prefill_insert_fn
         self._decode = decode_fn
         self._decode_multi = decode_multi_fn
@@ -270,6 +396,118 @@ class PhaseExecutor:
         self.counters["prefill_tokens_real"] += sum(lens)
         return tok, lengths, src
 
+    # -- paged layout: host page tables + flat index builders -----------------
+
+    def _gather_indices(self, slot_ids) -> np.ndarray:
+        """(N, Sp) flat physical index of each row's LOGICALLY DENSE pool
+        view (Sp = table entries x page size).  Unmapped table entries
+        point inside the sentinel page, whose ``pos`` lane is permanently
+        -1 — an empty slot therefore gathers an all-masked view, reading
+        exactly like a contiguous freed row."""
+        tabs = self._table_mat[np.asarray(slot_ids, np.int64)]
+        flat = (tabs[:, :, None].astype(np.int64) * self.page_size
+                + np.arange(self.page_size, dtype=np.int64)[None, None, :])
+        return flat.reshape(len(slot_ids), -1).astype(np.int32)
+
+    def _scatter_indices(self, slot_ids, logical, valid) -> np.ndarray:
+        """Flat physical scatter index for per-row ``logical`` positions
+        (any shape with a leading row axis).  Entries with ``valid`` False
+        — and any position whose page is unmapped — resolve to the drop
+        index, so the program's write is discarded by XLA."""
+        n = len(slot_ids)
+        tabs = self._table_mat[np.asarray(slot_ids, np.int64)]
+        l = np.asarray(logical, np.int64)
+        pg = np.clip(l // self.page_size, 0, self._p_max - 1)
+        entry = np.take_along_axis(
+            tabs, pg.reshape(n, -1), axis=1).reshape(l.shape)
+        phys = entry.astype(np.int64) * self.page_size + l % self.page_size
+        ok = (np.asarray(valid, bool) & (entry != self._sentinel)
+              & (l >= 0) & (l < self._sp))
+        return np.where(ok, phys, self._drop).astype(np.int32)
+
+    def _free_pages_device(self, pages: List[int]) -> None:
+        """Clear the ``pos`` lane of freed pages in one scatter program
+        (padded ids land past the sentinel page and are dropped)."""
+        if not pages:
+            return
+        b = bucket_length(len(pages), 1)
+        ids = np.asarray(pages + [self.n_pages + 1] * (b - len(pages)),
+                         np.int32)
+        self.cache = self._free_pages(self.cache, jnp.asarray(ids))
+
+    def grant_slot(self, slot: int, n_positions: int) -> bool:
+        """Admission grant: allocate the pages covering ``n_positions``
+        logical positions for ``slot`` (its full worst-case footprint —
+        prefill + every branch span it will actually use).  All-or-nothing;
+        False leaves the pool untouched so the scheduler can reclaim store
+        pages and retry."""
+        assert self.paged, "grant_slot requires the paged layout"
+        need = self.page_pool.pages_for(n_positions)
+        pages = self.page_pool.alloc(need)
+        if pages is None:
+            return False
+        self._table_mat[slot] = self._sentinel
+        self._table_mat[slot, :need] = pages
+        self._slot_pages[slot] = list(pages)
+        self.counters["pages_granted"] += need
+        return True
+
+    def attach_prefix(self, slot: int, entry_pages: List[int],
+                      boundary: int, n_positions: int) -> bool:
+        """Prefix-cache HIT admission: map a stored prefix's pages into
+        ``slot`` read-only (refcount bump, ZERO device copies), COW the one
+        partially-matched boundary page if the match boundary is not
+        page-aligned, and allocate fresh pages for the rest of the
+        footprint.  ``boundary`` is the match length in positions (profile
+        + matched history tokens); ``n_positions`` the slot's footprint."""
+        assert self.paged, "attach_prefix requires the paged layout"
+        ps = self.page_size
+        full = boundary // ps
+        cow = 1 if boundary % ps else 0
+        need = self.page_pool.pages_for(n_positions) - full
+        if need > self.page_pool.n_free:
+            return False
+        fresh = self.page_pool.alloc(need) or []
+        shared = self.page_pool.share(entry_pages[:full])
+        table = shared + fresh
+        self._table_mat[slot] = self._sentinel
+        self._table_mat[slot, :len(table)] = table
+        self._slot_pages[slot] = table
+        self.counters["pages_granted"] += need
+        if cow:
+            # copy positions [full*ps, boundary) of the donor's boundary
+            # page; offsets past the boundary scatter out of range, so the
+            # fresh page stays virgin (pos = -1) there — the paged
+            # equivalent of prefix_copy_insert's length mask
+            keep = boundary % ps
+            off = np.arange(ps, dtype=np.int64)
+            src = np.asarray(entry_pages[full] * ps + off, np.int32)
+            dst = np.where(off < keep, fresh[0] * ps + off, self._drop)
+            self.cache = self._page_copy(self.cache, jnp.asarray(src),
+                                         jnp.asarray(dst.astype(np.int32)))
+            self.counters["cow_copies"] += 1
+        return True
+
+    def share_prefix(self, slot: int, n_positions: int) -> List[int]:
+        """Store-admit under the paged layout: add one reference to the
+        slot's pages covering ``n_positions`` (the entry's advertised
+        occupancy) and return them — the stored prefix IS those refcounts,
+        no arena copy exists.  The donor keeps decoding: it only ever
+        appends at positions past the boundary, and restore masks the
+        boundary page's tail via COW, so shared content is immutable."""
+        assert self.paged, "share_prefix requires the paged layout"
+        need = self.page_pool.pages_for(n_positions)
+        owned = self._slot_pages.get(slot, [])
+        assert need <= len(owned), \
+            f"slot {slot} holds {len(owned)} pages, prefix needs {need}"
+        return self.page_pool.share(owned[:need])
+
+    def release_pages(self, pages: List[int]) -> None:
+        """Drop one reference per page (store eviction path); pages whose
+        refcount hits zero get their device ``pos`` lane cleared."""
+        assert self.paged, "release_pages requires the paged layout"
+        self._free_pages_device(self.page_pool.release(pages))
+
     def prefill_insert(self, tokens_list: List[np.ndarray],
                        profiles: List[np.ndarray], slots: List[int]
                        ) -> jax.Array:
@@ -287,9 +525,22 @@ class PhaseExecutor:
         tok, lengths, src = self._pad_group(tokens_list)
         prof = np.stack([profiles[j] for j in src]).astype(np.float32)
         slot_ids = np.asarray([slots[j] for j in src], np.int32)
-        logits, self.cache = self._prefill_insert(
-            self.params, self.cache, jnp.asarray(tok), jnp.asarray(prof),
-            jnp.asarray(lengths), jnp.asarray(slot_ids))
+        if self.paged:
+            # scatter each row's occupancy (profile + history) onto its
+            # granted pages; duplicate padded rows write identical values
+            t_eff = tok.shape[1] + 1
+            logical = np.broadcast_to(
+                np.arange(t_eff, dtype=np.int64)[None, :],
+                (tok.shape[0], t_eff))
+            valid = logical < (lengths[:, None].astype(np.int64) + 1)
+            psc = self._scatter_indices(slot_ids, logical, valid)
+            logits, self.cache = self._prefill_insert_paged(
+                self.params, self.cache, jnp.asarray(tok),
+                jnp.asarray(prof), jnp.asarray(lengths), jnp.asarray(psc))
+        else:
+            logits, self.cache = self._prefill_insert(
+                self.params, self.cache, jnp.asarray(tok), jnp.asarray(prof),
+                jnp.asarray(lengths), jnp.asarray(slot_ids))
         logits.block_until_ready()
         return logits
 
@@ -307,9 +558,23 @@ class PhaseExecutor:
         tok, lengths, src = self._pad_group(tokens_list)
         start_arr = np.asarray([starts[j] for j in src], np.int32)
         slot_ids = np.asarray([slots[j] for j in src], np.int32)
-        logits, self.cache = self._resume_prefill(
-            self.params, self.cache, jnp.asarray(tok), jnp.asarray(lengths),
-            jnp.asarray(start_arr), jnp.asarray(slot_ids))
+        if self.paged:
+            t = tok.shape[1]
+            logical = (start_arr[:, None].astype(np.int64)
+                       + np.arange(t, dtype=np.int64)[None, :])
+            valid = (np.arange(t, dtype=np.int64)[None, :]
+                     < lengths[:, None].astype(np.int64))
+            psc = self._scatter_indices(slot_ids, logical, valid)
+            pgi = self._gather_indices(slot_ids)
+            logits, self.cache = self._resume_prefill_paged(
+                self.params, self.cache, jnp.asarray(tok),
+                jnp.asarray(lengths), jnp.asarray(start_arr),
+                jnp.asarray(psc), jnp.asarray(pgi))
+        else:
+            logits, self.cache = self._resume_prefill(
+                self.params, self.cache, jnp.asarray(tok),
+                jnp.asarray(lengths), jnp.asarray(start_arr),
+                jnp.asarray(slot_ids))
         logits.block_until_ready()
         self.counters["resume_calls"] += 1
         return logits
@@ -334,6 +599,9 @@ class PhaseExecutor:
         self.cache = self._prefix_copy_insert(
             self.cache, self.arena, self._pad_ids(arena_rows),
             self._pad_ids(slots), self._pad_ids(lengths))
+        # full-row device copies per prefix hit — the cost the paged
+        # layout's page-table edit eliminates (see the paged_kv bench)
+        self.counters["prefix_row_copies"] += len(slots)
 
     def prefix_save(self, slots: List[int], arena_rows: List[int]) -> None:
         """Copy freshly prefilled pool rows into arena rows (store admit)."""
@@ -348,7 +616,12 @@ class PhaseExecutor:
         computed from the ACTUAL buffer dtypes — fp8 K/V payload plus its
         f32 scale leaves, not an assumed bf16 itemsize — so the
         ``PrefixStore`` byte budget, ``bytes_pinned`` accounting, and
-        eviction thresholds mean real bytes for any KV dtype."""
+        eviction thresholds mean real bytes for any KV dtype.
+
+        Under the paged layout there is no arena: a stored prefix is page
+        references, so the store's per-row price IS the page price."""
+        if self.paged:
+            return self.page_bytes
         if self.arena is None:
             return 0
         total = sum(leaf.nbytes
@@ -356,9 +629,23 @@ class PhaseExecutor:
         return total // self.prefix_rows
 
     @property
+    def page_bytes(self) -> int:
+        """Device bytes one page occupies across every layer leaf (K/V
+        payload + pos lane + any fp8 scales) — the allocation/accounting
+        unit of the paged layout."""
+        assert self.paged, "page_bytes requires the paged layout"
+        total = sum(leaf.nbytes
+                    for leaf in jax.tree_util.tree_leaves(self.cache))
+        return total // (self.n_pages + 1)
+
+    @property
     def pool_row_bytes(self) -> int:
         """Device bytes one slot-pool row occupies (same dtype-honest
-        accounting as ``arena_row_bytes``)."""
+        accounting as ``arena_row_bytes``).  Under the paged layout this
+        is the WORST-CASE footprint (a full page table); real usage is
+        per-request pages, which is the whole point."""
+        if self.paged:
+            return self._p_max * self.page_bytes
         total = sum(leaf.nbytes
                     for leaf in jax.tree_util.tree_leaves(self.cache))
         return total // self.n_slots
@@ -382,9 +669,19 @@ class PhaseExecutor:
         dispatch, so under a tight ``capacity_factor`` the active requests'
         outputs can differ (deterministically) from a smaller-batch run —
         the same effect batch composition has in any capacity-dropped MoE."""
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens, np.int32),
-            jnp.asarray(lengths, np.int32))
+        if self.paged:
+            rows = np.arange(self.n_slots)
+            li = np.asarray(lengths, np.int64)
+            psc = self._scatter_indices(rows, li, li > 0)
+            pgi = self._gather_indices(rows)
+            logits, self.cache = self._decode_paged(
+                self.params, self.cache, jnp.asarray(tokens, np.int32),
+                jnp.asarray(lengths, np.int32), jnp.asarray(psc),
+                jnp.asarray(pgi))
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens, np.int32),
+                jnp.asarray(lengths, np.int32))
         logits.block_until_ready()
         self.counters["decode_steps"] += 1
         return logits
@@ -406,10 +703,29 @@ class PhaseExecutor:
         if C > self.n_candidates:
             raise ValueError(f"{C} branches exceed the executor's "
                              f"n_candidates capacity ({self.n_candidates})")
-        logits, self.cache = self._decode_multi(
-            self.params, self.cache, jnp.asarray(tokens, np.int32),
-            jnp.asarray(lengths, np.int32), jnp.asarray(starts, np.int32),
-            jnp.asarray(counts, np.int32))
+        if self.paged:
+            # branch b of row i writes logical position
+            # starts[i] + b*stride + (lengths[i] - starts[i]); inactive
+            # rows and dummy branches resolve to the drop index here, on
+            # the host — the program itself is gating-free
+            rows = np.arange(self.n_slots)
+            li = np.asarray(lengths, np.int64)[:, None]
+            st = np.asarray(starts, np.int64)[:, None]
+            b = np.arange(C, dtype=np.int64)[None, :]
+            logical = st + b * self.branch_stride + (li - st)
+            valid = (li > 0) & (b < np.asarray(counts, np.int64)[:, None])
+            psc = self._scatter_indices(rows, logical, valid)
+            pgi = self._gather_indices(rows)
+            logits, self.cache = self._decode_multi_paged(
+                self.params, self.cache, jnp.asarray(tokens, np.int32),
+                jnp.asarray(lengths, np.int32),
+                jnp.asarray(starts, np.int32), jnp.asarray(psc),
+                jnp.asarray(pgi))
+        else:
+            logits, self.cache = self._decode_multi(
+                self.params, self.cache, jnp.asarray(tokens, np.int32),
+                jnp.asarray(lengths, np.int32),
+                jnp.asarray(starts, np.int32), jnp.asarray(counts, np.int32))
         logits.block_until_ready()
         self.counters["decode_steps"] += 1
         self.counters["decode_multi_steps"] += 1
@@ -447,6 +763,18 @@ class PhaseExecutor:
         are benign), so retiring several requests in one engine step costs
         one dispatch, not one per slot."""
         if not slots:
+            return
+        if self.paged:
+            # paged retire: drop the slot's page references; pages whose
+            # refcount hits zero (not still held by a store entry) get
+            # their pos lane cleared in one batched program
+            freed: List[int] = []
+            for s in dict.fromkeys(int(s) for s in slots):
+                pages = self._slot_pages.pop(s, None)
+                self._table_mat[s] = self._sentinel
+                if pages:
+                    freed += self.page_pool.release(pages)
+            self._free_pages_device(freed)
             return
         self.cache = self._clear_slots(self.cache, self._pad_ids(list(slots)))
 

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -135,6 +135,97 @@ class SlotPool:
 
 
 # ---------------------------------------------------------------------------
+# Paged layout: refcounted page allocator over the unified device pool
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Host-side allocator for the unified device KV page pool.
+
+    Under the paged layout both cache tiers share ONE device pool of
+    ``n_pages`` fixed-size pages (``page_size`` logical positions each);
+    a request's cache row becomes a per-slot PAGE TABLE (list of page
+    indices) and a stored prefix becomes extra references on the pages it
+    covers.  This class is the pure-host bookkeeping: a free list plus a
+    per-page refcount.  ``alloc`` claims virgin pages at refcount 1;
+    ``share`` adds a reference (zero-copy prefix save/hit — the device
+    bytes are never touched); ``release`` drops one and reports which
+    pages actually hit zero so the caller can clear their device ``pos``
+    lane (the executor's ``free_pages`` program).  A page with
+    refcount > 0 is PINNED: it is never on the free list, so it can never
+    be handed to another request — eviction of a store entry whose pages
+    a live slot still maps releases only the store's reference.
+
+    Like ``SlotPool``, a fully drained free list re-normalizes to the
+    virgin order so page assignment is a function of the workload, not of
+    how previous windows retired.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages <= 0:
+            raise ValueError(f"n_pages must be positive, got {n_pages}")
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._refs: List[int] = [0] * n_pages
+
+    def pages_for(self, n_positions: int) -> int:
+        """Pages covering ``n_positions`` logical cache positions."""
+        return -(-max(n_positions, 0) // self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` virgin pages at refcount 1; None (and NO partial
+        grant) when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError(f"alloc of {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def share(self, pages: List[int]) -> List[int]:
+        """Add one reference to each page (zero-copy mapping of live
+        content into another owner); returns the same list for chaining."""
+        for p in pages:
+            if self._refs[p] <= 0:
+                raise ValueError(f"share of free page {p}")
+        for p in pages:
+            self._refs[p] += 1
+        return list(pages)
+
+    def release(self, pages: List[int]) -> List[int]:
+        """Drop one reference per page; returns the pages whose refcount
+        hit zero (now back on the free list — the caller must clear their
+        device ``pos`` lane before they can be re-granted)."""
+        freed: List[int] = []
+        for p in pages:
+            if self._refs[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                freed.append(p)
+                self._free.append(p)
+        if len(self._free) == self.n_pages:
+            self._free = list(range(self.n_pages - 1, -1, -1))
+        return freed
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+
+# ---------------------------------------------------------------------------
 # Tier 2: content-addressed prefix store
 # ---------------------------------------------------------------------------
 
@@ -177,6 +268,9 @@ class PrefixEntry:
     n_tokens: int               # history tokens covered (item-aligned)
     refcount: int = 0           # in-flight requests pinned on this row
     digests: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+    # paged layout: the refcounted pool pages holding this prefix's K/V
+    # (``row`` stays -1 — there is no arena; eviction releases these refs)
+    pages: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def length(self) -> int:
@@ -214,7 +308,8 @@ class PrefixStore:
     def __init__(self, n_rows: int, row_bytes: int,
                  max_bytes: int = 0, n_codebooks: int = 3,
                  store_on_first_sight: bool = True,
-                 seen_capacity: int = 0):
+                 seen_capacity: int = 0,
+                 release_pages: Optional[Callable[[List[int]], None]] = None):
         if n_rows <= 0:
             raise ValueError(f"n_rows must be positive, got {n_rows}")
         self.n_rows = n_rows
@@ -222,6 +317,13 @@ class PrefixStore:
         self.max_bytes = max_bytes or n_rows * row_bytes
         self.n_codebooks = n_codebooks
         self.store_on_first_sight = store_on_first_sight
+        # paged layout: entries hold refcounted POOL PAGES instead of arena
+        # rows — ``n_rows`` caps entry count, ``row_bytes`` is the price of
+        # one PAGE, and eviction releases the entry's page references
+        # through this callback (the executor drops them back to the
+        # PagePool and clears freed pages' device ``pos`` lane)
+        self.page_mode = release_pages is not None
+        self._release_pages = release_pages
         self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
         # every item-boundary digest of every entry -> (entry key, boundary
         # tokens); one arena row serves all prefixes of its content
@@ -268,10 +370,16 @@ class PrefixStore:
 
     @property
     def bytes_used(self) -> int:
+        if self.page_mode:
+            return sum(len(e.pages) for e in self._entries.values()) \
+                * self.row_bytes
         return len(self._entries) * self.row_bytes
 
     @property
     def bytes_pinned(self) -> int:
+        if self.page_mode:
+            return sum(len(e.pages) for e in self._entries.values()
+                       if e.refcount > 0) * self.row_bytes
         return sum(1 for e in self._entries.values()
                    if e.refcount > 0) * self.row_bytes
 
@@ -369,9 +477,14 @@ class PrefixStore:
             if not seen:
                 self.first_sights += 1
                 return None
-        row = self._take_row()
-        if row is None:
-            return None
+        if self.page_mode:
+            if not self._admit_paged():
+                return None
+            row = -1   # no arena: the caller fills ``entry.pages`` instead
+        else:
+            row = self._take_row()
+            if row is None:
+                return None
         entry = PrefixEntry(key=key, row=row, n_tokens=n_tokens,
                             digests=digests)
         self._entries[key] = entry
@@ -383,25 +496,66 @@ class PrefixStore:
         self.insertions += 1
         return entry
 
+    def _evict_entry(self, key: str, entry: PrefixEntry) -> None:
+        """Drop ``entry`` from the index (it must be unpinned), returning
+        its page references (page mode) to the pool via the callback."""
+        del self._entries[key]
+        orphaned = [d for _, d in entry.digests
+                    if self._index.get(d, (None,))[0] == key]
+        for d in orphaned:
+            del self._index[d]
+        if orphaned:
+            # a surviving entry sharing a content prefix may still
+            # cover the dropped boundaries — re-claim them so its
+            # shorter prefixes keep hitting (bounded by
+            # n_rows x boundaries, and evictions are host-rare)
+            for k2, e2 in self._entries.items():
+                for n_tok, d in e2.digests:
+                    self._index.setdefault(d, (k2, n_tok))
+        self.evictions += 1
+        if self.page_mode and entry.pages:
+            self._release_pages(entry.pages)
+            entry.pages = []
+
+    def _lru_unpinned(self) -> Optional[Tuple[str, PrefixEntry]]:
+        for key, entry in self._entries.items():     # front = LRU
+            if entry.refcount == 0:
+                return key, entry
+        return None                                  # everything pinned
+
     def _take_row(self) -> Optional[int]:
         budget_rows = min(self.n_rows, self.max_bytes // self.row_bytes)
         if len(self._entries) < budget_rows and self._free_rows:
             return self._free_rows.pop()
-        for key, entry in self._entries.items():     # front = LRU
-            if entry.refcount == 0:
-                del self._entries[key]
-                orphaned = [d for _, d in entry.digests
-                            if self._index.get(d, (None,))[0] == key]
-                for d in orphaned:
-                    del self._index[d]
-                if orphaned:
-                    # a surviving entry sharing a content prefix may still
-                    # cover the dropped boundaries — re-claim them so its
-                    # shorter prefixes keep hitting (bounded by
-                    # n_rows x boundaries, and evictions are host-rare)
-                    for k2, e2 in self._entries.items():
-                        for n_tok, d in e2.digests:
-                            self._index.setdefault(d, (k2, n_tok))
-                self.evictions += 1
-                return entry.row
-        return None                                  # everything pinned
+        victim = self._lru_unpinned()
+        if victim is None:
+            return None
+        key, entry = victim
+        row = entry.row
+        self._evict_entry(key, entry)
+        return row
+
+    def _admit_paged(self) -> bool:
+        """Page-mode admission: make room under the entry-count cap and
+        the byte budget (evicting LRU unpinned entries); the PAGE budget
+        itself is the PagePool's — admission there is zero-cost (the new
+        entry only shares pages a live slot already holds)."""
+        while (len(self._entries) >= self.n_rows
+               or self.bytes_used > self.max_bytes):
+            victim = self._lru_unpinned()
+            if victim is None:
+                return False
+            self._evict_entry(*victim)
+        return True
+
+    def evict_for_pages(self) -> bool:
+        """Reclaim: evict ONE least-recently-used unpinned entry,
+        releasing its page references (page mode).  The scheduler calls
+        this in a loop when an admission needs more free pages than the
+        PagePool has — store capacity yields to in-flight requests.
+        Returns False when nothing is evictable (all pinned or empty)."""
+        victim = self._lru_unpinned()
+        if victim is None:
+            return False
+        self._evict_entry(*victim)
+        return True

@@ -259,6 +259,9 @@ class ContinuousScheduler:
         self.max_prefill_groups = max(1, max_prefill_groups)
         self.lookahead = lookahead or 4 * pool.n_slots
         self.decode_len = executor.cfg.decode_len
+        # paged layout: admission becomes a page grant, prefix save/hit
+        # become refcount edits on the executor's page pool
+        self.paged = bool(getattr(executor, "paged", False))
         self.occupancy: List[float] = []
         self.store = prefix_store
         self.policy = policy or SchedulingPolicy()
@@ -422,6 +425,27 @@ class ContinuousScheduler:
                                          max_tokens=len(r.tokens) - 1,
                                          chain=r.chain)
 
+    def _footprint(self, r: Request) -> int:
+        """Logical cache positions request ``r`` can ever occupy: profile +
+        history + one branch span per candidate it actually decodes with —
+        K=1 traffic reserves NO multi-candidate spans, which is the paged
+        layout's capacity win over the contiguous pool's static
+        ``(max_candidates - 1) * stride`` reservation."""
+        return (len(r.tokens) + 1
+                + r.n_candidates * self.executor.branch_stride)
+
+    def _pages_needed(self, r: Request,
+                      plan: Optional[Tuple[PrefixEntry, int]]) -> int:
+        """Fresh pages ``r``'s admission allocates: its footprint minus the
+        FULL pages a prefix hit maps read-only (a partially-matched
+        boundary page is copy-on-write — allocated fresh, so not
+        subtracted)."""
+        pp = self.executor.page_pool
+        # matched boundary (plan[1] tokens + profile), NOT the entry's full
+        # length — only pages wholly below the boundary are mapped shared
+        shared = ((plan[1] + 1) // pp.page_size) if plan is not None else 0
+        return pp.pages_for(self._footprint(r)) - shared
+
     def _bucket(self, r: Request,
                 plan: Optional[Tuple[PrefixEntry, int]]) -> Tuple[bool, int]:
         eff = len(r.tokens) - (plan[1] if plan is not None else 0)
@@ -454,7 +478,17 @@ class ContinuousScheduler:
         # (store full, everything older pinned): drop dead entries so the
         # batched scatter never writes one arena row from two slots
         live = [(slot, e) for slot, e in pending if self.store.is_live(e)]
-        if live:
+        if not live:
+            return
+        if self.paged:
+            # ZERO-COPY store admit: the entry becomes extra references on
+            # the donor slot's pages below the entry boundary — no arena,
+            # no device copy.  The donor only appends past the boundary,
+            # and restore COW-masks the boundary page's tail, so the
+            # shared content is immutable.
+            for slot, e in live:
+                e.pages = self.executor.share_prefix(slot, e.length)
+        else:
             self.executor.prefix_save([s for s, _ in live],
                                       [e.row for _, e in live])
 
@@ -489,8 +523,15 @@ class ContinuousScheduler:
                 entry = self.store.insert(r.profile, r.tokens, n_full,
                                           chain=r.chain, force=True)
                 if entry is not None and self.store.is_live(entry):
-                    # copy BEFORE free_slots clears the row's occupancy
-                    self.executor.prefix_save([slot], [entry.row])
+                    if self.paged:
+                        # reference the slot's pages BEFORE free_slots
+                        # drops them — the store's refs keep the prefix
+                        # alive after the slot's own refs go
+                        entry.pages = self.executor.share_prefix(
+                            slot, entry.length)
+                    else:
+                        # copy BEFORE free_slots clears the row's occupancy
+                        self.executor.prefix_save([slot], [entry.row])
         old = self._slot_entry.pop(slot, None)
         if old is not None:
             self.store.release(old)
@@ -621,21 +662,41 @@ class ContinuousScheduler:
         chosen = set(order[:self.max_prefill_groups])
         joiners: List[Request] = []
         groups: Dict[Tuple[bool, int], List[Request]] = {}
+        committed = 0   # pages claimed by already-selected joiners (paged)
         for r in window:
             if len(joiners) >= free:
                 break
             b = bucket_of[id(r)]
-            if b in chosen:
-                groups.setdefault(b, []).append(r)
-                joiners.append(r)
-        # pin every admitted hit NOW: this round's store inserts may evict
-        # any unpinned entry, and a plan must not go stale mid-round
-        for r in joiners:
+            if b not in chosen:
+                continue
             plan = plans[id(r)]
-            if plan is not None:
+            if self.paged:
+                # paged admission gate: this request needs its footprint's
+                # pages minus whatever a prefix hit maps in read-only.  Pin
+                # the hit FIRST so reclaim can't evict it, then evict LRU
+                # store entries until the grant fits; if the pool still
+                # can't cover it, stop admitting this round.
+                if plan is not None and not self.store.is_live(plan[0]):
+                    continue    # reclaimed moments ago: re-plan next round
+                if plan is not None:
+                    self.store.acquire(plan[0])
+                need = self._pages_needed(r, plan)
+                while self.executor.page_pool.n_free - committed < need:
+                    if self.store is None or not self.store.evict_for_pages():
+                        break
+                if self.executor.page_pool.n_free - committed < need:
+                    if plan is not None:
+                        self.store.release(plan[0])
+                    break
+                committed += need
+            elif plan is not None:
+                # pin every admitted hit NOW: this round's store inserts may
+                # evict any unpinned entry; a plan must not go stale mid-round
                 self.store.acquire(plan[0])
             if self.store is not None:
                 self.store.note_admission(plan[1] if plan else None)
+            groups.setdefault(b, []).append(r)
+            joiners.append(r)
         taken = {id(r) for r in joiners}
         if taken:  # one O(len(queue)) rotation, preserving order
             for _ in range(len(queue)):
@@ -660,8 +721,19 @@ class ContinuousScheduler:
                 # restore masks the row down to it, so an entry longer
                 # than the match never leaks positions past the boundary
                 starts = [n_tok + 1 for _, n_tok in group_plans]
-                self.executor.prefix_copy_insert(
-                    [p.row for p, _ in group_plans], slots, starts)
+                if self.paged:
+                    # ZERO-COPY hit: map the entry's pages read-only into
+                    # the new slot's table (+ at most one boundary COW) —
+                    # the join gate above reserved the fresh pages
+                    for slot, r, (entry, n_tok) in zip(slots, group,
+                                                       group_plans):
+                        ok = self.executor.attach_prefix(
+                            slot, entry.pages, n_tok + 1,
+                            self._footprint(r))
+                        assert ok, "page grant raced the admission gate"
+                else:
+                    self.executor.prefix_copy_insert(
+                        [p.row for p, _ in group_plans], slots, starts)
                 suffixes = [r.tokens[n_tok:]
                             for r, (_, n_tok) in zip(group, group_plans)]
                 first_lens = [self.policy.first_segment(len(s))
@@ -670,6 +742,11 @@ class ContinuousScheduler:
                     [s[:n] for s, n in zip(suffixes, first_lens)],
                     slots, starts)
             else:
+                if self.paged:
+                    for slot, r in zip(slots, group):
+                        ok = self.executor.grant_slot(slot,
+                                                      self._footprint(r))
+                        assert ok, "page grant raced the admission gate"
                 starts = [1] * len(group)          # after the profile token
                 first_lens = [self.policy.first_segment(len(r.tokens))
                               for r in group]

@@ -13,7 +13,10 @@ multi-candidate).  Random interleavings of submit/step/cancel/drain with
 ALL of them enabled must never leak: slot-pool free count, prefix-store
 refcounts, and the chunked-prefill `_pending` segment map return to
 baseline after `drain()`, and the completions are exactly the
-non-cancelled submissions.
+non-cancelled submissions.  The paged-KV variant adds page accounting
+(no leaked device pages, refcounts equal the store's references), and a
+pure ``PagePool`` property drives random alloc/share/release
+interleavings against a counting model.
 
 All configs lift the MoE capacity bound (capacity_factor=64) so batch
 composition cannot perturb outputs — comparisons are exact
@@ -29,6 +32,7 @@ from _hypothesis_compat import hypothesis, st
 from repro.configs.base import OneRecConfig, TransformerConfig
 from repro.models import onerec as onerec_model
 from repro.serving import EngineConfig, ServingEngine
+from repro.serving.kv_cache import PagePool
 from repro.serving.requests import make_request
 
 hypothesis.settings.register_profile(
@@ -246,15 +250,9 @@ _OPS = st.lists(
     max_size=12)
 
 
-@hypothesis.given(ops=_OPS)
-def test_lifecycle_interleavings_never_leak(mc_setup, prop_engine, ops):
-    """Property: any interleaving of submit/step/cancel/drain — with
-    chunked prefill, hold windows, preemption, the prefix store, and
-    mixed candidate widths all live — returns the engine to baseline:
-    no held slots, no pinned store rows, no orphaned prefill segments,
-    and completions exactly equal to the non-cancelled submissions."""
-    cfg, params, reqs = mc_setup
-    eng = prop_engine
+def _drive_lifecycle(eng, reqs, ops):
+    """Run one op interleaving to quiescence, assert the leak-freedom
+    invariants shared by the contiguous and paged engines."""
     handles, cancelled = [], set()
     for op, a, prio, k in ops:
         if op == "submit" and len(handles) < 6:
@@ -289,3 +287,105 @@ def test_lifecycle_interleavings_never_leak(mc_setup, prop_engine, ops):
             assert len(h.completion.items) == h._request.n_candidates
             assert h.completion.scores == sorted(h.completion.scores,
                                                  reverse=True)
+
+
+@hypothesis.given(ops=_OPS)
+def test_lifecycle_interleavings_never_leak(mc_setup, prop_engine, ops):
+    """Property: any interleaving of submit/step/cancel/drain — with
+    chunked prefill, hold windows, preemption, the prefix store, and
+    mixed candidate widths all live — returns the engine to baseline:
+    no held slots, no pinned store rows, no orphaned prefill segments,
+    and completions exactly equal to the non-cancelled submissions."""
+    cfg, params, reqs = mc_setup
+    _drive_lifecycle(prop_engine, reqs, ops)
+
+
+@pytest.fixture(scope="module")
+def paged_prop_engine(mc_setup):
+    """The prop_engine feature set on the paged KV layout (small pages so
+    every request spans several and boundary COWs occur)."""
+    cfg, params, _ = mc_setup
+    return ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, n_slots=3, mode="continuous", max_candidates=2,
+        prefix_cache=True, prefill_chunk=6, hold_k=2, hold_ms=5.0,
+        preemption=True, paged=True, page_size=8))
+
+
+@hypothesis.given(ops=_OPS)
+def test_paged_lifecycle_interleavings_never_leak(mc_setup,
+                                                  paged_prop_engine, ops):
+    """The lifecycle property on the paged layout, plus page accounting:
+    after drain() every page's refcount equals the number of prefix-store
+    entries referencing it (a page pinned by a live reference is never on
+    the free list), no slot still maps pages, and the used-page count is
+    exactly the store's working set — nothing leaked, nothing freed early."""
+    cfg, params, reqs = mc_setup
+    eng = paged_prop_engine
+    _drive_lifecycle(eng, reqs, ops)
+    pool = eng.executor.page_pool
+    assert not eng.executor._slot_pages        # no slot holds pages
+    expect = {}                                # page -> expected refcount
+    for e in eng.prefix_store._entries.values():
+        for p in e.pages:
+            expect[p] = expect.get(p, 0) + 1
+    assert pool.n_used == len(expect)
+    for p in range(pool.n_pages):
+        assert pool.refcount(p) == expect.get(p, 0)
+
+
+# ---------------------------------------------------------------------------
+# PagePool allocator property: alloc/share/release against a counting model
+# ---------------------------------------------------------------------------
+
+
+_PAGE_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "share", "release"]),
+              st.integers(0, 7),      # which held reference to act on
+              st.integers(1, 5)),     # allocation size (may exceed free)
+    max_size=24)
+
+
+@hypothesis.given(ops=_PAGE_OPS)
+def test_page_pool_never_leaks(ops):
+    """Property: random alloc/share/release interleavings keep ``PagePool``
+    consistent with a reference counting model — allocation is
+    all-or-nothing, a page with live references is never re-granted
+    (share models both prefix sharing and COW donors; eviction is just the
+    release of a reference), and draining every reference restores the
+    whole pool to free."""
+    pool = PagePool(8, 4)
+    held = []                                  # live page-list references
+    for op, idx, n in ops:
+        if op == "alloc":
+            pages = pool.alloc(n)
+            if pages is None:
+                assert n > pool.n_free         # refusal only when short
+            else:
+                assert len(pages) == n
+                for p in pages:
+                    assert pool.refcount(p) == 1
+                held.append(list(pages))
+        elif op == "share" and held:
+            pages = held[idx % len(held)]
+            held.append(list(pool.share(pages)))
+        elif op == "release" and held:
+            pages = held.pop(idx % len(held))
+            for p in pool.release(pages):
+                assert pool.refcount(p) == 0
+    # model check: refcounts match the held references exactly
+    expect = {}
+    for lst in held:
+        for p in lst:
+            expect[p] = expect.get(p, 0) + 1
+    assert pool.n_used == len(expect)
+    for p in range(pool.n_pages):
+        assert pool.refcount(p) == expect.get(p, 0)
+    # a pinned page is never handed out while a reference is live
+    grabbed = pool.alloc(pool.n_free)
+    assert grabbed is not None and not (set(grabbed) & set(expect))
+    # drain: releasing every reference returns the pool to baseline
+    pool.release(grabbed)
+    for lst in held:
+        pool.release(lst)
+    assert pool.n_free == pool.n_pages and pool.n_used == 0
+    assert all(pool.refcount(p) == 0 for p in range(pool.n_pages))

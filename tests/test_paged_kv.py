@@ -1,0 +1,182 @@
+"""Paged KV pool vs the contiguous seed layout: differential parity.
+
+The paged layout (one refcounted device page pool + per-slot page tables,
+``EngineConfig.paged``) must be TOKEN-IDENTICAL to the contiguous slot
+pool + prefix arena it replaces — same requests, same completions — for
+BF16 and FP8 KV storage, and composed with every serving feature that
+touches the cache: the tier-2 prefix store (zero-copy page-table hits +
+boundary COW vs ``prefix_copy_insert`` row copies), chunked prefill,
+preemption park/resume, and K=4 tree decode.
+
+All configs lift the MoE capacity bound (capacity_factor=64) so batch
+composition cannot perturb outputs — comparisons are exact
+token-for-token (see docs/serving.md on capacity-dropped MoE determinism).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.models import onerec as onerec_model
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.requests import make_request
+
+SEED = 23
+PAGE = 8          # small pages force multi-page tables + boundary COWs
+
+KV_IDS = ["bf16", "fp8kv"]
+KV_DTYPES = ["bfloat16", "float8_e4m3fn"]
+
+
+def _cfg() -> OneRecConfig:
+    return OneRecConfig(
+        name="onerec-paged-test",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-paged-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+def _request_dicts(cfg, n, rng, n_candidates=1):
+    reqs = []
+    for _ in range(n):
+        n_items = int(rng.integers(2, cfg.history_len + 1))
+        reqs.append(make_request(
+            rng.integers(0, 192, size=n_items * cfg.n_codebooks),
+            rng.normal(size=onerec_model.PROFILE_DIM),
+            n_candidates=n_candidates))
+    return reqs
+
+
+def _pair(params, cfg, kv_dtype, **kw):
+    """(contiguous, paged) engines differing ONLY in the KV layout."""
+    base = dict(batch_size=4, n_slots=3, mode="continuous", use_fp8=False,
+                kv_dtype=kv_dtype)
+    base.update(kw)
+    return (ServingEngine(params, cfg, EngineConfig(**base)),
+            ServingEngine(params, cfg, EngineConfig(paged=True,
+                                                    page_size=PAGE,
+                                                    **base)))
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    cfg = _cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    reqs = _request_dicts(cfg, 8, np.random.default_rng(SEED))
+    return cfg, params, reqs
+
+
+@pytest.mark.parametrize("kv", KV_DTYPES, ids=KV_IDS)
+def test_paged_matches_contiguous_plain(paged_setup, kv):
+    """Ragged K=1 traffic through the paged engine is token-identical to
+    the contiguous layout, with zero full-row copies by construction."""
+    cfg, params, reqs = paged_setup
+    ref_e, pag_e = _pair(params, cfg, kv)
+    ref, _ = ref_e.serve_requests(reqs)
+    out, stats = pag_e.serve_requests(reqs)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert stats["pages_total"] > 0
+    assert stats["prefix_row_copies"] == 0.0
+    assert stats["cow_copies"] == 0.0            # no store, no hits, no COW
+
+
+@pytest.mark.parametrize("kv", KV_DTYPES, ids=KV_IDS)
+def test_paged_prefix_cache_warm_parity(paged_setup, kv):
+    """Prefix-store hits: a paged hit is a page-table edit (+ at most one
+    boundary COW) where the contiguous layout pays a full-row device copy;
+    cold and warm passes must stay token-identical across layouts."""
+    cfg, params, reqs = paged_setup
+    ref_e, pag_e = _pair(params, cfg, kv, prefix_cache=True)
+    ref_cold, _ = ref_e.serve_requests(reqs)
+    out_cold, _ = pag_e.serve_requests(reqs)
+    ref_warm, ref_stats = ref_e.serve_requests(reqs)
+    out_warm, stats = pag_e.serve_requests(reqs)
+    for a, b in zip(out_cold, ref_cold):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(out_warm, ref_warm):
+        np.testing.assert_array_equal(a, b)
+    # identical scheduling: same lookups land the same hits on both arms
+    assert stats["prefix_hits"] == ref_stats["prefix_hits"] > 0
+    # the tentpole claim: zero full-row K/V copies on the paged hit path,
+    # at most one COW page per hit; the contiguous arm pays one row copy
+    # per hit
+    assert stats["prefix_row_copies"] == 0.0
+    assert stats["cow_copies"] <= stats["prefix_hits"]
+    assert ref_stats["prefix_row_copies"] == ref_stats["prefix_hits"] > 0
+
+
+def test_paged_chunked_prefill_parity(paged_setup):
+    """Chunked-prefill segments land in granted pages via the paged resume
+    program; composed with the store, both passes match the contiguous
+    engine."""
+    cfg, params, reqs = paged_setup
+    ref_e, pag_e = _pair(params, cfg, "float8_e4m3fn", prefix_cache=True,
+                         prefill_chunk=6)
+    for _ in range(2):                           # cold, then warm
+        ref, _ = ref_e.serve_requests(reqs)
+        out, _ = pag_e.serve_requests(reqs)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_paged_preemption_park_resume(paged_setup):
+    """Preemption under the paged layout parks the victim's K/V as page
+    references (share, no copy) and resumes it through a page-table hit;
+    the interleaving and every completion must match the contiguous arm."""
+    cfg, params, reqs = paged_setup
+
+    def drive(eng):
+        low = [eng.submit(dict(r, priority=1)) for r in reqs[:2]]
+        eng.step()                               # both admitted + decoding
+        high = eng.submit(dict(reqs[2], priority=0))
+        eng.drain()
+        return [h.completion.item for h in low + [high]], eng.stats()
+
+    ref_e, pag_e = _pair(params, cfg, "float8_e4m3fn", n_slots=2,
+                         prefix_cache=True, preemption=True)
+    ref, ref_stats = drive(ref_e)
+    out, stats = drive(pag_e)
+    assert stats["preemptions"] >= 1             # the scenario actually ran
+    assert stats["preemptions"] == ref_stats["preemptions"]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert stats["prefix_row_copies"] == 0.0
+
+
+def test_paged_tree_decode_parity(paged_setup):
+    """K=4 tree decode: branch spans allocate pages on demand; ranked
+    candidate sets and scores must match the contiguous reserved-span
+    layout exactly."""
+    cfg, params, _ = paged_setup
+    reqs = _request_dicts(cfg, 6, np.random.default_rng(SEED + 1),
+                          n_candidates=4)
+    ref_e, pag_e = _pair(params, cfg, "float8_e4m3fn", max_candidates=4)
+
+    def collect(eng):
+        handles = [eng.submit(r) for r in reqs]
+        eng.drain()
+        return [h.completion for h in handles]
+
+    for a, b in zip(collect(pag_e), collect(ref_e)):
+        assert a.scores == b.scores
+        for x, y in zip(a.items, b.items):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_paged_validation(paged_setup):
+    cfg, params, _ = paged_setup
+    with pytest.raises(ValueError):     # paged requires continuous mode
+        ServingEngine(params, cfg, EngineConfig(mode="fixed", paged=True))
+    with pytest.raises(ValueError):     # page_size must be positive
+        ServingEngine(params, cfg, EngineConfig(
+            mode="continuous", paged=True, page_size=0))
+    with pytest.raises(ValueError):     # pool below one request's footprint
+        ServingEngine(params, cfg, EngineConfig(
+            mode="continuous", paged=True, page_size=PAGE, n_pages=1))
