@@ -165,6 +165,17 @@ def decode_attention_roofline(batch: Optional[int] = None,
     padding is bounded by ``page_size / S``) — the layout's capacity win
     (see the ``paged_kv`` serving bench) costs a few percent on the
     bandwidth roof, asserted < 25%.
+
+    The PAGED-FUSED rows price the fused Pallas decode kernel
+    (``kernels/paged_decode``): the unfused paged chain materializes the
+    gathered dense view in HBM (pool read + view write + view read), and
+    under FP8 storage additionally round-trips a dequantized bf16 copy —
+    the fused kernel streams each physical page HBM->VMEM exactly once
+    and dequantizes in registers, so its traffic is the raw payload
+    stream + the table.  FP8-in-register is where the two layouts
+    compound: ``head_dim + 4`` bytes per (position, head), read once —
+    the highest arithmetic intensity on the table (asserted > the bf16
+    fused row's, which in turn beats every unfused row).
     """
     from repro.configs import registry  # deferred: dry-run paths need no jax
 
@@ -198,6 +209,37 @@ def decode_attention_roofline(batch: Optional[int] = None,
                 "dominant": ("compute" if t_compute >= t_memory
                              else "memory"),
             })
+    # fused-kernel rows: the unfused paged chain materializes the gathered
+    # view (pool read + view write + view read) and, under FP8, round-trips
+    # a dequantized bf16 copy; the fused kernel streams the payload ONCE
+    # and dequantizes in registers, so its bytes are payload + table
+    for kv_dtype in ("bfloat16", "float8_e4m3fn"):
+        per_head = kv_bytes_per_pos_head(t.head_dim, kv_dtype)
+        s_eff = n_pages_row * page_size
+        payload = 2 * t.n_layers * B * s_eff * t.n_kv_heads * per_head
+        table_bytes = t.n_layers * B * n_pages_row * 4
+        total = payload + table_bytes
+        chain = 3 * payload + table_bytes
+        if "float8" in kv_dtype:
+            chain += 2 * (2 * t.n_layers * B * s_eff * t.n_kv_heads
+                          * 2 * t.head_dim)
+        t_compute = flops / PEAK_FLOPS
+        t_memory = total / HBM_BW
+        rows.append({
+            "arch": cfg.name, "kv_dtype": kv_dtype, "layout": "paged-fused",
+            "batch": B, "kv_len": S, "kv_len_padded": s_eff,
+            "page_size": page_size,
+            "attn_flops": flops, "kv_bytes": payload,
+            "page_table_bytes": table_bytes,
+            "bytes_per_pos_head": per_head,
+            "arithmetic_intensity": flops / total,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "dominant": "compute" if t_compute >= t_memory else "memory",
+            "programs_per_decode_step": 1,       # select folded in; the
+            "unfused_programs_per_decode_step": 2,  # chain also dispatches
+            "unfused_chain_bytes": chain,           # a select program
+            "chain_traffic_reduction": chain / total,
+        })
     bf = rows[0]                       # bf16 contiguous is the baseline
     for r in rows:
         r["memory_term_speedup_vs_bf16"] = \
@@ -212,6 +254,20 @@ def decode_attention_roofline(batch: Optional[int] = None,
     assert all(r["dominant"] == "memory" for r in rows
                if "float8" in r["kv_dtype"]), \
         "decode attention must stay HBM-bound — check the constants"
+    fused = [r for r in rows if r["layout"] == "paged-fused"]
+    assert all(r["chain_traffic_reduction"] > 1.0 for r in fused)
+    # within the paged layout the fp8-in-register row is the highest-
+    # intensity operating point: it ties the idealized fp8 single-stream
+    # row (same payload bytes — but the unfused chain only achieves that
+    # stream by paying ``unfused_chain_bytes`` of materialization traffic)
+    # and strictly beats every bf16 row
+    top_paged_ai = max(r["arithmetic_intensity"] for r in rows
+                       if r["layout"] in ("paged", "paged-fused"))
+    fp8_fused = next(r for r in fused if "float8" in r["kv_dtype"])
+    assert fp8_fused["arithmetic_intensity"] >= top_paged_ai
+    assert all(fp8_fused["arithmetic_intensity"] > r["arithmetic_intensity"]
+               for r in rows if "float8" not in r["kv_dtype"]), \
+        "fp8-in-register must beat every bf16 decode row's intensity"
     return rows
 
 
@@ -221,8 +277,12 @@ def format_decode_attention(rows: List[Dict]) -> str:
            f"{'mem(s)':>9s} {'dom':>6s} {'vs bf16':>8s} {'pg ovh':>7s}")
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
-        ovh = (f"{100 * r['paged_overhead']:6.2f}%"
-               if r["layout"] == "paged" else f"{'—':>7s}")
+        if r["layout"] == "paged":
+            ovh = f"{100 * r['paged_overhead']:6.2f}%"
+        elif r["layout"] == "paged-fused":
+            ovh = f"x{r['chain_traffic_reduction']:5.1f}c"
+        else:
+            ovh = f"{'—':>7s}"
         lines.append(
             f"{r['kv_dtype']:22s} {r['layout']:>11s} "
             f"{r['bytes_per_pos_head']:10.0f} "

@@ -53,6 +53,12 @@ def main():
                          "allocate pages on demand (continuous mode only)")
     ap.add_argument("--page-size", type=int, default=32,
                     help="positions per KV page under --paged")
+    ap.add_argument("--fused-decode", choices=("off", "auto", "interpret"),
+                    default="off",
+                    help="paged decode through the fused Pallas kernel "
+                         "(decode + select in one program per step); "
+                         "'auto' falls back with one logged line off-TPU, "
+                         "'interpret' forces the kernel on CPU")
     ap.add_argument("--n-candidates", type=int, default=1,
                     help="ranked candidate items per request (tree decode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -69,7 +75,8 @@ def main():
         batch_size=args.batch, use_fp8=args.fp8, mode=args.mode,
         kv_dtype="float8_e4m3fn" if args.kv_fp8 else "bfloat16",
         n_slots=args.slots, max_candidates=args.n_candidates,
-        paged=args.paged, page_size=args.page_size))
+        paged=args.paged, page_size=args.page_size,
+        fused_decode=args.fused_decode))
 
     # 1. submit: non-blocking, the engine does no work yet
     handles = [engine.submit(r) for r in requests]
@@ -107,6 +114,12 @@ def main():
               f"programs advanced {stats['branches_per_decode_step']:.1f} "
               f"branches per decode dispatch")
 
+    if args.fused_decode != "off":
+        print(f"fused decode: mode={stats['fused_decode_mode']} | "
+              f"{int(stats['fused_decode_steps'])}/"
+              f"{int(stats['decode_steps'])} decode steps fused | "
+              f"{int(stats['fused_select_hits'])} select dispatches "
+              f"folded in")
     if args.paged:
         print(f"paged KV: {int(stats['pages_total'])} pages of "
               f"{int(stats['page_size'])} positions "

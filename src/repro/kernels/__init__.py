@@ -3,5 +3,8 @@
 #   fp8_grouped_gemm  — block-scaled (1x128 / 128x128) MoE grouped GEMM
 #   radix_topk        — RadixTopK (TPU adaptation: histogram radix select)
 #   batch_attention   — large-batch short-context fused attention
+#   paged_decode      — paged-KV decode: page-table gather via scalar
+#                       prefetch, in-register FP8 dequant, branch-tree
+#                       mask, online softmax — one program per step
 # Each: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper with
 # interpret-mode fallback on CPU), ref.py (pure-jnp oracle).

@@ -1,0 +1,65 @@
+"""Layout wrapper: serving-cache leaves + page tables <-> kernel layout.
+
+Unlike ``batch_attention.ops`` this wrapper carries no jit of its own — it
+is designed to be traced INSIDE the executor's fused decode program, so the
+page-table gather, FP8 in-register dequant, tree mask, online softmax, and
+the downstream top-k/logsumexp all land in ONE compiled dispatch per step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_decode.kernel import paged_decode_pallas
+
+# any logical position is < table_entries * page_size, so a start pushed to
+# this value makes the whole row "shared prefix" — single-token decode is
+# the one-branch tree with a dead span term.  A plain Python int: a jnp
+# constant here would be created at import time, and the first import can
+# happen INSIDE a jit trace (the executor's fused decode program), leaking
+# a tracer into module state.
+_FAR_START = 2 ** 30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_decode_attention(q: jax.Array, cache: Dict[str, jax.Array],
+                           tables: jax.Array, lengths: jax.Array,
+                           starts: Optional[jax.Array] = None, *,
+                           page_size: int, branch_stride: int = 1,
+                           scale: float = 0.0,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, C, H, hd) post-RoPE queries (C = 1 or the branch width);
+    ``cache`` holds the POST-WRITE paged pool leaves — k/v (NPos, Kv, hd),
+    pos (NPos,), plus k_scale/v_scale (NPos, Kv) when the pool stores FP8
+    — and ``tables`` (B, P) the per-slot physical page per logical entry.
+    ``starts=None`` selects single-token decode (every row one branch whose
+    mask reduces to position validity).  Returns (B, C, H * hd)."""
+    b, c, h, hd = q.shape
+    kv = cache["k"].shape[-2]
+    g = h // kv
+    scale = scale or 1.0 / math.sqrt(hd)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if starts is None:
+        starts = jnp.full((b,), _FAR_START, jnp.int32)
+        branch_stride = 1          # span term is dead past _FAR_START
+    qk = (q.reshape(b, c, kv, g, hd)
+          .transpose(0, 2, 1, 3, 4).reshape(b, kv, c * g, hd))
+    pos_pages = cache["pos"].reshape(-1, page_size)
+    out = paged_decode_pallas(
+        qk, cache["k"], cache["v"], pos_pages,
+        cache.get("k_scale"), cache.get("v_scale"),
+        tables.astype(jnp.int32), lengths.astype(jnp.int32),
+        starts.astype(jnp.int32),
+        page_size=page_size, group=g,
+        branch_stride=max(int(branch_stride), 1), scale=scale,
+        out_dtype=q.dtype, interpret=bool(interpret))
+    return (out.reshape(b, kv, c, g, hd)
+            .transpose(0, 2, 1, 3, 4).reshape(b, c, h * hd))

@@ -106,6 +106,16 @@ def main():
     ap.add_argument("--pages", type=int, default=0,
                     help="page-pool size under --paged (0 = auto-size to "
                          "the contiguous layout's slot+arena footprint)")
+    ap.add_argument("--fused-decode", choices=("off", "auto", "interpret"),
+                    default="off",
+                    help="route paged decode through the fused Pallas "
+                         "kernel (page-table gather on device, fp8 dequant "
+                         "in registers, tree mask + online softmax + top-k "
+                         "select in ONE program per step). 'auto' uses the "
+                         "compiled kernel on TPU and logs a one-line "
+                         "fallback to the unfused path off-TPU or without "
+                         "--paged; 'interpret' forces Pallas interpret "
+                         "mode (CPU parity runs)")
     ap.add_argument("--seed", type=int, default=0,
                     help="seeds the params AND the synthetic workload "
                          "(the engine itself is deterministic); one seed "
@@ -125,7 +135,8 @@ def main():
         store_on_first_sight=not args.second_sight,
         prefill_chunk=args.prefill_chunk, preemption=args.preemption,
         max_candidates=args.n_candidates,
-        paged=args.paged, page_size=args.page_size, n_pages=args.pages))
+        paged=args.paged, page_size=args.page_size, n_pages=args.pages,
+        fused_decode=args.fused_decode))
     requests = build_requests(cfg, args.requests, batch, args.seed,
                               args.ragged, n_candidates=args.n_candidates)
 
@@ -160,6 +171,12 @@ def main():
               f"{int(stats['kv_bytes_pinned'])} B pinned after drain) | "
               f"prefix hits: {int(stats['prefix_row_copies'])} full-row "
               f"copies, {int(stats['cow_copies'])} COW page copies")
+    if args.fused_decode != "off":
+        print(f"[serve] fused decode: mode={stats['fused_decode_mode']} | "
+              f"{int(stats['fused_decode_steps'])}/"
+              f"{int(stats['decode_steps'])} decode steps fused | "
+              f"{int(stats['fused_select_hits'])} select dispatches "
+              f"folded into the decode program")
     if args.prefix_cache:
         print(f"[serve] prefix cache: hit-rate "
               f"{stats['prefix_hit_rate']:.2f} "

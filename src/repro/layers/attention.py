@@ -262,6 +262,9 @@ def apply_attention(
     branch_counts: Optional[jax.Array] = None,
     page_scatter: Optional[jax.Array] = None,
     page_gather: Optional[jax.Array] = None,
+    page_tables: Optional[jax.Array] = None,
+    page_size: int = 0,
+    fused_interpret: Optional[bool] = None,
     norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """One attention layer.
@@ -305,6 +308,13 @@ def apply_attention(
     gathered view IS logical position s — the causal/tree masks below
     apply to the view unchanged, and unmapped logical pages read the
     sentinel page (``pos = -1``, masked out, exactly-zero probability).
+
+    ``page_tables`` (B, P) + ``page_size`` route the paged DECODE modes
+    through the fused Pallas kernel (``kernels/paged_decode``) instead of
+    the dense gather: the page table rides into the kernel as a scalar-
+    prefetch operand, FP8 K/V dequantizes in registers, and the tree mask
+    + online softmax run per page block.  ``fused_interpret`` forces (or
+    suppresses) Pallas interpret mode; None = interpret off-TPU.
     """
     B, T, _ = x.shape
     H, K, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
@@ -332,13 +342,19 @@ def apply_attention(
     v = constrain(v, ("batch", "seq", "kv_heads", None))
 
     new_cache = None
-    if cache is not None and page_gather is not None:
-        # ---- paged cache: scatter writes, gather a logically dense view --
+    if cache is not None and (page_gather is not None
+                              or page_tables is not None):
+        # ---- paged cache: scatter writes, then either the fused Pallas
+        # read (page_tables: page-table gather + in-register dequant + tree
+        # mask + online softmax in ONE kernel, decode modes only) or the
+        # dense logical view (page_gather) --
         if spec.window:
             raise ValueError("paged cache requires full attention")
         if page_scatter is None:
             raise ValueError("paged cache requires page_scatter")
-        pgi = page_gather.astype(jnp.int32)               # (B, Sp)
+        if page_gather is None and fill_cache:
+            raise ValueError("paged prefill requires page_gather (the "
+                             "fused kernel covers decode modes only)")
         psc = page_scatter.astype(jnp.int32)
         if fill_cache:
             # resume prefill: suffix K/V at host-resolved physical slots
@@ -374,38 +390,53 @@ def apply_attention(
             cvs = cache["v_scale"].at[psc].set(v_sc, mode="drop")
             new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
 
-        # per-row dense view: (B, Sp) physical indices -> (B, Sp, K, hd);
-        # view index == logical position, so the contiguous-path masks
-        # apply verbatim with S -> Sp
-        ckv = constrain(ck[pgi], ("batch", "kv_seq", "kv_heads", None))
-        cvv = constrain(cv[pgi], ("batch", "kv_seq", "kv_heads", None))
-        cposv = cpos[pgi]                                 # (B, Sp)
-        ckv, cvv = _read_kv(ckv, cvv,
-                            None if cks is None else cks[pgi],
-                            None if cvs is None else cvs[pgi], q.dtype)
-        G = H // K
-        Sp = pgi.shape[1]
-        qh = q.reshape(B, T, K, G, hd)
-        scores = _gqa_scores(qh, ckv, spec.scale)         # (B,K,G,T,Sp)
-        if fill_cache:
-            valid = (cposv[:, None, :] >= 0) \
-                & (cposv[:, None, :] <= q_pos[:, :, None])    # (B,T,Sp)
-        elif branch_stride is not None:
-            st = starts.astype(jnp.int32)
-            R = branch_stride
-            b_off = jnp.arange(T, dtype=jnp.int32)[None, :] * R   # (1, C)
-            phys = jnp.arange(Sp, dtype=jnp.int32)[None, None, :]
-            own_lo = (st[:, None] + b_off)[..., None]     # (B, C, 1)
-            shared = phys < st[:, None, None]
-            own = (phys >= own_lo) & (phys < own_lo + R)
-            valid = (cposv[:, None, :] >= 0) \
-                & (cposv[:, None, :] <= idx[:, None, None]) \
-                & (shared | own)                          # (B, C, Sp)
+        if page_tables is not None and not fill_cache:
+            # fused read over the POST-WRITE pool: the kernel resolves the
+            # page table on device (scalar prefetch), so no (B, Sp) dense
+            # view is ever materialized — O(mapped pages) per row, not
+            # O(max_len), and the FP8 dequant happens in registers
+            from repro.kernels.paged_decode.ops import paged_decode_attention
+            out = paged_decode_attention(
+                q, new_cache, page_tables, idx,
+                starts if branch_stride is not None else None,
+                page_size=page_size,
+                branch_stride=branch_stride if branch_stride else 1,
+                scale=spec.scale, interpret=fused_interpret)
+            out = out.astype(x.dtype)
         else:
-            valid = ((cposv >= 0)
-                     & (cposv <= idx[:, None]))[:, None]  # (B, 1, Sp)
-        probs = _masked_softmax(scores, valid[:, None, None])
-        out = _gqa_combine(probs, cvv).reshape(B, T, H * hd)
+            # per-row dense view: (B, Sp) physical indices ->
+            # (B, Sp, K, hd); view index == logical position, so the
+            # contiguous-path masks apply verbatim with S -> Sp
+            pgi = page_gather.astype(jnp.int32)           # (B, Sp)
+            ckv = constrain(ck[pgi], ("batch", "kv_seq", "kv_heads", None))
+            cvv = constrain(cv[pgi], ("batch", "kv_seq", "kv_heads", None))
+            cposv = cpos[pgi]                             # (B, Sp)
+            ckv, cvv = _read_kv(ckv, cvv,
+                                None if cks is None else cks[pgi],
+                                None if cvs is None else cvs[pgi], q.dtype)
+            G = H // K
+            Sp = pgi.shape[1]
+            qh = q.reshape(B, T, K, G, hd)
+            scores = _gqa_scores(qh, ckv, spec.scale)     # (B,K,G,T,Sp)
+            if fill_cache:
+                valid = (cposv[:, None, :] >= 0) \
+                    & (cposv[:, None, :] <= q_pos[:, :, None])  # (B,T,Sp)
+            elif branch_stride is not None:
+                st = starts.astype(jnp.int32)
+                R = branch_stride
+                b_off = jnp.arange(T, dtype=jnp.int32)[None, :] * R  # (1, C)
+                phys = jnp.arange(Sp, dtype=jnp.int32)[None, None, :]
+                own_lo = (st[:, None] + b_off)[..., None]  # (B, C, 1)
+                shared = phys < st[:, None, None]
+                own = (phys >= own_lo) & (phys < own_lo + R)
+                valid = (cposv[:, None, :] >= 0) \
+                    & (cposv[:, None, :] <= idx[:, None, None]) \
+                    & (shared | own)                      # (B, C, Sp)
+            else:
+                valid = ((cposv >= 0)
+                         & (cposv <= idx[:, None]))[:, None]  # (B, 1, Sp)
+            probs = _masked_softmax(scores, valid[:, None, None])
+            out = _gqa_combine(probs, cvv).reshape(B, T, H * hd)
     elif cache is not None and fill_cache and starts is not None:
         # ---- resume prefill: suffix fill at per-row offsets ----
         if cache["pos"].ndim != 2:

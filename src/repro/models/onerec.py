@@ -54,11 +54,16 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
             branch_stride: Optional[int] = None,
             branch_counts: Optional[jax.Array] = None,
             page_scatter: Optional[jax.Array] = None,
-            page_gather: Optional[jax.Array] = None):
+            page_gather: Optional[jax.Array] = None,
+            page_tables: Optional[jax.Array] = None,
+            page_size: int = 0,
+            fused_interpret: Optional[bool] = None):
     """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM).
 
     ``page_scatter`` / ``page_gather`` run the cached modes against the
-    paged pool (``init_page_pool``) instead of a per-slot cache."""
+    paged pool (``init_page_pool``) instead of a per-slot cache;
+    ``page_tables`` + ``page_size`` route paged DECODE through the fused
+    Pallas kernel (``kernels/paged_decode``)."""
     if cache is not None and not fill_cache:
         # decode: new token(s), profile already in the cache; with
         # ``branch_stride`` the T axis is C candidate branches (tree decode)
@@ -68,7 +73,10 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
                            starts=starts, branch_stride=branch_stride,
                            branch_counts=branch_counts,
                            page_scatter=page_scatter,
-                           page_gather=page_gather)
+                           page_gather=page_gather,
+                           page_tables=page_tables,
+                           page_size=page_size,
+                           fused_interpret=fused_interpret)
     if starts is not None and fill_cache:
         # resume prefill: suffix tokens only — the profile token (and the
         # cached history prefix) already occupy positions 0 .. starts[i]-1
@@ -194,7 +202,10 @@ def decode_step_slots(params, tokens, cfg: OneRecConfig, cache: dict,
                       branch_stride: Optional[int] = None,
                       branch_counts: Optional[jax.Array] = None,
                       page_scatter: Optional[jax.Array] = None,
-                      page_gather: Optional[jax.Array] = None):
+                      page_gather: Optional[jax.Array] = None,
+                      page_tables: Optional[jax.Array] = None,
+                      page_size: int = 0,
+                      fused_interpret: Optional[bool] = None):
     """Per-slot decode: tokens (B, 1), each row at its OWN absolute index
     ``lengths[i]`` (= number of positions already in that slot).
 
@@ -210,12 +221,16 @@ def decode_step_slots(params, tokens, cfg: OneRecConfig, cache: dict,
             lengths=lengths.astype(jnp.int32),
             starts=starts.astype(jnp.int32), branch_stride=branch_stride,
             branch_counts=branch_counts, page_scatter=page_scatter,
-            page_gather=page_gather)
+            page_gather=page_gather, page_tables=page_tables,
+            page_size=page_size, fused_interpret=fused_interpret)
         return logits, new_cache
     logits, new_cache = forward(params, {"tokens": tokens}, cfg, cache=cache,
                                 lengths=lengths.astype(jnp.int32),
                                 page_scatter=page_scatter,
-                                page_gather=page_gather)
+                                page_gather=page_gather,
+                                page_tables=page_tables,
+                                page_size=page_size,
+                                fused_interpret=fused_interpret)
     return logits[:, -1], new_cache
 
 

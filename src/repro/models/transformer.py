@@ -154,7 +154,8 @@ def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
                  kind: LayerKind, positions, cache_lp, cache_index,
                  fill_cache: bool, lengths=None, starts=None,
                  branch_stride=None, branch_counts=None,
-                 page_scatter=None, page_gather=None):
+                 page_scatter=None, page_gather=None, page_tables=None,
+                 page_size=0, fused_interpret=None):
     h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
                       zero_centered=cfg.zero_centered_norm)
     attn_out, new_cache = apply_attention(
@@ -162,7 +163,9 @@ def _apply_layer(lp: dict, x: jax.Array, cfg: TransformerConfig,
         cache=cache_lp, cache_index=cache_index, fill_cache=fill_cache,
         lengths=lengths, starts=starts, branch_stride=branch_stride,
         branch_counts=branch_counts, page_scatter=page_scatter,
-        page_gather=page_gather, norm_eps=cfg.norm_eps)
+        page_gather=page_gather, page_tables=page_tables,
+        page_size=page_size, fused_interpret=fused_interpret,
+        norm_eps=cfg.norm_eps)
     if cfg.use_post_norm:
         attn_out = rmsnorm_apply(lp["post_attn_norm"], attn_out,
                                  eps=cfg.norm_eps,
@@ -188,7 +191,8 @@ def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
                  spec: StackSpec, positions, cache_stack, cache_index,
                  fill_cache: bool, unroll: bool = False, lengths=None,
                  starts=None, branch_stride=None, branch_counts=None,
-                 page_scatter=None, page_gather=None):
+                 page_scatter=None, page_gather=None, page_tables=None,
+                 page_size=0, fused_interpret=None):
     """scan over the stacked periods of one homogeneous stack."""
 
     def body(carry, xs):
@@ -201,7 +205,8 @@ def _apply_stack(stack_params: dict, x: jax.Array, cfg: TransformerConfig,
             h, nc = _apply_layer(lp_all[key], h, cfg, kind, positions,
                                  c_lp, cache_index, fill_cache, lengths,
                                  starts, branch_stride, branch_counts,
-                                 page_scatter, page_gather)
+                                 page_scatter, page_gather, page_tables,
+                                 page_size, fused_interpret)
             # layer-boundary residual sharding: no-op under the base rules;
             # under TRAIN_RULES_SP this seq-shards the saved activations
             h = constrain(h, ("batch", "act_seq", "embed"))
@@ -264,6 +269,9 @@ def forward(
     branch_counts: Optional[jax.Array] = None,
     page_scatter: Optional[jax.Array] = None,
     page_gather: Optional[jax.Array] = None,
+    page_tables: Optional[jax.Array] = None,
+    page_size: int = 0,
+    fused_interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """tokens (B, T) -> (logits (B, T, V) f32, new_cache).
 
@@ -285,6 +293,11 @@ def forward(
     through its page table (see ``layers.attention``).  Both index arrays
     are scan constants — one set serves every layer of every stack, since
     pages are allocated in POSITION space, shared by all layers.
+
+    ``page_tables`` (B, P) + ``page_size`` route the paged decode modes
+    through the fused Pallas kernel (no dense gathered view; see
+    ``layers.attention.apply_attention``); ``fused_interpret`` pins the
+    kernel's interpret mode.
     """
     if inputs_embeds is not None:
         x = constrain(inputs_embeds.astype(compute_dtype),
@@ -315,7 +328,10 @@ def forward(
                              starts=starts, branch_stride=branch_stride,
                              branch_counts=branch_counts,
                              page_scatter=page_scatter,
-                             page_gather=page_gather)
+                             page_gather=page_gather,
+                             page_tables=page_tables,
+                             page_size=page_size,
+                             fused_interpret=fused_interpret)
         if new_cache is not None:
             new_cache["stacks"][key] = nc
     x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,

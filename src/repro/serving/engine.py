@@ -109,6 +109,13 @@ class EngineConfig:
     n_pages: int = 0               # device pool size; 0 => auto-size to the
     #                                contiguous layout's device bytes
     #                                ((n_slots + prefix_rows) worst-case rows)
+    fused_decode: object = False   # paged decode through the fused Pallas
+    #                                kernel + in-program select: False/"off" |
+    #                                True/"auto" (kernel on TPU, logged
+    #                                fallback to the unfused path off-TPU or
+    #                                when the layout is contiguous) |
+    #                                "interpret" (force Pallas interpret
+    #                                mode — CPU parity tests)
 
 
 class RequestHandle:
@@ -243,7 +250,7 @@ class ServingEngine:
             n_candidates=engine_cfg.max_candidates,
             kv_dtype=engine_cfg.kv_dtype,
             paged=engine_cfg.paged, page_size=engine_cfg.page_size,
-            n_pages=n_pages)
+            n_pages=n_pages, fused_decode=engine_cfg.fused_decode)
         # the store PERSISTS across stats windows (repeat traffic spans
         # them); its hit/miss window resets with the engine's
         if not prefix_rows:
@@ -463,6 +470,14 @@ class ServingEngine:
             # decode dispatch served; 1.0 = single-candidate traffic)
             "decode_multi_steps": float(counters["decode_multi_steps"]),
             "branch_tokens": float(counters["branch_tokens"]),
+            # fused Pallas decode: steps served by the one-dispatch fused
+            # program, selects answered from its stash (each hit is one
+            # select program that never dispatched), and the resolved mode
+            # after the off-TPU / contiguous fallback rules
+            "fused_decode_steps": float(counters["fused_decode_steps"]),
+            "fused_select_hits": float(counters["fused_select_hits"]),
+            "select_calls": float(counters["select_calls"]),
+            "fused_decode_mode": self.executor.fused_decode,
             "branches_per_decode_step":
                 counters["branch_tokens"] / counters["decode_steps"]
                 if counters["decode_steps"] else 0.0,

@@ -16,6 +16,11 @@ Core programs, mirroring the paper's one-graph-per-phase design (§5.2):
   * ``select`` — top-k over the logits (RadixTopK kernel or ``lax.top_k``).
   * ``select_scored`` — top-k + log-partition, so branch scores (log-probs)
     cost no extra program.
+  * ``decode_fused`` / ``decode_multi_fused`` — the paged decode step
+    through the Pallas ``kernels/paged_decode`` kernel (page-table gather
+    on device, FP8 dequant in registers, tree mask + online softmax per
+    page block) WITH the select tail folded in: one dispatch per decode
+    step replaces the decode + select pair (``fused_decode`` knob).
   * ``free_slots`` — one vectorized pos-clear over a batch of retired slots
     (one dispatch per engine step, not one per request).
 
@@ -41,8 +46,10 @@ trees; schedulers only ever see slot ids, arena row ids, and logits.
 
 from __future__ import annotations
 
+import logging
+
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +61,44 @@ from repro.core.ptq import quantize_params
 from repro.models import onerec as onerec_model
 from repro.models import transformer as tfm_model
 from repro.serving.kv_cache import PagePool
+
+logger = logging.getLogger(__name__)
+
+
+def resolve_fused_decode(fused_decode: Union[bool, str, None],
+                         paged: bool) -> str:
+    """Normalize the ``fused_decode`` knob to one of ``off`` / ``tpu`` /
+    ``interpret`` and apply the fallback rules, logging ONCE per resolution:
+
+      * ``off`` / False / None — unfused paths everywhere.
+      * ``auto`` / True — fused Pallas decode kernel when the pool is paged
+        AND the backend is a TPU; otherwise log and fall back to the
+        existing unfused path (contiguous layouts have no page tables to
+        feed the kernel; off-TPU the compiled kernel cannot run).
+      * ``interpret`` — force the kernel in Pallas interpret mode (CPU
+        differential tests, e2e parity runs); still requires the paged
+        layout.
+    """
+    mode = {False: "off", True: "auto", None: "off"}.get(
+        fused_decode, fused_decode)
+    if mode not in ("off", "auto", "interpret"):
+        raise ValueError(f"fused_decode must be off/auto/interpret "
+                         f"(or bool), got {fused_decode!r}")
+    if mode == "off":
+        return "off"
+    if not paged:
+        logger.warning(
+            "fused_decode=%s requires the paged KV layout; falling back "
+            "to the unfused contiguous decode path", mode)
+        return "off"
+    if mode == "interpret":
+        return "interpret"
+    if jax.default_backend() != "tpu":
+        logger.warning(
+            "fused_decode=auto on backend %r (no TPU); falling back to "
+            "the unfused paged decode path", jax.default_backend())
+        return "off"
+    return "tpu"
 
 
 def bucket_length(n: int, minimum: int = 16) -> int:
@@ -78,7 +123,8 @@ class PhaseExecutor:
                  kv_dtype: Optional[str] = None,
                  paged: bool = False,
                  page_size: int = 32,
-                 n_pages: int = 0):
+                 n_pages: int = 0,
+                 fused_decode: Union[bool, str, None] = False):
         if n_candidates < 1:
             raise ValueError(f"n_candidates must be >= 1, got {n_candidates}")
         if n_candidates > topk:
@@ -144,11 +190,21 @@ class PhaseExecutor:
                                                        dtype=kv_dt,
                                                        extra_len=extra)
                           if prefix_rows > 0 else None)
+        # fused Pallas decode: resolve the knob against the layout and the
+        # backend (one warning per fallback), and hold the pending fused
+        # select results — the fused program computes top-k + logsumexp in
+        # the SAME dispatch, so the scheduler's following select_scored
+        # call is served from this stash instead of a second program
+        self.fused_decode = resolve_fused_decode(fused_decode, self.paged)
+        self._fused_select: Optional[tuple] = None
         self.counters: Dict[str, int] = {"prefill_calls": 0,
                                          "resume_calls": 0,
                                          "decode_steps": 0,
                                          "decode_multi_steps": 0,
                                          "branch_tokens": 0,
+                                         "fused_decode_steps": 0,
+                                         "fused_select_hits": 0,
+                                         "select_calls": 0,
                                          "prefill_padded_rows": 0,
                                          "prefill_tokens_batched": 0,
                                          "prefill_tokens_real": 0,
@@ -326,6 +382,41 @@ class PhaseExecutor:
                 branch_stride=self.branch_stride,
                 page_scatter=psc, page_gather=pgi)
 
+        # -- fused decode programs: the Pallas paged-decode kernel replaces
+        # the dense gathered-view attention, and the select (top-k + log-
+        # partition) rides in the SAME program — one dispatch per decode
+        # step instead of the decode + select pair.  The page table is a
+        # plain int32 operand (the host's _table_mat rows, verbatim).
+        fused_interp = (self.fused_decode == "interpret") or None
+        fused_ps = page_size
+
+        def _fused_select_tail(logits):
+            flat = logits.reshape((-1, logits.shape[-1]))
+            vals, ids = topk_fn(flat, topk)
+            lse = jax.scipy.special.logsumexp(
+                flat.astype(jnp.float32), axis=-1)
+            return vals, ids, lse
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_fused_fn(params, pool, tokens, lengths, psc, tabs):
+            logits, pool = onerec_model.decode_step_slots(
+                params, tokens, cfg, pool, lengths, page_scatter=psc,
+                page_tables=tabs, page_size=fused_ps,
+                fused_interpret=fused_interp)
+            vals, ids, lse = _fused_select_tail(logits)
+            return logits, vals, ids, lse, pool
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_multi_fused_fn(params, pool, tokens, lengths, starts,
+                                  psc, tabs):
+            logits, pool = onerec_model.decode_step_slots(
+                params, tokens, cfg, pool, lengths, starts=starts,
+                branch_stride=self.branch_stride, page_scatter=psc,
+                page_tables=tabs, page_size=fused_ps,
+                fused_interpret=fused_interp)
+            vals, ids, lse = _fused_select_tail(logits)
+            return logits, vals, ids, lse, pool
+
         @partial(jax.jit, donate_argnums=(0,))
         def free_pages_fn(pool, pages):
             # clear the pos lane of a batch of freed pages so re-granted
@@ -357,6 +448,8 @@ class PhaseExecutor:
         self._resume_prefill_paged = resume_prefill_paged_fn
         self._decode_paged = decode_paged_fn
         self._decode_multi_paged = decode_multi_paged_fn
+        self._decode_fused = decode_fused_fn
+        self._decode_multi_fused = decode_multi_fused_fn
         self._free_pages = free_pages_fn
         self._page_copy = page_copy_fn
 
@@ -669,7 +762,17 @@ class PhaseExecutor:
         dispatch, so under a tight ``capacity_factor`` the active requests'
         outputs can differ (deterministically) from a smaller-batch run —
         the same effect batch composition has in any capacity-dropped MoE."""
-        if self.paged:
+        if self.paged and self.fused_decode != "off":
+            rows = np.arange(self.n_slots)
+            li = np.asarray(lengths, np.int64)
+            psc = self._scatter_indices(rows, li, li > 0)
+            logits, vals, ids, lse, self.cache = self._decode_fused(
+                self.params, self.cache, jnp.asarray(tokens, np.int32),
+                jnp.asarray(lengths, np.int32), jnp.asarray(psc),
+                jnp.asarray(self._table_mat))
+            self._stash_fused_select(logits, vals, ids, lse)
+            self.counters["fused_decode_steps"] += 1
+        elif self.paged:
             rows = np.arange(self.n_slots)
             li = np.asarray(lengths, np.int64)
             psc = self._scatter_indices(rows, li, li > 0)
@@ -715,12 +818,21 @@ class PhaseExecutor:
             logical = st + b * self.branch_stride + (li - st)
             valid = (li > 0) & (b < np.asarray(counts, np.int64)[:, None])
             psc = self._scatter_indices(rows, logical, valid)
-            pgi = self._gather_indices(rows)
-            logits, self.cache = self._decode_multi_paged(
-                self.params, self.cache, jnp.asarray(tokens, np.int32),
-                jnp.asarray(lengths, np.int32),
-                jnp.asarray(starts, np.int32), jnp.asarray(psc),
-                jnp.asarray(pgi))
+            if self.fused_decode != "off":
+                logits, vals, ids, lse, self.cache = self._decode_multi_fused(
+                    self.params, self.cache, jnp.asarray(tokens, np.int32),
+                    jnp.asarray(lengths, np.int32),
+                    jnp.asarray(starts, np.int32), jnp.asarray(psc),
+                    jnp.asarray(self._table_mat))
+                self._stash_fused_select(logits, vals, ids, lse)
+                self.counters["fused_decode_steps"] += 1
+            else:
+                pgi = self._gather_indices(rows)
+                logits, self.cache = self._decode_multi_paged(
+                    self.params, self.cache, jnp.asarray(tokens, np.int32),
+                    jnp.asarray(lengths, np.int32),
+                    jnp.asarray(starts, np.int32), jnp.asarray(psc),
+                    jnp.asarray(pgi))
         else:
             logits, self.cache = self._decode_multi(
                 self.params, self.cache, jnp.asarray(tokens, np.int32),
@@ -732,8 +844,18 @@ class PhaseExecutor:
         self.counters["branch_tokens"] += int(np.sum(counts))
         return logits
 
+    def _stash_fused_select(self, logits, vals, ids, lse) -> None:
+        """Hold the select results the fused decode program computed
+        alongside its logits, keyed by the logits array IDENTITY — the
+        scheduler's next ``select_scored(logits)`` call is then answered
+        from the stash (no second dispatch).  The stashed logits reference
+        keeps the key alive, so an ``id`` collision is impossible."""
+        self._fused_select = (logits, np.asarray(vals), np.asarray(ids),
+                              np.asarray(lse))
+
     def select(self, logits) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k over logits; returns host (vals, ids)."""
+        self.counters["select_calls"] += 1
         vals, ids = self._select(logits)
         return np.asarray(vals), np.asarray(ids)
 
@@ -743,8 +865,20 @@ class PhaseExecutor:
         (vals, ids, logsumexp).  ``vals[..., j] - logsumexp[...]`` is the
         log-prob of candidate j — the branch-score currency of
         multi-candidate decode.  Accepts (N, V) or (N, C, V) logits (the
-        branch axis is flattened for the kernel and restored)."""
+        branch axis is flattened for the kernel and restored).
+
+        When ``logits`` came out of a FUSED decode step the answer was
+        already computed inside that one program; it is served from the
+        stash and no select program dispatches."""
         shape = logits.shape
+        if self._fused_select is not None and logits is self._fused_select[0]:
+            _, vals, ids, lse = self._fused_select
+            self._fused_select = None
+            self.counters["fused_select_hits"] += 1
+            vals = vals.reshape(shape[:-1] + (self.topk,))
+            ids = ids.reshape(shape[:-1] + (self.topk,))
+            return vals, ids, lse.reshape(shape[:-1])
+        self.counters["select_calls"] += 1
         if len(shape) > 2:
             logits = logits.reshape((-1, shape[-1]))
         vals, ids, lse = self._select_scored(logits)
