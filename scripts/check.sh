@@ -9,6 +9,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "[check] serving-invariant lint (repo-specific AST rules)"
+python scripts/lint_repro.py src/repro --fail-on-expired
+
 echo "[check] collection (all tests must import everywhere)"
 python -m pytest -q --collect-only >/dev/null
 

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Repo-specific serving-invariant linter (see docs/analysis.md).
+
+Runs the ``repro.analysis`` AST rules — tracer leaks, donated-buffer
+reuse, fp8 seam violations, unbucketed jit shapes, hidden host syncs,
+index dtype drift — against the given files/dirs and gates on findings
+not accepted by the checked-in baseline.
+
+Usage:
+    python scripts/lint_repro.py src/repro
+    python scripts/lint_repro.py src/repro --json results/lint_repro.json
+    python scripts/lint_repro.py src/repro --update-baseline
+    python scripts/lint_repro.py --list-rules
+
+Exit status: 0 clean (or baselined-only), 1 on new findings (and, with
+``--fail-on-expired``, on stale baseline entries).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import (ALL_RULES, Baseline, lint_paths,  # noqa: E402
+                            select_rules)
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "lint_baseline.json")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="*", default=[],
+                        help="files or directories to lint")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline JSON of accepted findings")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from current findings")
+    parser.add_argument("--fail-on-expired", action="store_true",
+                        help="fail when baseline entries no longer fire")
+    parser.add_argument("--json", default=None, metavar="PATH",
+                        help="write the machine-readable report here")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated subset of rules to run")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name:24s} {rule.description}")
+        return 0
+    if not args.paths:
+        parser.error("no paths given (try: src/repro)")
+
+    rules = select_rules(args.rules.split(",") if args.rules else None)
+    baseline = Baseline.load(args.baseline)
+    result = lint_paths(args.paths, baseline=baseline, rules=rules)
+
+    if args.update_baseline:
+        Baseline.from_findings(result.all_findings).save(args.baseline)
+        print(f"baseline updated: {len(result.all_findings)} accepted "
+              f"finding(s) -> {args.baseline}")
+        return 0
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(result.report(), fh, indent=2)
+            fh.write("\n")
+
+    for f in result.baselined:
+        print(f"{f}  [baselined]")
+    for f in result.new:
+        print(f)
+    for key in result.expired:
+        print(f"expired baseline entry (violation fixed — refresh with "
+              f"--update-baseline): {'::'.join(key)}")
+
+    status = "FAILED" if result.failed(args.fail_on_expired) else "ok"
+    print(f"lint_repro: {result.files_scanned} file(s), "
+          f"{len(result.new)} new, {len(result.baselined)} baselined, "
+          f"{len(result.expired)} expired — {status}")
+    return 1 if result.failed(args.fail_on_expired) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

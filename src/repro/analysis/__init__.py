@@ -1,0 +1,33 @@
+"""Static + runtime guardrails for the serving stack.
+
+Two halves with one job — keep the compiled hot path silently correct:
+
+* the **linter** (`rules`, `linter`, `baseline`, `findings`) is pure
+  stdlib ``ast`` and never imports jax; `scripts/lint_repro.py` is its
+  CLI and `scripts/lint_baseline.json` its (empty) baseline;
+* the **runtime guards** (`guards`) hook JAX's monitoring events and
+  transfer guard to assert zero steady-state recompiles / implicit
+  transfers. They import jax, so they're exported lazily — importing
+  ``repro.analysis`` alone stays dependency-light.
+"""
+
+from repro.analysis.baseline import Baseline
+from repro.analysis.findings import Finding, build_report
+from repro.analysis.linter import (LintResult, iter_python_files, lint_paths,
+                                   lint_source, select_rules)
+from repro.analysis.rules import ALL_RULES, RULES_BY_NAME
+
+_LAZY = ("CompileMonitor", "SteadyStateViolation", "steady_state",
+         "warmup_then_guard")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.analysis import guards
+        return getattr(guards, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["ALL_RULES", "Baseline", "Finding", "LintResult",
+           "RULES_BY_NAME", "build_report", "iter_python_files",
+           "lint_paths", "lint_source", "select_rules", *_LAZY]

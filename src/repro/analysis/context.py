@@ -1,0 +1,206 @@
+"""Per-module facts shared by every lint rule.
+
+``ModuleContext`` parses one Python source once and precomputes what the
+repo-specific rules keep asking:
+
+  * **import aliases** — which local names mean ``jax.numpy`` / ``numpy``
+    / ``jax`` in THIS module (``import jax.numpy as jnp`` etc.), so rules
+    match semantics, not spelling;
+  * **the jit registry** — every function compiled by ``jax.jit`` (plain
+    decorator, ``partial(jax.jit, donate_argnums=...)``, or the
+    ``f = jax.jit(g, ...)`` call form) with its donated argument
+    positions, plus the alias map for the executor idiom of stashing
+    compiled closures on attributes (``self._decode = decode_fn``);
+  * **suppressions** — ``# lint: allow[rule-name]`` trailing comments,
+    the sanctioned-violation escape hatch (e.g. the executor's phase-
+    boundary host readbacks are sanctioned sync points).
+
+Pure stdlib ``ast`` — importing this module must never import jax (the
+linter runs in CI before heavy deps are even needed).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([\w\s,-]+)\]")
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def attr_root(node: ast.AST) -> Optional[str]:
+    """The leftmost Name of an attribute chain (``jnp`` of ``jnp.ones``)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class ModuleContext:
+    def __init__(self, source: str, path: str):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.jnp_aliases: Set[str] = set()
+        self.np_aliases: Set[str] = set()
+        self.jax_aliases: Set[str] = set()
+        self.partial_aliases: Set[str] = {"partial", "functools.partial"}
+        self._scan_imports()
+        self.allows: Dict[int, Set[str]] = self._scan_allows()
+        # name -> donated positional indices (empty tuple = jitted, no
+        # donation); alias dotted path ("self._decode") -> registry name
+        self.jit_fns: Dict[str, Tuple[int, ...]] = {}
+        self.jit_aliases: Dict[str, str] = {}
+        self._scan_jit_registry()
+
+    # -- imports --------------------------------------------------------------
+
+    def _scan_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name
+                    if a.name == "jax.numpy":
+                        self.jnp_aliases.add(name)
+                    elif a.name == "numpy":
+                        self.np_aliases.add(name)
+                    elif a.name == "jax":
+                        self.jax_aliases.add(name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax" and node.level == 0:
+                    for a in node.names:
+                        if a.name == "numpy":
+                            self.jnp_aliases.add(a.asname or "numpy")
+                        elif a.name == "jit":
+                            # `from jax import jit` — registry uses this
+                            self.jax_aliases.add("")  # marker unused
+        if not self.jnp_aliases:
+            self.jnp_aliases = {"jnp"}          # lint fixtures / fragments
+        if not self.np_aliases:
+            self.np_aliases = {"np"}
+
+    # -- suppressions ---------------------------------------------------------
+
+    def _scan_allows(self) -> Dict[int, Set[str]]:
+        allows: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, 1):
+            m = _ALLOW_RE.search(line)
+            if m:
+                allows[i] = {r.strip() for r in m.group(1).split(",")
+                             if r.strip()}
+        return allows
+
+    def allowed(self, line: int, rule: str) -> bool:
+        return rule in self.allows.get(line, ())
+
+    # -- jnp-rooted expressions -----------------------------------------------
+
+    def is_jnp_attr(self, node: ast.AST) -> bool:
+        """True for ``jnp.<...>`` / ``jax.numpy.<...>`` attribute chains."""
+        if not isinstance(node, ast.Attribute):
+            return False
+        root = attr_root(node)
+        if root in self.jnp_aliases:
+            return True
+        d = dotted(node)
+        return bool(d) and any(d.startswith(f"{j}.numpy.")
+                               for j in self.jax_aliases)
+
+    def jnp_calls(self, node: ast.AST) -> Iterable[ast.Call]:
+        """Every ``jnp.f(...)`` call in the subtree."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and self.is_jnp_attr(sub.func):
+                yield sub
+
+    # -- jit registry ---------------------------------------------------------
+
+    def _is_jax_jit(self, node: ast.AST) -> bool:
+        d = dotted(node)
+        return d is not None and (
+            any(d == f"{j}.jit" for j in self.jax_aliases) or d == "jit")
+
+    @staticmethod
+    def _donate_positions(call: ast.Call) -> Tuple[int, ...]:
+        for kw in call.keywords:
+            if kw.arg in ("donate_argnums", "donate_argnames"):
+                try:
+                    v = ast.literal_eval(kw.value)
+                except ValueError:
+                    return ()
+                if isinstance(v, int):
+                    return (v,)
+                if isinstance(v, (tuple, list)) and \
+                        all(isinstance(i, int) for i in v):
+                    return tuple(v)
+        return ()
+
+    def _jit_decorator(self, dec: ast.AST) -> Optional[Tuple[int, ...]]:
+        """Donated positions when ``dec`` expresses a jax.jit; None else."""
+        if self._is_jax_jit(dec):
+            return ()
+        if isinstance(dec, ast.Call):
+            if self._is_jax_jit(dec.func):            # @jax.jit(...)
+                return self._donate_positions(dec)
+            d = dotted(dec.func)
+            if d in self.partial_aliases and dec.args \
+                    and self._is_jax_jit(dec.args[0]):
+                return self._donate_positions(dec)    # @partial(jax.jit, ..)
+        return None
+
+    def _scan_jit_registry(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    pos = self._jit_decorator(dec)
+                    if pos is not None:
+                        self.jit_fns[node.name] = pos
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = dotted(node.targets[0])
+                if tgt is None:
+                    continue
+                val = node.value
+                if isinstance(val, ast.Call):
+                    pos = self._jit_decorator(val)    # f = jax.jit(g, ...)
+                    if pos is not None:
+                        self.jit_fns[tgt] = pos
+                        continue
+                src = dotted(val)                     # self._decode = decode_fn
+                if src in self.jit_fns:
+                    self.jit_aliases[tgt] = src
+
+    def resolve_jit_call(self, call: ast.Call) -> Optional[str]:
+        """Registry name when ``call`` invokes a known-jitted function
+        (directly or through an attribute alias), else None."""
+        d = dotted(call.func)
+        if d is None:
+            return None
+        if d in self.jit_fns:
+            return d
+        return self.jit_aliases.get(d)
+
+    def donated_positions(self, name: str) -> Tuple[int, ...]:
+        return self.jit_fns.get(name, ())
+
+    # -- enclosing-function iteration -----------------------------------------
+
+    def functions(self) -> Iterable[ast.FunctionDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""

@@ -1,0 +1,147 @@
+"""Runtime steady-state guards: compile counter + transfer guard.
+
+The static rules catch what the AST can see; these guards catch what it
+can't — the runtime contract that after warmup the serving hot path does
+**zero new XLA compilations and zero implicit host<->device transfers**.
+
+``CompileMonitor`` counts real backend compiles via JAX's monitoring
+events: ``/jax/core/compile/backend_compile_duration`` fires exactly
+once per XLA compilation and NOT on cache hits, so warmed steady-state
+stepping counts 0.  JAX has no listener-unregister API, so one
+module-level dispatcher is registered lazily and forwards to whichever
+monitors are active.
+
+``steady_state`` composes the monitor with ``jax.transfer_guard`` —
+under ``"disallow"``, *implicit* transfers raise immediately (a raw
+numpy array flowing into a jitted program, ``float(device_scalar)``)
+while the engine's sanctioned explicit staging (``jnp.asarray`` /
+``np.asarray`` at phase boundaries) stays legal.  On exit, any counted
+compilation raises ``SteadyStateViolation``.
+
+Usage (see tests/test_steady_state.py and docs/analysis.md)::
+
+    engine.run(requests)                      # warmup: compiles happen
+    with steady_state() as mon:
+        engine.run(requests)                  # steady: must be compile-free
+    assert mon.compiles == 0                  # already enforced on exit
+
+This module imports jax and is therefore exported lazily from
+``repro.analysis`` — the linter path stays stdlib-only.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, List, Optional
+
+import jax
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+
+_lock = threading.Lock()
+_active: List["CompileMonitor"] = []
+_dispatcher_registered = False
+
+
+class SteadyStateViolation(AssertionError):
+    """The steady-state contract broke: new compilations after warmup."""
+
+
+def _dispatch(event: str, duration: float, **kwargs) -> None:
+    if event not in (_COMPILE_EVENT, _TRACE_EVENT):
+        return
+    with _lock:
+        monitors = list(_active)
+    for mon in monitors:
+        mon._on_event(event)
+
+
+def _ensure_dispatcher() -> None:
+    """Register the forwarding listener once, lazily (JAX has no
+    unregister API, so the hook must be global and idempotent)."""
+    global _dispatcher_registered
+    with _lock:
+        if _dispatcher_registered:
+            return
+        _dispatcher_registered = True
+    jax.monitoring.register_event_duration_secs_listener(_dispatch)
+
+
+class CompileMonitor:
+    """Counts XLA backend compilations (and jaxpr traces) while active.
+
+    ``compiles`` is the authoritative number: one increment per real
+    backend compile, zero on executable-cache hits.  ``traces`` counts
+    jaxpr tracing events — cheap retraces that hit the compile cache
+    show up here first, which makes failure reports actionable.
+    """
+
+    def __init__(self) -> None:
+        self.compiles = 0
+        self.traces = 0
+        self._armed = False
+
+    def _on_event(self, event: str) -> None:
+        if not self._armed:
+            return
+        if event == _COMPILE_EVENT:
+            self.compiles += 1
+        elif event == _TRACE_EVENT:
+            self.traces += 1
+
+    def __enter__(self) -> "CompileMonitor":
+        _ensure_dispatcher()
+        self.compiles = 0
+        self.traces = 0
+        self._armed = True
+        with _lock:
+            _active.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._armed = False
+        with _lock:
+            if self in _active:
+                _active.remove(self)
+
+
+@contextlib.contextmanager
+def steady_state(allow_transfers: bool = False,
+                 max_compiles: int = 0) -> Iterator[CompileMonitor]:
+    """Assert the steady-state serving contract over a ``with`` block.
+
+    * compiles beyond ``max_compiles`` (default 0) raise
+      ``SteadyStateViolation`` on exit;
+    * implicit host<->device transfers raise ``XlaRuntimeError``
+      immediately (disable with ``allow_transfers=True``).
+
+    An exception already propagating out of the block takes precedence —
+    the guard never masks the original failure.
+    """
+    with contextlib.ExitStack() as stack:
+        if not allow_transfers:
+            stack.enter_context(jax.transfer_guard("disallow"))
+        mon = stack.enter_context(CompileMonitor())
+        try:
+            yield mon
+        except BaseException:
+            raise
+        else:
+            if mon.compiles > max_compiles:
+                raise SteadyStateViolation(
+                    f"steady-state contract violated: {mon.compiles} new "
+                    f"XLA compilation(s) (allowed {max_compiles}); "
+                    f"{mon.traces} jaxpr trace(s). A shape/dtype reaching "
+                    f"the jitted programs changed after warmup — check "
+                    f"bucket_length coverage and operand dtypes.")
+
+
+def warmup_then_guard(warmup_fn, allow_transfers: bool = False,
+                      max_compiles: int = 0):
+    """Run ``warmup_fn()`` un-guarded, then enter ``steady_state`` —
+    convenience for benches that separate the two phases."""
+    warmup_fn()
+    return steady_state(allow_transfers=allow_transfers,
+                        max_compiles=max_compiles)

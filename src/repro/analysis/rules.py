@@ -1,0 +1,420 @@
+"""The repo-specific serving-invariant lint rules.
+
+Each rule encodes one production-numerics invariant of the serving stack
+that an ordinary linter can't know about (see docs/analysis.md for the
+catalog with real before/after examples):
+
+  * ``jnp-module-constant``   — module-level ``jnp.*(...)`` constants: the
+    PR 8 tracer-leak class (a first import inside a jit trace bakes a
+    TRACER into module state).
+  * ``donated-buffer-reuse``  — reading a buffer after passing it at a
+    ``donate_argnums`` position of a jitted program (donated buffers are
+    invalidated; the executor idiom is to rebind the result in the same
+    assignment: ``logits, self.cache = self._decode(..., self.cache, ...)``).
+  * ``tracer-host-branch``    — Python ``if``/``while`` on jnp-array
+    truthiness inside a jitted function (host control flow on a tracer;
+    use ``jnp.where`` / ``jax.lax.cond``).
+  * ``fp8-payload-arith``     — arithmetic on fp8 e4m3 payloads outside
+    ``core/quant.py``'s quantize/dequantize seam (fp8 is a STORAGE
+    format; compute happens after in-register dequant).
+  * ``unbucketed-jit-shape``  — jitted-program operands built with shapes
+    from raw ``len(...)`` instead of the pow-2 ``bucket_length`` helpers
+    (every distinct shape is a fresh XLA compile — a steady-state
+    recompile time bomb).
+  * ``hidden-host-sync``      — ``.item()`` / ``np.asarray`` on device
+    values outside the sanctioned phase-boundary sync points (marked
+    ``# lint: allow[hidden-host-sync]``).
+  * ``index-dtype-drift``     — mixed ``np.int64``/``np.int32`` page-table
+    index math in serving modules; one typed helper
+    (``serving.kv_cache.as_index``) owns the index dtype.
+
+Rules are pure ``ast`` passes over a shared ``ModuleContext``; none of
+them import jax.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.context import ModuleContext, attr_root, dotted
+from repro.analysis.findings import Finding
+
+_FP8_ATTRS = {"float8_e4m3fn", "float8_e5m2"}
+_FP8_NAMES = {"E4M3", "E5M2"}
+# jnp.<attr>(...) calls that build metadata, not device arrays
+_JNP_METADATA = {"dtype", "finfo", "iinfo", "result_type", "issubdtype"}
+_CONSTRUCTORS = {"zeros", "ones", "full", "empty", "arange"}
+
+
+def _walk_scope(node: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body WITHOUT descending into nested function /
+    class scopes (their bindings are not this scope's bindings)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return any(n is target for n in ast.walk(tree))
+
+
+class Rule:
+    name: str = ""
+    description: str = ""
+    paths: Sequence[str] = ()          # only lint paths containing one of
+    exempt_paths: Sequence[str] = ()   # never lint paths containing one of
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        if any(p in ctx.path for p in self.exempt_paths):
+            return False
+        return not self.paths or any(p in ctx.path for p in self.paths)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node: ast.AST,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(file=ctx.path, line=line,
+                       col=getattr(node, "col_offset", 0), rule=self.name,
+                       message=message, snippet=ctx.snippet(line))
+
+
+class JnpModuleConstant(Rule):
+    name = "jnp-module-constant"
+    description = ("module-level jnp.*(...) constant: created at import "
+                   "time, and a first import inside a jit trace leaks a "
+                   "tracer into module state (the PR 8 bug class)")
+
+    def _module_statements(self, tree: ast.Module) -> Iterable[ast.stmt]:
+        stack: List[ast.stmt] = list(tree.body)
+        while stack:
+            stmt = stack.pop()
+            yield stmt
+            if isinstance(stmt, (ast.If, ast.Try, ast.With, ast.For,
+                                 ast.While)):
+                for field in ("body", "orelse", "finalbody", "handlers"):
+                    for sub in getattr(stmt, field, []):
+                        if isinstance(sub, ast.ExceptHandler):
+                            stack.extend(sub.body)
+                        elif isinstance(sub, ast.stmt):
+                            stack.append(sub)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for stmt in self._module_statements(ctx.tree):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign)):
+                continue
+            value = stmt.value
+            if value is None:
+                continue
+            for call in ctx.jnp_calls(value):
+                if call.func.attr in _JNP_METADATA:  # type: ignore[union-attr]
+                    continue
+                yield self.finding(
+                    ctx, stmt,
+                    "module-level jnp constant is created at import time; "
+                    "a first import inside a jit trace leaks a tracer into "
+                    "module state — use a plain Python value and convert "
+                    "inside the traced function")
+                break
+
+
+class DonatedBufferReuse(Rule):
+    name = "donated-buffer-reuse"
+    description = ("argument read again after being passed at a "
+                   "donate_argnums position (donated buffers are "
+                   "invalidated by XLA)")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ctx.functions():
+            yield from self._check_function(ctx, fn)
+
+    def _check_function(self, ctx: ModuleContext,
+                        fn: ast.FunctionDef) -> Iterable[Finding]:
+        scope = list(_walk_scope(fn))
+        assigns = [n for n in scope if isinstance(n, ast.Assign)]
+        for call in scope:
+            if not isinstance(call, ast.Call):
+                continue
+            target = ctx.resolve_jit_call(call)
+            if target is None:
+                continue
+            donated = ctx.donated_positions(target)
+            for idx in donated:
+                if idx >= len(call.args):
+                    continue
+                path = dotted(call.args[idx])
+                if path is None:
+                    continue
+                if self._rebound_at_call(assigns, call, path):
+                    continue
+                offender = self._read_after(scope, call, path)
+                if offender is not None:
+                    yield self.finding(
+                        ctx, offender,
+                        f"`{path}` is read after being DONATED (position "
+                        f"{idx}) to jitted `{target}`; donated buffers "
+                        f"are invalidated — rebind the program's result "
+                        f"in the same assignment instead")
+
+    @staticmethod
+    def _rebound_at_call(assigns: List[ast.Assign], call: ast.Call,
+                         path: str) -> bool:
+        """True when the call sits in an assignment whose targets rebind
+        ``path`` (the executor idiom)."""
+        for a in assigns:
+            if not _contains(a.value, call):
+                continue
+            targets: List[str] = []
+            for t in a.targets:
+                if isinstance(t, (ast.Tuple, ast.List)):
+                    targets += [dotted(e) or "" for e in t.elts]
+                else:
+                    targets.append(dotted(t) or "")
+            return path in targets
+        return False
+
+    @staticmethod
+    def _read_after(scope: List[ast.AST], call: ast.Call,
+                    path: str) -> Optional[ast.AST]:
+        """First Load of ``path`` after the call and before any re-store."""
+        call_args = set(map(id, ast.walk(call)))
+        first_store = None
+        loads: List[ast.AST] = []
+        for n in scope:
+            if id(n) in call_args or not isinstance(n, (ast.Name,
+                                                        ast.Attribute)):
+                continue
+            if dotted(n) != path or n.lineno <= call.lineno:
+                continue
+            if isinstance(n.ctx, ast.Store):
+                if first_store is None or n.lineno < first_store:
+                    first_store = n.lineno
+            elif isinstance(n.ctx, ast.Load):
+                loads.append(n)
+        loads = [n for n in loads
+                 if first_store is None or n.lineno < first_store]
+        return min(loads, key=lambda n: n.lineno) if loads else None
+
+
+class TracerHostBranch(Rule):
+    name = "tracer-host-branch"
+    description = ("Python if/while on jnp-array truthiness inside a "
+                   "jitted function (host control flow on a tracer)")
+
+    def _tracer_test(self, ctx: ModuleContext, test: ast.AST) -> bool:
+        for n in ast.walk(test):
+            if ctx.is_jnp_attr(n):
+                return True
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in ("any", "all", "item") \
+                    and attr_root(n.func) not in ctx.np_aliases:
+                return True
+        return False
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ctx.functions():
+            if fn.name not in ctx.jit_fns:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.If, ast.While)) \
+                        and self._tracer_test(ctx, node.test):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        ctx, node,
+                        f"`{kind}` on a traced jnp value inside jitted "
+                        f"`{fn.name}`: the branch is taken on a TRACER at "
+                        f"trace time, not per-step — use jnp.where / "
+                        f"jax.lax.cond / lax.while_loop")
+
+
+class Fp8PayloadArith(Rule):
+    name = "fp8-payload-arith"
+    description = ("arithmetic on fp8 e4m3 payload outside the "
+                   "quantize/dequantize seam in core/quant.py")
+    exempt_paths = ("core/quant.py",)
+
+    @staticmethod
+    def _is_fp8_ref(node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute) and node.attr in _FP8_ATTRS:
+            return True
+        return isinstance(node, ast.Name) and node.id in _FP8_NAMES
+
+    def _fp8_producer(self, node: ast.AST) -> bool:
+        """``x.astype(<fp8>)`` or ``cast_to_fp8(...)`` call."""
+        if not isinstance(node, ast.Call):
+            return False
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
+            return any(self._is_fp8_ref(a) for a in node.args)
+        d = dotted(node.func)
+        return bool(d) and d.split(".")[-1] == "cast_to_fp8"
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ctx.functions():
+            tracked: Set[str] = set()
+            scope = sorted((n for n in _walk_scope(fn)
+                            if hasattr(n, "lineno")),
+                           key=lambda n: (n.lineno, n.col_offset))
+            for n in scope:
+                if isinstance(n, ast.Assign) and any(
+                        self._fp8_producer(s) for s in ast.walk(n.value)):
+                    for t in n.targets:
+                        elts = t.elts if isinstance(
+                            t, (ast.Tuple, ast.List)) else [t]
+                        tracked |= {e.id for e in elts
+                                    if isinstance(e, ast.Name)}
+                if isinstance(n, (ast.BinOp, ast.AugAssign)):
+                    operands = ([n.left, n.right]
+                                if isinstance(n, ast.BinOp)
+                                else [n.target, n.value])
+                    if any(self._fp8_operand(o, tracked) for o in operands):
+                        yield self.finding(
+                            ctx, n,
+                            "arithmetic on an fp8 e4m3 payload outside "
+                            "core/quant.py: fp8 is the STORAGE format — "
+                            "dequantize first (dequantize_kv / "
+                            "QuantizedTensor.dequantize) and compute in "
+                            "bf16/f32")
+
+    def _fp8_operand(self, node: ast.AST, tracked: Set[str]) -> bool:
+        if isinstance(node, ast.Name) and node.id in tracked:
+            return True
+        return self._fp8_producer(node)
+
+
+class UnbucketedJitShape(Rule):
+    name = "unbucketed-jit-shape"
+    description = ("jitted-program operand built with a shape from raw "
+                   "len(...) — every distinct size is a fresh XLA "
+                   "compile; bucket with bucket_length()")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ctx.functions():
+            scope = list(_walk_scope(fn))
+            calls_jit = any(isinstance(n, ast.Call)
+                            and ctx.resolve_jit_call(n) is not None
+                            for n in scope)
+            if not calls_jit:
+                continue
+            for n in scope:
+                if not (isinstance(n, ast.Call)
+                        and isinstance(n.func, ast.Attribute)
+                        and n.func.attr in _CONSTRUCTORS
+                        and attr_root(n.func) in (ctx.np_aliases
+                                                  | ctx.jnp_aliases)
+                        and n.args):
+                    continue
+                shape = n.args[0]
+                names = {dotted(s) for s in ast.walk(shape)
+                         if isinstance(s, (ast.Name, ast.Attribute))}
+                if any(d and "bucket" in d.split(".")[-1] for d in names):
+                    continue          # routed through a bucketing helper
+                has_len = any(isinstance(s, ast.Call)
+                              and isinstance(s.func, ast.Name)
+                              and s.func.id == "len"
+                              for s in ast.walk(shape))
+                if has_len:
+                    yield self.finding(
+                        ctx, n,
+                        "operand shape built from raw len(...) in a "
+                        "function that dispatches jitted programs: every "
+                        "distinct size compiles a fresh XLA program — pad "
+                        "to a pow-2 bucket via bucket_length()")
+
+
+class HiddenHostSync(Rule):
+    name = "hidden-host-sync"
+    description = (".item()/np.asarray on a device value outside a "
+                   "sanctioned sync point (# lint: allow[hidden-host-sync])")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ctx.functions():
+            device_names: Set[str] = set()
+            scope = sorted((n for n in _walk_scope(fn)
+                            if hasattr(n, "lineno")),
+                           key=lambda n: (n.lineno, n.col_offset))
+            for n in scope:
+                if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call) \
+                        and ctx.resolve_jit_call(n.value) is not None:
+                    for t in n.targets:
+                        elts = t.elts if isinstance(
+                            t, (ast.Tuple, ast.List)) else [t]
+                        device_names |= {e.id for e in elts
+                                         if isinstance(e, ast.Name)}
+                if not isinstance(n, ast.Call):
+                    continue
+                f = self._sync_kind(ctx, n, device_names)
+                if f:
+                    yield self.finding(
+                        ctx, n,
+                        f"{f} forces a device->host sync on the hot path; "
+                        f"batch the readback at a phase boundary (or mark "
+                        f"the sanctioned sync point with "
+                        f"`# lint: allow[hidden-host-sync]`)")
+
+    def _sync_kind(self, ctx: ModuleContext, call: ast.Call,
+                   device_names: Set[str]) -> Optional[str]:
+        func = call.func
+        if isinstance(func, ast.Attribute) and func.attr == "item" \
+                and not call.args:
+            return "`.item()`"
+        dev_arg = call.args and self._is_device(ctx, call.args[0],
+                                                device_names)
+        if isinstance(func, ast.Attribute) \
+                and func.attr in ("asarray", "array", "ascontiguousarray") \
+                and attr_root(func) in ctx.np_aliases and dev_arg:
+            return f"`np.{func.attr}` on a device value"
+        if isinstance(func, ast.Name) and func.id in ("float", "int", "bool") \
+                and dev_arg:
+            return f"`{func.id}()` on a device value"
+        return None
+
+    @staticmethod
+    def _is_device(ctx: ModuleContext, node: ast.AST,
+                   device_names: Set[str]) -> bool:
+        for s in ast.walk(node):
+            if isinstance(s, ast.Name) and s.id in device_names:
+                return True
+            if isinstance(s, ast.Call) and ctx.resolve_jit_call(s) is not None:
+                return True
+            if isinstance(s, ast.Call) and ctx.is_jnp_attr(s.func) \
+                    and s.func.attr not in _JNP_METADATA:
+                return True
+        return False
+
+
+class IndexDtypeDrift(Rule):
+    name = "index-dtype-drift"
+    description = ("mixed np.int64/np.int32 index math in a serving "
+                   "module; one typed helper (serving.kv_cache.as_index) "
+                   "owns the page-table index dtype")
+    paths = ("serving/",)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ctx.functions():
+            scope = list(_walk_scope(fn))
+            i64 = [n for n in scope if isinstance(n, ast.Attribute)
+                   and n.attr == "int64" and attr_root(n) in ctx.np_aliases]
+            has_i32 = any(isinstance(n, ast.Attribute) and n.attr == "int32"
+                          and attr_root(n) in ctx.np_aliases for n in scope)
+            if i64 and has_i32:
+                for n in i64:
+                    yield self.finding(
+                        ctx, n,
+                        f"`{fn.name}` mixes np.int64 and np.int32 index "
+                        f"dtypes: gathers widen to int64 then cast back — "
+                        f"route page-table/index math through "
+                        f"serving.kv_cache.as_index (INDEX_DTYPE)")
+
+
+ALL_RULES = (JnpModuleConstant(), DonatedBufferReuse(), TracerHostBranch(),
+             Fp8PayloadArith(), UnbucketedJitShape(), HiddenHostSync(),
+             IndexDtypeDrift())
+
+RULES_BY_NAME: Dict[str, Rule] = {r.name: r for r in ALL_RULES}

@@ -67,7 +67,7 @@ def param_count(params) -> int:
     total = 0
     for leaf in leaves:
         if isinstance(leaf, QuantizedTensor):
-            total += int(jnp.size(leaf.data))
+            total += leaf.data.size
         else:
-            total += int(jnp.size(leaf))
+            total += leaf.size
     return total

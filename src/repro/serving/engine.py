@@ -419,6 +419,23 @@ class ServingEngine:
         """Step until every accepted request has retired."""
         self._drain_until(lambda: False)
 
+    def steady_state(self, allow_transfers: bool = False,
+                     max_compiles: int = 0):
+        """Guarded region asserting the POST-WARMUP serving contract:
+        zero new XLA compilations and zero implicit host<->device
+        transfers while the engine steps inside the ``with`` block
+        (see ``repro.analysis.guards``).  Warm the engine first — run
+        one representative batch through ``serve_requests``/``drain`` —
+        then step inside the guard::
+
+            engine.serve_requests(reqs)          # warmup compiles
+            with engine.steady_state():
+                engine.serve_requests(reqs)      # must be compile-free
+        """
+        from repro.analysis.guards import steady_state
+        return steady_state(allow_transfers=allow_transfers,
+                            max_compiles=max_compiles)
+
     # -- windowed metrics -----------------------------------------------------
 
     def reset_window(self) -> None:

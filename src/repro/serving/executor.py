@@ -60,7 +60,7 @@ from repro.core.policy import BASELINE_POLICY, PAPER_POLICY
 from repro.core.ptq import quantize_params
 from repro.models import onerec as onerec_model
 from repro.models import transformer as tfm_model
-from repro.serving.kv_cache import PagePool
+from repro.serving.kv_cache import INDEX_DTYPE, PagePool, as_index
 
 logger = logging.getLogger(__name__)
 
@@ -497,10 +497,10 @@ class PhaseExecutor:
         point inside the sentinel page, whose ``pos`` lane is permanently
         -1 — an empty slot therefore gathers an all-masked view, reading
         exactly like a contiguous freed row."""
-        tabs = self._table_mat[np.asarray(slot_ids, np.int64)]
-        flat = (tabs[:, :, None].astype(np.int64) * self.page_size
-                + np.arange(self.page_size, dtype=np.int64)[None, None, :])
-        return flat.reshape(len(slot_ids), -1).astype(np.int32)
+        tabs = self._table_mat[as_index(slot_ids)]
+        flat = (tabs[:, :, None].astype(INDEX_DTYPE) * self.page_size
+                + np.arange(self.page_size, dtype=INDEX_DTYPE)[None, None, :])
+        return flat.reshape(len(slot_ids), -1)
 
     def _scatter_indices(self, slot_ids, logical, valid) -> np.ndarray:
         """Flat physical scatter index for per-row ``logical`` positions
@@ -508,15 +508,15 @@ class PhaseExecutor:
         — and any position whose page is unmapped — resolve to the drop
         index, so the program's write is discarded by XLA."""
         n = len(slot_ids)
-        tabs = self._table_mat[np.asarray(slot_ids, np.int64)]
-        l = np.asarray(logical, np.int64)
+        tabs = self._table_mat[as_index(slot_ids)]
+        l = as_index(logical)
         pg = np.clip(l // self.page_size, 0, self._p_max - 1)
         entry = np.take_along_axis(
             tabs, pg.reshape(n, -1), axis=1).reshape(l.shape)
-        phys = entry.astype(np.int64) * self.page_size + l % self.page_size
+        phys = entry.astype(INDEX_DTYPE) * self.page_size + l % self.page_size
         ok = (np.asarray(valid, bool) & (entry != self._sentinel)
               & (l >= 0) & (l < self._sp))
-        return np.where(ok, phys, self._drop).astype(np.int32)
+        return np.where(ok, phys, self._drop).astype(INDEX_DTYPE)
 
     def _free_pages_device(self, pages: List[int]) -> None:
         """Clear the ``pos`` lane of freed pages in one scatter program
@@ -573,11 +573,11 @@ class PhaseExecutor:
             # fresh page stays virgin (pos = -1) there — the paged
             # equivalent of prefix_copy_insert's length mask
             keep = boundary % ps
-            off = np.arange(ps, dtype=np.int64)
-            src = np.asarray(entry_pages[full] * ps + off, np.int32)
+            off = np.arange(ps, dtype=INDEX_DTYPE)
+            src = as_index(entry_pages[full] * ps + off)
             dst = np.where(off < keep, fresh[0] * ps + off, self._drop)
             self.cache = self._page_copy(self.cache, jnp.asarray(src),
-                                         jnp.asarray(dst.astype(np.int32)))
+                                         jnp.asarray(as_index(dst)))
             self.counters["cow_copies"] += 1
         return True
 
@@ -623,9 +623,9 @@ class PhaseExecutor:
             # granted pages; duplicate padded rows write identical values
             t_eff = tok.shape[1] + 1
             logical = np.broadcast_to(
-                np.arange(t_eff, dtype=np.int64)[None, :],
+                np.arange(t_eff, dtype=INDEX_DTYPE)[None, :],
                 (tok.shape[0], t_eff))
-            valid = logical < (lengths[:, None].astype(np.int64) + 1)
+            valid = logical < (as_index(lengths)[:, None] + 1)
             psc = self._scatter_indices(slot_ids, logical, valid)
             logits, self.cache = self._prefill_insert_paged(
                 self.params, self.cache, jnp.asarray(tok),
@@ -653,10 +653,10 @@ class PhaseExecutor:
         slot_ids = np.asarray([slots[j] for j in src], np.int32)
         if self.paged:
             t = tok.shape[1]
-            logical = (start_arr[:, None].astype(np.int64)
-                       + np.arange(t, dtype=np.int64)[None, :])
-            valid = (np.arange(t, dtype=np.int64)[None, :]
-                     < lengths[:, None].astype(np.int64))
+            logical = (start_arr[:, None].astype(INDEX_DTYPE)
+                       + np.arange(t, dtype=INDEX_DTYPE)[None, :])
+            valid = (np.arange(t, dtype=INDEX_DTYPE)[None, :]
+                     < as_index(lengths)[:, None])
             psc = self._scatter_indices(slot_ids, logical, valid)
             pgi = self._gather_indices(slot_ids)
             logits, self.cache = self._resume_prefill_paged(
@@ -764,7 +764,7 @@ class PhaseExecutor:
         the same effect batch composition has in any capacity-dropped MoE."""
         if self.paged and self.fused_decode != "off":
             rows = np.arange(self.n_slots)
-            li = np.asarray(lengths, np.int64)
+            li = as_index(lengths)
             psc = self._scatter_indices(rows, li, li > 0)
             logits, vals, ids, lse, self.cache = self._decode_fused(
                 self.params, self.cache, jnp.asarray(tokens, np.int32),
@@ -774,7 +774,7 @@ class PhaseExecutor:
             self.counters["fused_decode_steps"] += 1
         elif self.paged:
             rows = np.arange(self.n_slots)
-            li = np.asarray(lengths, np.int64)
+            li = as_index(lengths)
             psc = self._scatter_indices(rows, li, li > 0)
             pgi = self._gather_indices(rows)
             logits, self.cache = self._decode_paged(
@@ -812,11 +812,11 @@ class PhaseExecutor:
             # rows and dummy branches resolve to the drop index here, on
             # the host — the program itself is gating-free
             rows = np.arange(self.n_slots)
-            li = np.asarray(lengths, np.int64)[:, None]
-            st = np.asarray(starts, np.int64)[:, None]
-            b = np.arange(C, dtype=np.int64)[None, :]
+            li = as_index(lengths)[:, None]
+            st = as_index(starts)[:, None]
+            b = np.arange(C, dtype=INDEX_DTYPE)[None, :]
             logical = st + b * self.branch_stride + (li - st)
-            valid = (li > 0) & (b < np.asarray(counts, np.int64)[:, None])
+            valid = (li > 0) & (b < as_index(counts)[:, None])
             psc = self._scatter_indices(rows, logical, valid)
             if self.fused_decode != "off":
                 logits, vals, ids, lse, self.cache = self._decode_multi_fused(
@@ -857,7 +857,8 @@ class PhaseExecutor:
         """Top-k over logits; returns host (vals, ids)."""
         self.counters["select_calls"] += 1
         vals, ids = self._select(logits)
-        return np.asarray(vals), np.asarray(ids)
+        # the scheduler's one sanctioned phase-boundary readback
+        return np.asarray(vals), np.asarray(ids)  # lint: allow[hidden-host-sync]
 
     def select_scored(self, logits
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -882,8 +883,9 @@ class PhaseExecutor:
         if len(shape) > 2:
             logits = logits.reshape((-1, shape[-1]))
         vals, ids, lse = self._select_scored(logits)
-        vals, ids = np.asarray(vals), np.asarray(ids)
-        lse = np.asarray(lse)
+        # sanctioned phase-boundary readback (see select)
+        vals, ids = np.asarray(vals), np.asarray(ids)  # lint: allow[hidden-host-sync]
+        lse = np.asarray(lse)  # lint: allow[hidden-host-sync]
         if len(shape) > 2:
             vals = vals.reshape(shape[:-1] + (self.topk,))
             ids = ids.reshape(shape[:-1] + (self.topk,))

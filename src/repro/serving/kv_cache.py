@@ -32,6 +32,17 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+# The one page-table index dtype. int32 is safe for every flat index the
+# pool can produce — (n_pages + 1) * page_size stays far below 2**31 —
+# and matches the device-side gather operand dtype, so host index math
+# never widens to int64 and back (the `index-dtype-drift` lint rule).
+INDEX_DTYPE = np.int32
+
+
+def as_index(x) -> np.ndarray:
+    """Coerce slot ids / page tables / offsets to ``INDEX_DTYPE``."""
+    return np.asarray(x, dtype=INDEX_DTYPE)
+
 
 @dataclasses.dataclass
 class SlotState:

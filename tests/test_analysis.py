@@ -1,0 +1,425 @@
+"""Fixture tests for the repro.analysis linter.
+
+One positive (fires) and one negative (clean) snippet per rule — the
+``jnp-module-constant`` positive is the PR 8 tracer-leak class verbatim —
+plus baseline add/expire semantics, the JSON report schema, suppression
+comments, and a CLI smoke test.  Pure stdlib: none of this imports jax.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (ALL_RULES, Baseline, RULES_BY_NAME, lint_paths,
+                            lint_source, select_rules)
+from repro.analysis.findings import REPORT_VERSION
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_rule(rule_name, source, path="src/repro/serving/fixture.py"):
+    return lint_source(textwrap.dedent(source), path,
+                       rules=[RULES_BY_NAME[rule_name]])
+
+
+# -- jnp-module-constant ------------------------------------------------------
+
+# the PR 8 tracer-leak class: a module-level jnp constant built at import
+# time leaks a tracer when the first import happens inside a jit trace
+PR8_TRACER_LEAK = """
+    import jax.numpy as jnp
+
+    _FAR_START = jnp.int32(2 ** 30)
+"""
+
+
+def test_jnp_module_constant_positive():
+    (f,) = run_rule("jnp-module-constant", PR8_TRACER_LEAK)
+    assert f.rule == "jnp-module-constant"
+    assert f.snippet == "_FAR_START = jnp.int32(2 ** 30)"
+    assert "tracer" in f.message
+
+
+def test_jnp_module_constant_negative():
+    clean = """
+        import jax.numpy as jnp
+
+        _FAR_START = 2 ** 30                  # plain int: the PR 8 fix
+        E4M3 = jnp.float8_e4m3fn              # dtype attr, not a call
+        _FP8_MAX = float(jnp.finfo(jnp.float8_e4m3fn).max)  # metadata
+
+        def inside(x):
+            return x + jnp.ones((4,))         # function scope is fine
+    """
+    assert run_rule("jnp-module-constant", clean) == []
+
+
+# -- donated-buffer-reuse -----------------------------------------------------
+
+def test_donated_buffer_reuse_positive():
+    bad = """
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def update(cache, x):
+            return cache + x
+
+        def step(cache, x):
+            out = update(cache, x)
+            return out + cache.sum()
+    """
+    (f,) = run_rule("donated-buffer-reuse", bad)
+    assert "DONATED" in f.message and "cache" in f.message
+
+
+def test_donated_buffer_reuse_negative():
+    good = """
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_fn(params, cache, tok):
+            return tok.sum(), cache
+
+        class Exec:
+            def __init__(self):
+                self._decode = decode_fn
+
+            def step(self, tok):
+                # the executor idiom: rebind the donated buffer in the
+                # same assignment
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  tok)
+                return logits
+    """
+    assert run_rule("donated-buffer-reuse", good) == []
+
+
+# -- tracer-host-branch -------------------------------------------------------
+
+def test_tracer_host_branch_positive():
+    bad = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def clip(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+    """
+    (f,) = run_rule("tracer-host-branch", bad)
+    assert "TRACER" in f.message and "clip" in f.message
+
+
+def test_tracer_host_branch_negative():
+    good = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def clip(x, interpret=None):
+            if interpret is None:          # host value: fine
+                interpret = False
+            return jnp.where(jnp.any(x > 0), x, -x)
+
+        def host_fn(x):
+            if jnp.any(x > 0):             # not jitted: host branch is legal
+                return x
+            return -x
+    """
+    assert run_rule("tracer-host-branch", good) == []
+
+
+# -- fp8-payload-arith --------------------------------------------------------
+
+def test_fp8_payload_arith_positive():
+    bad = """
+        import jax.numpy as jnp
+
+        def store(k, scale):
+            kq = k.astype(jnp.float8_e4m3fn)
+            return kq * scale
+    """
+    (f,) = run_rule("fp8-payload-arith", bad,
+                    path="src/repro/layers/attention.py")
+    assert "dequantize" in f.message
+
+
+def test_fp8_payload_arith_negative():
+    dequant_first = """
+        import jax.numpy as jnp
+
+        def read(kq, scale):
+            k = kq.astype(jnp.bfloat16)
+            return k * scale
+    """
+    assert run_rule("fp8-payload-arith", dequant_first,
+                    path="src/repro/layers/attention.py") == []
+    # the quantize/dequantize seam itself is exempt
+    seam = """
+        import jax.numpy as jnp
+
+        def quantize_kv(k, scale):
+            kq = (k / scale).astype(jnp.float8_e4m3fn)
+            return kq * 1.0
+    """
+    assert run_rule("fp8-payload-arith", seam,
+                    path="src/repro/core/quant.py") == []
+
+
+# -- unbucketed-jit-shape -----------------------------------------------------
+
+def test_unbucketed_jit_shape_positive():
+    bad = """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def prog(x):
+            return x * 2
+
+        def dispatch(items):
+            buf = np.zeros((len(items), 4), np.float32)
+            return prog(jnp.asarray(buf))
+    """
+    (f,) = run_rule("unbucketed-jit-shape", bad)
+    assert "bucket_length" in f.message
+
+
+def test_unbucketed_jit_shape_negative():
+    good = """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.serving.scheduler import bucket_length
+
+        @jax.jit
+        def prog(x):
+            return x * 2
+
+        def dispatch(items):
+            buf = np.zeros((bucket_length(len(items)), 4), np.float32)
+            return prog(jnp.asarray(buf))
+
+        def host_only(items):
+            return np.zeros((len(items),))   # no jit dispatch: fine
+    """
+    assert run_rule("unbucketed-jit-shape", good) == []
+
+
+# -- hidden-host-sync ---------------------------------------------------------
+
+def test_hidden_host_sync_positive():
+    bad = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def prog(x):
+            return x * 2
+
+        def step(x):
+            y = prog(x)
+            n = float(y)
+            return np.asarray(y), y.item(), n
+    """
+    findings = run_rule("hidden-host-sync", bad)
+    kinds = {f.snippet for f in findings}
+    assert len(findings) == 3
+    assert any("float" in s for s in kinds)
+
+
+def test_hidden_host_sync_negative_allow_comment():
+    sanctioned = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def prog(x):
+            return x * 2
+
+        def step(x):
+            y = prog(x)
+            return np.asarray(y)  # lint: allow[hidden-host-sync]
+    """
+    assert run_rule("hidden-host-sync", sanctioned) == []
+
+
+# -- index-dtype-drift --------------------------------------------------------
+
+def test_index_dtype_drift_positive():
+    bad = """
+        import numpy as np
+
+        def gather(tabs, ids):
+            idx = np.asarray(ids, np.int64)
+            return tabs[idx].astype(np.int32)
+    """
+    (f,) = run_rule("index-dtype-drift", bad)
+    assert "as_index" in f.message
+
+
+def test_index_dtype_drift_negative():
+    good = """
+        import numpy as np
+        from repro.serving.kv_cache import as_index
+
+        def gather(tabs, ids):
+            return tabs[as_index(ids)]
+    """
+    assert run_rule("index-dtype-drift", good) == []
+    # out of scope: data modules may mix widths legitimately
+    mixed_elsewhere = """
+        import numpy as np
+
+        def zipf(n):
+            big = np.arange(n, dtype=np.int64)
+            return big.astype(np.int32)
+    """
+    assert lint_source(textwrap.dedent(mixed_elsewhere),
+                       "src/repro/data/recsys_data.py",
+                       rules=[RULES_BY_NAME["index-dtype-drift"]]) == []
+
+
+# -- baseline semantics -------------------------------------------------------
+
+def test_baseline_match_and_expire(tmp_path):
+    src = tmp_path / "serving"
+    src.mkdir()
+    mod = src / "mod.py"
+    mod.write_text(textwrap.dedent(PR8_TRACER_LEAK))
+
+    # round 1: finding is new
+    r1 = lint_paths([str(src)], root=str(tmp_path))
+    assert len(r1.new) == 1 and r1.failed()
+
+    # accept it into the baseline -> baselined, not fatal
+    bl = Baseline.from_findings(r1.all_findings)
+    bl_path = tmp_path / "baseline.json"
+    bl.save(str(bl_path))
+    r2 = lint_paths([str(src)], baseline=Baseline.load(str(bl_path)),
+                    root=str(tmp_path))
+    assert r2.new == [] and len(r2.baselined) == 1
+    assert not r2.failed() and not r2.failed(fail_on_expired=True)
+
+    # fix the violation -> the entry expires; only --fail-on-expired trips
+    mod.write_text("import jax.numpy as jnp\n\n_FAR_START = 2 ** 30\n")
+    r3 = lint_paths([str(src)], baseline=Baseline.load(str(bl_path)),
+                    root=str(tmp_path))
+    assert r3.new == [] and r3.baselined == []
+    assert [k[1] for k in r3.expired] == ["jnp-module-constant"]
+    assert not r3.failed() and r3.failed(fail_on_expired=True)
+
+
+def test_baseline_counts_duplicate_lines(tmp_path):
+    src = tmp_path / "serving"
+    src.mkdir()
+    dup = ("import jax.numpy as jnp\n\n"
+           "A = jnp.ones((4,))\n"
+           "A = jnp.ones((4,))\n")
+    (src / "mod.py").write_text(dup)
+    r1 = lint_paths([str(src)], root=str(tmp_path))
+    assert len(r1.new) == 2
+    bl = Baseline.from_findings(r1.all_findings)
+    assert list(bl.entries.values()) == [2]    # one key, count 2
+    r2 = lint_paths([str(src)], baseline=bl, root=str(tmp_path))
+    assert r2.new == [] and len(r2.baselined) == 2
+
+
+def test_baseline_rejects_bad_version(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"version": 99, "entries": {}}))
+    with pytest.raises(ValueError, match="version"):
+        Baseline.load(str(p))
+
+
+# -- report schema ------------------------------------------------------------
+
+def test_report_schema(tmp_path):
+    src = tmp_path / "serving"
+    src.mkdir()
+    (src / "mod.py").write_text(textwrap.dedent(PR8_TRACER_LEAK))
+    report = lint_paths([str(src)], root=str(tmp_path)).report()
+    assert report["version"] == REPORT_VERSION
+    assert report["files_scanned"] == 1
+    assert report["new"] == 1 and report["baselined"] == 0
+    assert report["expired_baseline"] == []
+    assert report["rules"] == sorted(r.name for r in ALL_RULES)
+    (finding,) = report["findings"]
+    assert set(finding) == {"file", "line", "col", "rule", "message",
+                            "snippet", "baselined"}
+    assert finding["file"] == "serving/mod.py"
+    assert finding["baselined"] is False
+
+
+# -- rule selection / misc ----------------------------------------------------
+
+def test_select_rules():
+    assert [r.name for r in select_rules(None)] == \
+        [r.name for r in ALL_RULES]
+    assert [r.name for r in select_rules(["hidden-host-sync"])] == \
+        ["hidden-host-sync"]
+    with pytest.raises(KeyError, match="unknown lint rule"):
+        select_rules(["no-such-rule"])
+
+
+def test_rule_catalog_has_seven_plus_rules():
+    assert len(ALL_RULES) >= 7
+    assert {"jnp-module-constant", "donated-buffer-reuse",
+            "tracer-host-branch", "fp8-payload-arith",
+            "unbucketed-jit-shape", "hidden-host-sync",
+            "index-dtype-drift"} <= set(RULES_BY_NAME)
+
+
+def test_syntax_error_is_loud(tmp_path):
+    src = tmp_path / "serving"
+    src.mkdir()
+    (src / "bad.py").write_text("def broken(:\n")
+    with pytest.raises(SyntaxError):
+        lint_paths([str(src)], root=str(tmp_path))
+
+
+# -- shipped tree + CLI -------------------------------------------------------
+
+def test_shipped_tree_is_clean_with_empty_baseline():
+    baseline = Baseline.load(str(REPO / "scripts" / "lint_baseline.json"))
+    assert baseline.entries == {}, "shipped baseline must stay empty"
+    result = lint_paths([str(REPO / "src" / "repro")], baseline=baseline,
+                        root=str(REPO))
+    assert result.new == [], "\n".join(str(f) for f in result.new)
+    assert result.expired == []
+
+
+def test_cli_smoke(tmp_path):
+    src = tmp_path / "serving"
+    src.mkdir()
+    (src / "mod.py").write_text(textwrap.dedent(PR8_TRACER_LEAK))
+    report_path = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_repro.py"), str(src),
+         "--baseline", str(tmp_path / "baseline.json"),
+         "--json", str(report_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "jnp-module-constant" in proc.stdout
+    report = json.loads(report_path.read_text())
+    assert report["new"] == 1
+
+    # --update-baseline accepts it; the next run exits 0
+    subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_repro.py"), str(src),
+         "--baseline", str(tmp_path / "baseline.json"), "--update-baseline"],
+        check=True, capture_output=True)
+    proc2 = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_repro.py"), str(src),
+         "--baseline", str(tmp_path / "baseline.json")],
+        capture_output=True, text=True)
+    assert proc2.returncode == 0
+    assert "[baselined]" in proc2.stdout

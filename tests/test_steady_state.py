@@ -1,0 +1,173 @@
+"""Runtime steady-state guards: the post-warmup serving contract.
+
+The paper's serving wins assume the hot path is compile-free after
+warmup: every shape a steady-state step can produce was already compiled
+(the pow-2 bucket lattice), and no value crosses host<->device
+implicitly.  These tests prove the guards measure exactly that — the
+warmed engine (paged + fp8 KV + fused interpret decode) steps ≥8 times
+with ZERO new XLA compilations and zero implicit transfers — and that
+the guard actually TRIPS on each injected violation class.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.guards import (CompileMonitor, SteadyStateViolation,
+                                   steady_state, warmup_then_guard)
+from repro.configs.base import OneRecConfig, TransformerConfig
+from repro.models import onerec as onerec_model
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.requests import make_request
+
+SEED = 31
+PAGE = 8
+
+
+def _cfg() -> OneRecConfig:
+    return OneRecConfig(
+        name="onerec-steady-test",
+        history_len=8,
+        transformer=TransformerConfig(
+            name="onerec-steady-test-backbone",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=256, moe=True, n_experts=4, top_k=2,
+            d_expert=64, capacity_factor=64.0, ep_degree=4,
+            max_seq_len=64, remat=False),
+        serve_batch=4, beam_width=4)
+
+
+@pytest.fixture(scope="module")
+def warmed_engine():
+    """The full serving feature stack — paged pool + fp8 KV storage +
+    fused interpret decode — warmed on the exact request list the steady
+    phase will replay (identical batch composition -> identical bucket
+    shapes)."""
+    cfg = _cfg()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(SEED)
+    reqs = []
+    for _ in range(12):
+        n_items = int(rng.integers(2, cfg.history_len + 1))
+        reqs.append(make_request(
+            rng.integers(0, 192, size=n_items * cfg.n_codebooks),
+            rng.normal(size=onerec_model.PROFILE_DIM)))
+    engine = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, n_slots=3, mode="continuous", use_fp8=False,
+        kv_dtype="float8_e4m3fn", paged=True, page_size=PAGE,
+        fused_decode="interpret"))
+    warm_out, _ = engine.serve_requests(reqs)     # all compiles land here
+    return engine, reqs, warm_out
+
+
+# -- the steady-state contract ------------------------------------------------
+
+def test_steady_engine_steps_compile_and_transfer_free(warmed_engine):
+    """≥8 post-warmup decode steps: zero new compilations, zero implicit
+    transfers, and the outputs still match the warmup pass."""
+    engine, reqs, warm_out = warmed_engine
+    with engine.steady_state() as mon:
+        out, stats = engine.serve_requests(reqs)
+    assert stats["decode_steps"] >= 8
+    assert stats["fused_decode_steps"] == stats["decode_steps"]
+    assert mon.compiles == 0
+    for a, b in zip(out, warm_out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_guard_trips_on_unbucketed_shape(warmed_engine):
+    """A deliberately unbucketed dispatch — a shape no warmup step ever
+    produced — must compile, and the guard must turn that into a loud
+    SteadyStateViolation."""
+    engine, reqs, _ = warmed_engine
+    odd = jnp.zeros((5, 37), jnp.float32)         # 5 and 37 are no buckets
+    with pytest.raises(SteadyStateViolation, match="compilation"):
+        with engine.steady_state() as mon:
+            engine.executor._select(odd)
+    assert mon.compiles >= 1
+
+
+def test_guard_trips_on_implicit_transfer(warmed_engine):
+    """A raw numpy operand flowing into a jitted program is an IMPLICIT
+    host->device transfer and must raise immediately under the guard
+    (the engine's own jnp.asarray staging is explicit and sanctioned)."""
+    engine, _, _ = warmed_engine
+    vocab = engine.cfg.transformer.vocab_size
+    host_logits = np.zeros((4, vocab), np.float32)
+    jax.block_until_ready(
+        engine.executor._select(jnp.asarray(host_logits)))  # warmed shape
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with engine.steady_state():
+            engine.executor._select(host_logits)
+
+
+# -- guard unit behavior (no engine) ------------------------------------------
+
+def test_compile_monitor_counts_fresh_compiles_only():
+    @jax.jit
+    def f(x):
+        return x * 2 + 1
+
+    jax.block_until_ready(f(jnp.ones((4,))))      # warm
+    with CompileMonitor() as mon:
+        jax.block_until_ready(f(jnp.ones((4,))))  # cache hit
+    assert mon.compiles == 0
+    with CompileMonitor() as mon:
+        jax.block_until_ready(f(jnp.ones((6,))))  # fresh shape
+    assert mon.compiles >= 1
+    assert mon.traces >= 1
+
+
+def test_nested_monitors_count_independently():
+    @jax.jit
+    def g(x):
+        return x - 1
+
+    with CompileMonitor() as outer:
+        jax.block_until_ready(g(jnp.ones((3,))))
+        with CompileMonitor() as inner:
+            jax.block_until_ready(g(jnp.ones((3,))))   # warmed above
+    assert outer.compiles >= 1
+    assert inner.compiles == 0
+
+
+def test_steady_state_max_compiles_budget():
+    @jax.jit
+    def h(x):
+        return x + 3
+
+    # operands built OUTSIDE the guard (jnp.ones compiles a program of
+    # its own); allow_transfers because a fresh compile stages scalar
+    # constants, which the transfer guard would flag before the budget
+    # check ever runs
+    x7, x9 = jnp.ones((7,)), jnp.ones((9,))
+    with steady_state(allow_transfers=True, max_compiles=1) as mon:
+        jax.block_until_ready(h(x7))
+    assert mon.compiles == 1
+    with pytest.raises(SteadyStateViolation):
+        with steady_state(allow_transfers=True):
+            jax.block_until_ready(h(x9))
+
+
+def test_steady_state_does_not_mask_inner_exception():
+    @jax.jit
+    def m(x):
+        return x + 1
+
+    x = jnp.ones((11,))
+    with pytest.raises(ValueError, match="inner"):
+        with steady_state(allow_transfers=True):
+            jax.block_until_ready(m(x))   # compiles — but the user error
+            raise ValueError("inner")     # must win over the violation
+
+
+def test_warmup_then_guard():
+    @jax.jit
+    def k(x):
+        return x * x
+
+    x = jnp.ones((5,))
+    with warmup_then_guard(lambda: jax.block_until_ready(k(x))) as mon:
+        jax.block_until_ready(k(x))
+    assert mon.compiles == 0
