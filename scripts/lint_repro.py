@@ -22,8 +22,20 @@ import argparse
 import json
 import os
 import sys
+import types
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+sys.path.insert(0, _SRC)
+
+# The linter must run before heavy deps are even installed (CI lints
+# first), but `repro/__init__` eagerly imports the quant core and with
+# it jax + numpy.  Pre-register a bare package stub so `repro.analysis`
+# (pure stdlib) resolves through the stub's __path__ without ever
+# executing the eager package __init__.
+if "repro" not in sys.modules:
+    _stub = types.ModuleType("repro")
+    _stub.__path__ = [os.path.join(_SRC, "repro")]
+    sys.modules["repro"] = _stub
 
 from repro.analysis import (ALL_RULES, Baseline, lint_paths,  # noqa: E402
                             select_rules)

@@ -60,9 +60,13 @@ class ModuleContext:
         self._scan_imports()
         self.allows: Dict[int, Set[str]] = self._scan_allows()
         # name -> donated positional indices (empty tuple = jitted, no
-        # donation); alias dotted path ("self._decode") -> registry name
+        # donation); alias dotted path ("self._decode") -> registry name;
+        # jit_wrapped: bodies traced under jit without carrying the
+        # registry name themselves (the g of ``f = jax.jit(g)``) — their
+        # bodies are jit-linted, but direct g(...) calls stay undonated
         self.jit_fns: Dict[str, Tuple[int, ...]] = {}
         self.jit_aliases: Dict[str, str] = {}
+        self.jit_wrapped: Set[str] = set()
         self._scan_jit_registry()
 
     # -- imports --------------------------------------------------------------
@@ -175,6 +179,14 @@ class ModuleContext:
                     pos = self._jit_decorator(val)    # f = jax.jit(g, ...)
                     if pos is not None:
                         self.jit_fns[tgt] = pos
+                        # the wrapped g's BODY is what jit traces — record
+                        # it so body rules (tracer-host-branch) see it
+                        # (direct jit(g) only; partial(jax.jit, ...) wraps
+                        # nothing yet)
+                        if self._is_jax_jit(val.func) and val.args:
+                            wrapped = dotted(val.args[0])
+                            if wrapped is not None:
+                                self.jit_wrapped.add(wrapped)
                         continue
                 src = dotted(val)                     # self._decode = decode_fn
                 if src in self.jit_fns:

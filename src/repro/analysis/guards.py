@@ -60,13 +60,20 @@ def _dispatch(event: str, duration: float, **kwargs) -> None:
 
 def _ensure_dispatcher() -> None:
     """Register the forwarding listener once, lazily (JAX has no
-    unregister API, so the hook must be global and idempotent)."""
+    unregister API, so the hook must be global and idempotent).
+
+    The registration happens under the lock and the flag is only set on
+    success: if the register call ever raises, the next monitor retries
+    instead of silently counting zero compiles forever.  Safe to hold
+    the lock across the call — registering only appends to a listener
+    list and never emits events itself.
+    """
     global _dispatcher_registered
     with _lock:
         if _dispatcher_registered:
             return
+        jax.monitoring.register_event_duration_secs_listener(_dispatch)
         _dispatcher_registered = True
-    jax.monitoring.register_event_duration_secs_listener(_dispatch)
 
 
 class CompileMonitor:

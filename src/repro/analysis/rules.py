@@ -220,7 +220,10 @@ class TracerHostBranch(Rule):
 
     def check(self, ctx: ModuleContext) -> Iterable[Finding]:
         for fn in ctx.functions():
-            if fn.name not in ctx.jit_fns:
+            # jit_wrapped covers the call form `f = jax.jit(g)`: g's
+            # body is what gets traced, even though the registry keys f
+            if fn.name not in ctx.jit_fns \
+                    and fn.name not in ctx.jit_wrapped:
                 continue
             for node in ast.walk(fn):
                 if isinstance(node, (ast.If, ast.While)) \

@@ -13,6 +13,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quant import QuantizedTensor, matmul_any
 
@@ -69,5 +70,7 @@ def param_count(params) -> int:
         if isinstance(leaf, QuantizedTensor):
             total += leaf.data.size
         else:
-            total += leaf.size
+            # np.size stays host-side for jax arrays and tolerates
+            # scalar / list leaves (counts 1 / len) like jnp.size did
+            total += np.size(leaf)
     return total

@@ -117,6 +117,24 @@ def test_tracer_host_branch_positive():
     assert "TRACER" in f.message and "clip" in f.message
 
 
+def test_tracer_host_branch_call_form_positive():
+    # `f = jax.jit(g)` registers f, but g's BODY is what gets traced —
+    # the wrapped function must be linted too
+    bad = """
+        import jax
+        import jax.numpy as jnp
+
+        def clip(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+
+        clip_fast = jax.jit(clip)
+    """
+    (f,) = run_rule("tracer-host-branch", bad)
+    assert "clip" in f.message and "TRACER" in f.message
+
+
 def test_tracer_host_branch_negative():
     good = """
         import jax
@@ -395,6 +413,33 @@ def test_shipped_tree_is_clean_with_empty_baseline():
                         root=str(REPO))
     assert result.new == [], "\n".join(str(f) for f in result.new)
     assert result.expired == []
+
+
+def test_cli_runs_without_heavy_deps(tmp_path):
+    """CI lints BEFORE installing jax/numpy: the CLI must work with both
+    import-blocked (it stubs the eager `repro` package __init__)."""
+    src = tmp_path / "serving"
+    src.mkdir()
+    (src / "mod.py").write_text(textwrap.dedent(PR8_TRACER_LEAK))
+    driver = textwrap.dedent(f"""
+        import runpy, sys
+
+        class _BlockHeavyDeps:
+            def find_spec(self, name, path=None, target=None):
+                if name.split(".")[0] in ("jax", "jaxlib", "numpy"):
+                    raise ImportError(f"linter imported heavy dep {{name}}")
+                return None
+
+        sys.meta_path.insert(0, _BlockHeavyDeps())
+        sys.argv = ["lint_repro.py", {str(src)!r}]
+        runpy.run_path({str(REPO / "scripts" / "lint_repro.py")!r},
+                       run_name="__main__")
+    """)
+    proc = subprocess.run([sys.executable, "-c", driver],
+                          capture_output=True, text=True)
+    assert "ImportError" not in proc.stderr, proc.stderr
+    assert proc.returncode == 1, proc.stderr          # the finding, not a crash
+    assert "jnp-module-constant" in proc.stdout
 
 
 def test_cli_smoke(tmp_path):
