@@ -135,6 +135,54 @@ def measured_cpu(n_requests: int = 32, batch: int = 8, seed: int = 0):
     return out
 
 
+def measured_quant_policy(n_requests: int = 16, batch: int = 8,
+                          seed: int = 0,
+                          artifact: str = "results/quant_policy_onerec-v2.json"):
+    """Uniform PAPER_POLICY vs the auto-tuned mixed-precision policy.
+
+    Loads the tuner artifact when present (``launch/autotune.py`` emits
+    it); otherwise runs a short in-process search.  The signal is the
+    frontier — teacher-forced top-8 overlap vs quantized byte coverage —
+    plus the served latency of the tuned engine (CPU emulates fp8, so
+    equal-ish wall time is expected; the byte/overlap trade is real).
+    """
+    from repro.core.autotune import autotune, make_eval_task, measure
+    from repro.core.policy import PAPER_POLICY, load_policy_artifact
+
+    cfg = registry.get_arch("onerec-v2").reduced_config()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
+    requests = build_requests(cfg, n_requests, batch, seed=seed,
+                              ragged=False)
+
+    task = make_eval_task("onerec-v2", seed=seed)
+    if os.path.exists(artifact):
+        art = load_policy_artifact(artifact)
+        policy, act_scales = art["policy"], art["act_scales"]
+        source = artifact
+    else:
+        res = autotune(task, target=0.6, max_steps=8)
+        policy, act_scales = res.policy, res.act_scales
+        source = "inline autotune (artifact missing)"
+    uni_overlap, uni_bytes, _ = measure(task, PAPER_POLICY)
+    tuned_overlap, tuned_bytes, _ = measure(task, policy,
+                                            act_scales or None)
+
+    out = {"seed": seed, "policy_source": source,
+           "n_overrides": len(policy.overrides),
+           "static_acts": bool(policy.static_acts),
+           "uniform": {"overlap": uni_overlap, "bytes": uni_bytes},
+           "tuned": {"overlap": tuned_overlap, "bytes": tuned_bytes}}
+    for name, pol in (("uniform_engine", None), ("tuned_engine", policy)):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            batch_size=batch, mode="fixed",
+            quant_policy=artifact if (pol is not None
+                                      and source == artifact) else pol))
+        eng.serve_requests(requests[:batch])  # warmup/compile
+        _, stats = eng.serve_requests(requests)
+        out[name] = stats
+    return out
+
+
 def _bench_cfg(capacity_factor: float = 1.5) -> OneRecConfig:
     """Scheduler-A/B config: reduced-family backbone but long enough ragged
     histories (24..192 tokens) that prefill compute dominates dispatch.
@@ -985,6 +1033,25 @@ def run(only=None) -> list:
                     f"{m_bf['mean_latency_s']*1e6:.0f},")
         rows.append(f"serve_cpu/fp8_latency,{m_f8['mean_latency_s']*1e6:.0f},")
 
+    if want("quant_policy_ab"):
+        qp = measured_quant_policy()
+        report["quant_policy_ab"] = qp
+        u, t = qp["uniform"], qp["tuned"]
+        ue, te = qp["uniform_engine"], qp["tuned_engine"]
+        print(f"[quant-policy A/B, {qp['policy_source']}] top-8 overlap "
+              f"{u['overlap']:.3f} -> {t['overlap']:.3f} | quantized bytes "
+              f"{u['bytes']} -> {t['bytes']} "
+              f"(x{t['bytes']/max(u['bytes'],1):.2f}; "
+              f"{qp['n_overrides']} overrides, "
+              f"static_acts={qp['static_acts']}) | served mean "
+              f"{ue['mean_latency_s']*1e3:.1f} -> "
+              f"{te['mean_latency_s']*1e3:.1f} ms/req (CPU emulates fp8 — "
+              f"the frontier, not wall time, is the signal)")
+        rows.append(f"serve_qpolicy/tuned_overlap,"
+                    f"{1000*t['overlap']:.0f},")
+        rows.append(f"serve_qpolicy/bytes_ratio,0,"
+                    f"x{t['bytes']/max(u['bytes'],1):.2f}")
+
     if want("scheduler_ab_ragged"):
         ab = measured_scheduler_ab()
         report["scheduler_ab_ragged"] = ab
@@ -1225,7 +1292,7 @@ def run(only=None) -> list:
 
 
 
-SECTIONS = ("fp8_ab_uniform", "scheduler_ab_ragged",
+SECTIONS = ("fp8_ab_uniform", "quant_policy_ab", "scheduler_ab_ragged",
             "staggered_poisson", "hold_window_overload", "prefix_repeat",
             "prefix_admission", "chunked_prefill_sla", "multi_candidate",
             "fused_decode", "kv_fp8_capacity", "paged_kv", "tpu_projection")

@@ -5,6 +5,8 @@ from repro.core.quant import (  # noqa: F401
     E5M2,
     FP8_MAX,
     QuantizedTensor,
+    amax_to_scale,
+    capture_act_amax,
     cast_to_fp8,
     fp8_block_matmul,
     fp8_grouped_matmul,
@@ -20,11 +22,16 @@ from repro.core.quant import (  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     BASELINE_POLICY,
     PAPER_POLICY,
+    POLICY_VERSION,
     QuantPolicy,
+    load_policy_artifact,
+    save_policy_artifact,
 )
 from repro.core.ptq import (  # noqa: F401
     PTQReport,
+    apply_static_act_scales,
     calibrate_activation_scales,
+    calibrate_static_act_scales,
     dequantize_params,
     quantize_params,
 )

@@ -1,0 +1,389 @@
+"""Accuracy-driven mixed-precision auto-tuner (beyond the paper's one config).
+
+The paper ships a SINGLE fixed FP8 assignment (quantize every
+compute-dominant linear / grouped GEMM, exclude the sensitive rest) and
+validates it online.  This module turns that point into a searched
+quality/bytes frontier, in the spirit of accuracy-aware tuning loops
+(Intel Neural Compressor) and the per-operator precision assignments that
+recommendation-at-scale studies (Deng et al.; DQRM) found necessary:
+
+  1. measure the uniform ``PAPER_POLICY`` — teacher-forced top-K overlap
+     against the bf16 model (the metric proven in
+     ``tests/test_fp8_parity.py``) plus quantized-bytes coverage;
+  2. CONTRACT while overlap < target: de-quantize the worst-offending
+     pattern group by per-tensor ``rel_err`` from the :class:`PTQReport`
+     (``override(pattern, "skip")``);
+  3. EXPAND once at/above target: try fp8 on known matmul-consumable
+     groups the default policy excludes (logits head, MoE router, DIN's
+     attention MLP) — accepted only while overlap stays at/above target,
+     so the tuned policy quantizes strictly MORE bytes than the
+     overlap-equivalent uniform policy;
+  4. INT8 frontier: push the most robust (lowest rel_err) fp8 linear
+     groups down to W8A8, same acceptance rule;
+  5. optionally calibrate STATIC activation scales (removing the runtime
+     per-token amax reduction) and keep them if overlap holds.
+
+Every candidate evaluation lands in a trace; the result serializes to the
+versioned artifact of :mod:`repro.core.policy` and deploys via
+``ServingEngine`` / ``launch/serve.py --quant-policy``.
+
+Evaluation harnesses cover the zoo families: ``onerec`` (teacher-forced
+prefill+decode candidate overlap), ``lm`` (per-position logits top-K
+overlap), ``recsys`` (retrieval candidate-ranking overlap).  All run
+eagerly on reduced configs — policy candidates change the param pytree
+structure anyway, so there is nothing to cache between jit traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ptq
+from repro.core.policy import PAPER_POLICY, QuantPolicy, save_policy_artifact
+
+# Groups the DEFAULT policy leaves in high precision but whose weights are
+# consumed through ``matmul_any`` in every zoo model, so fp8 is mechanically
+# safe to TRY (acceptance is still measured).  Embedding tables are NOT here:
+# they are consumed by ``jnp.take`` and cannot hold a QuantizedTensor.
+EXPAND_PATTERNS: Tuple[str, ...] = (
+    "*lm_head*",             # transformer logits head (untied)
+    "*/moe/router/*",        # MoE router projection
+    "*/attn_mlp/*/kernel",   # DIN local activation unit
+    "*profile_proj*",        # OneRec profile token projection
+)
+
+
+@dataclasses.dataclass
+class EvalTask:
+    """A config-specific evaluation harness.
+
+    ``params`` is the high-precision pytree; ``overlap(qparams)`` returns
+    the teacher-forced top-K overlap of the quantized model against the
+    bf16 reference (1.0 = identical candidate sets); ``calib_forward`` /
+    ``calib_batches`` drive eager static-scale calibration.
+    """
+
+    name: str
+    family: str
+    params: Any
+    overlap: Callable[[Any], float]
+    calib_forward: Optional[Callable[[Any, Any], Any]] = None
+    calib_batches: Sequence[Any] = ()
+
+
+def _topk_overlap(lg_a, lg_b, k: int) -> float:
+    V = lg_a.shape[-1]
+    a = np.argsort(-np.asarray(lg_a, np.float32).reshape(-1, V), -1)[:, :k]
+    b = np.argsort(-np.asarray(lg_b, np.float32).reshape(-1, V), -1)[:, :k]
+    return float(np.mean([len(set(x) & set(y)) / k for x, y in zip(a, b)]))
+
+
+def _rank_overlap(s_a, s_b, k: int) -> float:
+    """Top-k overlap of two 1-D candidate score vectors."""
+    a = np.argsort(-np.asarray(s_a, np.float32).ravel())[:k]
+    b = np.argsort(-np.asarray(s_b, np.float32).ravel())[:k]
+    return len(set(a) & set(b)) / k
+
+
+def _onerec_task(name: str, cfg, *, seed: int, topk: int) -> EvalTask:
+    from repro.models import onerec as onerec_model
+
+    params = onerec_model.init_onerec(jax.random.PRNGKey(seed), cfg)
+    T = cfg.history_len * cfg.n_codebooks
+    B = 4
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(seed + 1), (B, T), 0,
+                                     cfg.vocab_size),
+        "profile": jax.random.normal(jax.random.PRNGKey(seed + 2),
+                                     (B, onerec_model.PROFILE_DIM)),
+    }
+
+    # bf16 teacher trajectory: greedy tokens + per-step logits, fixed once.
+    ref_logits: List[np.ndarray] = []
+    forced: List[jax.Array] = []
+    cache = onerec_model.init_cache(cfg, B)
+    lg, cache = onerec_model.prefill(params, batch, cfg, cache)
+    index = jnp.int32(T + 1)
+    for t in range(cfg.decode_len):
+        ref_logits.append(np.asarray(lg, np.float32))
+        nxt = jax.lax.top_k(lg, 1)[1].astype(jnp.int32)       # (B, 1)
+        forced.append(nxt)
+        lg, cache = onerec_model.decode_step(params, nxt, cfg, cache, index)
+        index = index + 1
+
+    def overlap(qparams) -> float:
+        c = onerec_model.init_cache(cfg, B)
+        lg_q, c = onerec_model.prefill(qparams, batch, cfg, c)
+        idx = jnp.int32(T + 1)
+        vals = []
+        for t in range(cfg.decode_len):
+            vals.append(_topk_overlap(ref_logits[t], lg_q, topk))
+            lg_q, c = onerec_model.decode_step(qparams, forced[t], cfg, c, idx)
+            idx = idx + 1
+        return float(np.mean(vals))
+
+    def calib_forward(qparams, b):
+        onerec_model.forward(qparams, b, cfg, unroll_layers=True)
+
+    return EvalTask(name=name, family="onerec", params=params,
+                    overlap=overlap, calib_forward=calib_forward,
+                    calib_batches=[batch])
+
+
+def _lm_task(name: str, cfg, *, seed: int, topk: int) -> EvalTask:
+    from repro.models import transformer as tfm
+
+    params = tfm.init_transformer(jax.random.PRNGKey(seed), cfg)
+    B, T = 4, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1), (B, T), 0,
+                                cfg.vocab_size)
+    ref, _ = tfm.forward(params, tokens, cfg)
+    ref = np.asarray(ref, np.float32)
+
+    def overlap(qparams) -> float:
+        lg, _ = tfm.forward(qparams, tokens, cfg)
+        return _topk_overlap(ref, lg, topk)
+
+    def calib_forward(qparams, b):
+        tfm.forward(qparams, b, cfg, unroll_layers=True)
+
+    return EvalTask(name=name, family="lm", params=params, overlap=overlap,
+                    calib_forward=calib_forward, calib_batches=[tokens])
+
+
+def _recsys_task(name: str, cfg, *, seed: int, topk: int,
+                 n_users: int = 4, n_candidates: int = 64) -> EvalTask:
+    from repro.models import recsys as recsys_model
+
+    params = recsys_model.init_recsys(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    batches = []
+    for _ in range(n_users):
+        batches.append({
+            "hist_ids": jnp.asarray(rng.integers(
+                0, cfg.n_items, (1, cfg.seq_len)), jnp.int32),
+            "candidate_ids": jnp.asarray(rng.integers(
+                0, cfg.n_items, (n_candidates,)), jnp.int32),
+            "field_ids": jnp.asarray(rng.integers(
+                0, cfg.field_vocab, (1, cfg.n_sparse_fields)), jnp.int32),
+        })
+    refs = [np.asarray(recsys_model.retrieval_scores(params, b, cfg),
+                       np.float32) for b in batches]
+
+    def overlap(qparams) -> float:
+        vals = [_rank_overlap(r, recsys_model.retrieval_scores(qparams, b, cfg),
+                              topk)
+                for r, b in zip(refs, batches)]
+        return float(np.mean(vals))
+
+    def calib_forward(qparams, b):
+        recsys_model.retrieval_scores(qparams, b, cfg)
+
+    return EvalTask(name=name, family="recsys", params=params,
+                    overlap=overlap, calib_forward=calib_forward,
+                    calib_batches=batches)
+
+
+def make_eval_task(arch: str, *, seed: int = 0, topk: int = 8) -> EvalTask:
+    """Build the family-appropriate harness for a zoo config (reduced)."""
+    from repro.configs.registry import get_arch
+
+    mod = get_arch(arch)
+    cfg = mod.reduced_config()
+    family = mod.FAMILY
+    if family == "onerec":
+        return _onerec_task(arch, cfg, seed=seed, topk=topk)
+    if family == "lm":
+        return _lm_task(arch, cfg, seed=seed, topk=topk)
+    if family == "recsys":
+        return _recsys_task(arch, cfg, seed=seed, topk=topk)
+    raise ValueError(f"no autotune eval harness for family {family!r} "
+                     f"(arch {arch!r})")
+
+
+# ---------------------------------------------------------------------------
+# Measurement + group introspection
+# ---------------------------------------------------------------------------
+
+
+def measure(task: EvalTask, policy: QuantPolicy,
+            act_scales: Optional[Dict[str, float]] = None
+            ) -> Tuple[float, int, ptq.PTQReport]:
+    """(overlap, quantized bytes_before, report) for one candidate policy."""
+    qparams, report = ptq.quantize_params(task.params, policy,
+                                          with_report=True,
+                                          compute_errors=True)
+    if act_scales:
+        qparams = ptq.apply_static_act_scales(qparams, act_scales)
+    return task.overlap(qparams), report.bytes_before, report
+
+
+def group_stats(report: ptq.PTQReport) -> List[Dict[str, Any]]:
+    """Aggregate report entries by deciding pattern (the tuner's groups)."""
+    groups: Dict[str, Dict[str, Any]] = {}
+    for e in report.entries:
+        g = groups.setdefault(e["pattern"], dict(
+            pattern=e["pattern"], kind=e["kind"], rel_err=0.0,
+            bytes=0, n_leaves=0))
+        g["rel_err"] = max(g["rel_err"], e["rel_err"])
+        g["bytes"] += e["bytes_before"]
+        g["n_leaves"] += 1
+    return sorted(groups.values(), key=lambda g: -g["rel_err"])
+
+
+def _unquantized_matches(task: EvalTask, policy: QuantPolicy,
+                         pattern: str) -> int:
+    """Bytes of ndim>=2 float leaves ``pattern`` would newly quantize."""
+    import fnmatch
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(task.params):
+        p = ptq._path_str(path)
+        if not fnmatch.fnmatch(p, pattern):
+            continue
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            continue
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        if policy.classify(p, leaf.ndim, leaf.shape) is None:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# The search
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    policy: QuantPolicy
+    overlap: float
+    bytes_quantized: int
+    uniform: Dict[str, Any]            # PAPER_POLICY reference point
+    groups: List[Dict[str, Any]]       # per-group stats under final policy
+    trace: List[Dict[str, Any]]        # every candidate evaluation
+    act_scales: Dict[str, float]       # static scales (when accepted)
+    target: float
+
+    def save(self, path: str, *, config: str = "") -> Dict[str, Any]:
+        return save_policy_artifact(
+            path, self.policy, config=config or "",
+            target_overlap=self.target,
+            measured=dict(overlap=self.overlap,
+                          bytes_quantized=self.bytes_quantized),
+            groups=self.groups, trace=self.trace, uniform=self.uniform,
+            act_scales=self.act_scales)
+
+
+def autotune(task: EvalTask, *,
+             target: float = 0.6,
+             max_steps: int = 16,
+             start: QuantPolicy = PAPER_POLICY,
+             expand_patterns: Sequence[str] = EXPAND_PATTERNS,
+             try_expand: bool = True,
+             try_int8: bool = True,
+             max_int8: int = 2,
+             try_static_acts: bool = True,
+             log: Optional[Callable[[str], None]] = None) -> AutotuneResult:
+    """Greedy accuracy-aware search from ``start`` (the uniform policy).
+
+    ``max_steps`` caps CANDIDATE EVALUATIONS after the uniform measurement
+    (each costs one quantize+eval pass); the loop phases are described in
+    the module docstring.  ``log`` (e.g. ``print``) narrates the search.
+    """
+    say = log or (lambda s: None)
+    trace: List[Dict[str, Any]] = []
+    steps = 0
+
+    def _eval(action: str, group: str, policy: QuantPolicy,
+              scales=None) -> Tuple[float, int, ptq.PTQReport]:
+        nonlocal steps
+        steps += 1
+        ov, by, rep = measure(task, policy, scales)
+        say(f"  [{steps:2d}] {action:12s} {group or '-':28s} "
+            f"overlap={ov:.3f} bytes={by}")
+        return ov, by, rep
+
+    overlap, nbytes, report = _eval("uniform", "", start)
+    uniform = dict(overlap=overlap, bytes_quantized=nbytes)
+    trace.append(dict(step=0, action="uniform", group=None, overlap=overlap,
+                      bytes_quantized=nbytes, accepted=True))
+    policy = start
+
+    # -- contraction: de-quantize worst offenders until target is met ------
+    skipped: set = set()
+    while overlap < target and steps < max_steps:
+        candidates = [g for g in group_stats(report)
+                      if g["pattern"] not in skipped]
+        if not candidates:
+            break
+        worst = candidates[0]
+        skipped.add(worst["pattern"])
+        trial = policy.override(worst["pattern"], "skip")
+        ov, by, rep = _eval("skip", worst["pattern"], trial)
+        accepted = ov > overlap
+        trace.append(dict(step=steps, action="skip", group=worst["pattern"],
+                          overlap=ov, bytes_quantized=by, accepted=accepted))
+        if accepted:
+            policy, overlap, nbytes, report = trial, ov, by, rep
+
+    # -- expansion: quantize default-excluded consumable groups ------------
+    if try_expand and overlap >= target:
+        for pat in expand_patterns:
+            if steps >= max_steps:
+                break
+            if _unquantized_matches(task, policy, pat) == 0:
+                continue                       # nothing new to quantize
+            trial = policy.override(pat, "linear")
+            ov, by, rep = _eval("expand", pat, trial)
+            accepted = ov >= target
+            trace.append(dict(step=steps, action="expand", group=pat,
+                              overlap=ov, bytes_quantized=by,
+                              accepted=accepted))
+            if accepted:
+                policy, overlap, nbytes, report = trial, ov, by, rep
+
+    # -- int8 frontier: most robust fp8 linear groups down to W8A8 ---------
+    if try_int8 and overlap >= target:
+        robust = [g for g in reversed(group_stats(report))
+                  if g["kind"] == "linear"][:max_int8]
+        for g in robust:
+            if steps >= max_steps:
+                break
+            trial = policy.override(g["pattern"], "int8")
+            ov, by, rep = _eval("int8", g["pattern"], trial)
+            accepted = ov >= target
+            trace.append(dict(step=steps, action="int8", group=g["pattern"],
+                              overlap=ov, bytes_quantized=by,
+                              accepted=accepted))
+            if accepted:
+                policy, overlap, nbytes, report = trial, ov, by, rep
+
+    # -- static activation scales (drops the runtime amax reduction) -------
+    act_scales: Dict[str, float] = {}
+    if try_static_acts and overlap >= target and steps < max_steps \
+            and task.calib_forward is not None:
+        qparams = ptq.quantize_params(task.params, policy)
+        scales = ptq.calibrate_static_act_scales(
+            task.calib_forward, qparams, task.calib_batches)
+        if scales:
+            trial = policy.replace(static_acts=True)
+            ov, by, rep = _eval("static_acts", "", trial, scales)
+            accepted = ov >= target
+            trace.append(dict(step=steps, action="static_acts", group=None,
+                              overlap=ov, bytes_quantized=by,
+                              accepted=accepted))
+            if accepted:
+                policy, overlap, nbytes, report = trial, ov, by, rep
+                act_scales = scales
+
+    return AutotuneResult(policy=policy, overlap=overlap,
+                          bytes_quantized=nbytes, uniform=uniform,
+                          groups=group_stats(report), trace=trace,
+                          act_scales=act_scales, target=target)

@@ -13,7 +13,7 @@ fp8 ops themselves.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,11 +45,19 @@ class PTQReport:
     entries: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     def add(self, path: str, kind: str, shape, rel_err: float,
-            bytes_before: int, bytes_after: int) -> None:
+            bytes_before: int, bytes_after: int, *,
+            granularity: Optional[str] = None,
+            pattern: Optional[str] = None) -> None:
+        """``kind`` is the scheme actually APPLIED ('linear'|'block'|'int8'),
+        ``granularity`` the produced ``QuantizedTensor.granularity``, and
+        ``pattern`` the policy glob that decided this leaf (the tuner's
+        group key)."""
         self.entries.append(dict(path=path, kind=kind, shape=tuple(shape),
                                  rel_err=float(rel_err),
                                  bytes_before=bytes_before,
-                                 bytes_after=bytes_after))
+                                 bytes_after=bytes_after,
+                                 granularity=granularity,
+                                 pattern=pattern))
 
     @property
     def n_quantized(self) -> int:
@@ -110,20 +118,30 @@ def quantize_params(
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
         p = _path_str(path)
-        kind = policy.classify(p, leaf.ndim, leaf.shape)
+        kind, pattern = policy.match(p, leaf.ndim, leaf.shape)
         if kind is None:
             return leaf
-        if fmt is None:  # int8: per-channel everywhere (block int8 unneeded)
+        if fmt is None or kind == "int8":
+            # int8: per-channel everywhere (block int8 unneeded) — either the
+            # policy-wide fmt or a per-group "int8" override.  The report
+            # records the scheme actually applied, not the pattern-list kind
+            # (a block-matched group under fmt="int8" used to be mislabeled
+            # "block" while per-channel int8 was what ran).
             q = quant.quantize_per_channel_int8(leaf, contract_axis=-2)
+            applied = "int8"
         elif kind == "block":
             q = quant.quantize_blockwise(leaf, block=policy.block, fmt=fmt)
+            applied = "block"
         else:
             q = quant.quantize_per_channel(leaf, contract_axis=-2, fmt=fmt)
+            applied = "linear"
+        q.tag = p  # key for activation-amax capture / static-scale attach
         if with_report:
             err = float(quant.quant_error(leaf, q)) if compute_errors else float("nan")
-            report.add(p, kind, leaf.shape, err,
+            report.add(p, applied, leaf.shape, err,
                        bytes_before=leaf.size * leaf.dtype.itemsize,
-                       bytes_after=q.nbytes())
+                       bytes_after=q.nbytes(),
+                       granularity=q.granularity, pattern=pattern)
         return q
 
     quantized = jax.tree_util.tree_map_with_path(_maybe_quantize, params)
@@ -173,4 +191,57 @@ def calibrate_activation_scales(
                 ema[name] = momentum * ema[name] + (1 - momentum) * amax
             else:
                 ema[name] = amax
-    return {k: quant._amax_to_scale(v) for k, v in ema.items()}
+    return {k: quant.amax_to_scale(v) for k, v in ema.items()}
+
+
+def calibrate_static_act_scales(
+    forward_fn: Callable[[Any, Any], Any],
+    qparams: Any,
+    batches,
+    *,
+    fmt=None,
+) -> Dict[str, float]:
+    """Max-of-amax static activation calibration keyed by param path.
+
+    ``forward_fn(qparams, batch)`` must run EAGERLY (e.g. with
+    ``unroll_layers=True``) so :func:`quant.capture_act_amax` sees concrete
+    values: every fp8 linear folds ``max|x|`` into a dict keyed by the
+    consuming weight's ``tag`` (set to its param path by
+    :func:`quantize_params`).  Returns plain-float scales ready to ride in
+    a policy artifact and be attached via :func:`apply_static_act_scales`.
+    """
+    fmt = fmt or quant.E4M3
+    amax: Dict[str, float] = {}
+    for batch in batches:
+        with quant.capture_act_amax() as cap:
+            forward_fn(qparams, batch)
+        for k, v in cap.items():
+            if v > amax.get(k, 0.0):
+                amax[k] = v
+    return {k: float(quant.amax_to_scale(v, fmt)) for k, v in amax.items()}
+
+
+def apply_static_act_scales(qparams: Any,
+                            scales: Mapping[str, float]) -> Any:
+    """Attach calibrated static activation scales to quantized leaves.
+
+    Only per-channel / per-tensor FP8 leaves consume a static scale (the
+    ``fp8_linear`` static path); block and int8 leaves keep the dynamic
+    scheme and are left untouched, as are leaves with no calibrated scale.
+    The scale is shaped ``(*data.shape[:-2], 1, 1)`` so scan-stacked leaves
+    slice per layer and still broadcast over ``(tokens, features)``.
+    """
+
+    def _attach(leaf):
+        if not isinstance(leaf, QuantizedTensor):
+            return leaf
+        if leaf.granularity not in ("per_channel", "per_tensor"):
+            return leaf
+        if leaf.data.dtype == jnp.int8 or leaf.tag not in scales:
+            return leaf
+        shape = (*leaf.data.shape[:-2], 1, 1)
+        act_scale = jnp.full(shape, scales[leaf.tag], jnp.float32)
+        return dataclasses.replace(leaf, act_scale=act_scale)
+
+    return jax.tree_util.tree_map(
+        _attach, qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor))

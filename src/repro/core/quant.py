@@ -18,9 +18,10 @@ tested against these functions.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,21 +67,36 @@ class QuantizedTensor:
         one entry per tile.
 
     Dequantized value == ``data.astype(f32) * broadcast(scale)``.
+
+    ``act_scale`` (optional, third pytree CHILD) is a CALIBRATED static
+    activation scale for the matmul that consumes this weight: when set,
+    ``fp8_linear`` casts the incoming activation straight onto the fp8 grid
+    with it instead of running the per-token runtime amax reduction.  Shaped
+    ``(*data.shape[:-2], 1, 1)`` so scan-stacked leaves slice per layer and
+    the scale still broadcasts against ``(..., tokens, features)``.
+
+    ``tag`` (aux data) names the param path this weight came from; aux
+    survives ``tree_map`` slicing, so per-layer slices of a stacked leaf
+    keep the tag — it keys activation-amax capture during calibration.
     """
 
     data: jax.Array          # fp8
     scale: jax.Array         # fp32
     granularity: str = "per_channel"
     block: int = DEFAULT_BLOCK
+    act_scale: Optional[jax.Array] = None   # f32, static act scale (or None)
+    tag: Optional[str] = None               # param path (capture key)
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.data, self.scale), (self.granularity, self.block)
+        return ((self.data, self.scale, self.act_scale),
+                (self.granularity, self.block, self.tag))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        data, scale = children
-        return cls(data=data, scale=scale, granularity=aux[0], block=aux[1])
+        data, scale, act_scale = children
+        return cls(data=data, scale=scale, granularity=aux[0], block=aux[1],
+                   act_scale=act_scale, tag=aux[2])
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -101,7 +117,10 @@ class QuantizedTensor:
         return (self.data.astype(jnp.float32) * self.scale).astype(dtype)
 
     def nbytes(self) -> int:
-        return int(np.prod(self.data.shape)) + 4 * int(np.prod(self.scale.shape))
+        n = int(np.prod(self.data.shape)) + 4 * int(np.prod(self.scale.shape))
+        if self.act_scale is not None:
+            n += 4 * int(np.prod(self.act_scale.shape))
+        return n
 
 
 def is_quantized(x: Any) -> bool:
@@ -113,9 +132,16 @@ def is_quantized(x: Any) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _amax_to_scale(amax: jax.Array, fmt=E4M3) -> jax.Array:
-    """scale s.t. x/s fits the fp8 grid: s = amax / fp8_max (floored at eps)."""
-    return jnp.maximum(amax.astype(jnp.float32), _EPS) / FP8_MAX[fmt]
+def amax_to_scale(amax, fmt=E4M3) -> jax.Array:
+    """scale s.t. x/s fits the fp8 grid: s = amax / fp8_max (floored at eps).
+
+    Public seam for calibration (``repro.core.ptq``) and the auto-tuner:
+    accepts device arrays or plain floats.
+    """
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), _EPS) / FP8_MAX[fmt]
+
+
+_amax_to_scale = amax_to_scale  # internal alias (historical name)
 
 
 def cast_to_fp8(x: jax.Array, scale: jax.Array, fmt=E4M3) -> jax.Array:
@@ -239,6 +265,40 @@ def _dequantize_block(q: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Activation-amax capture (calibration; eager-only, free under jit)
+# ---------------------------------------------------------------------------
+
+_ACT_AMAX: Optional[Dict[str, float]] = None
+
+
+@contextlib.contextmanager
+def capture_act_amax():
+    """Record the running max |activation| per consuming weight ``tag``.
+
+    While active, every ``fp8_linear`` call on a tagged weight with a
+    CONCRETE input folds ``max|x|`` into the yielded ``{tag: amax}`` dict.
+    Tracers are ignored (like ``repro.core.stats.tap``), so calibration
+    must run eagerly — e.g. ``forward(..., unroll_layers=True)`` — and the
+    capture costs nothing in jitted production code.
+    """
+    global _ACT_AMAX
+    prev = _ACT_AMAX
+    _ACT_AMAX = {}
+    try:
+        yield _ACT_AMAX
+    finally:
+        _ACT_AMAX = prev
+
+
+def _record_act_amax(tag: Optional[str], x) -> None:
+    if _ACT_AMAX is None or tag is None or isinstance(x, jax.core.Tracer):
+        return
+    amax = float(jnp.max(jnp.abs(x.astype(jnp.float32))))  # lint: allow[hidden-host-sync]
+    if amax > _ACT_AMAX.get(tag, 0.0):
+        _ACT_AMAX[tag] = amax
+
+
+# ---------------------------------------------------------------------------
 # FP8 matmuls (XLA path; the Pallas kernels fuse the same math)
 # ---------------------------------------------------------------------------
 
@@ -250,6 +310,7 @@ def fp8_linear(
     fmt=E4M3,
     out_dtype=None,
     precomputed_xq: Optional[QuantizedTensor] = None,
+    act_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """The paper's Linear-layer FP8 path (Fig. 2).
 
@@ -258,15 +319,28 @@ def fp8_linear(
 
     ``wq`` must be per-channel over the OUTPUT axis of a ``(in, out)`` kernel
     so both scales fold outside the dot.
+
+    When a STATIC activation scale is available — passed as ``act_scale`` or
+    carried on the weight (``wq.act_scale``, attached from a calibration
+    artifact) — the runtime per-token amax reduction is skipped entirely:
+    the input is cast straight onto the fp8 grid with the calibrated scale.
     """
     out_dtype = out_dtype or x.dtype
     if wq.granularity not in ("per_channel", "per_tensor"):
         raise ValueError(f"fp8_linear needs per_channel/per_tensor weights, got {wq.granularity}")
-    xq = precomputed_xq if precomputed_xq is not None else quantize_per_token(x, fmt)
-    acc = jnp.dot(xq.data, wq.data, preferred_element_type=jnp.float32)
+    _record_act_amax(wq.tag, x)
     w_scale = wq.scale  # (1, out) or ()
     if wq.granularity == "per_channel":
         w_scale = wq.scale.reshape(-1)  # (out,)
+    if act_scale is None:
+        act_scale = wq.act_scale
+    if precomputed_xq is None and act_scale is not None:
+        xd = cast_to_fp8(x, act_scale, fmt)      # no runtime amax reduce
+        acc = jnp.dot(xd, wq.data, preferred_element_type=jnp.float32)
+        out = acc * act_scale * w_scale
+        return out.astype(out_dtype)
+    xq = precomputed_xq if precomputed_xq is not None else quantize_per_token(x, fmt)
+    acc = jnp.dot(xq.data, wq.data, preferred_element_type=jnp.float32)
     out = acc * xq.scale * w_scale
     return out.astype(out_dtype)
 

@@ -116,6 +116,12 @@ def main():
                          "fallback to the unfused path off-TPU or without "
                          "--paged; 'interpret' forces Pallas interpret "
                          "mode (CPU parity runs)")
+    ap.add_argument("--quant-policy", default=None, metavar="PATH",
+                    help="load a tuned mixed-precision policy artifact "
+                         "(emitted by launch/autotune.py) instead of the "
+                         "all-or-nothing --no-fp8 switch: per-group "
+                         "fp8/bf16/int8 assignment plus calibrated static "
+                         "activation scales deploy as data")
     ap.add_argument("--seed", type=int, default=0,
                     help="seeds the params AND the synthetic workload "
                          "(the engine itself is deterministic); one seed "
@@ -136,7 +142,7 @@ def main():
         prefill_chunk=args.prefill_chunk, preemption=args.preemption,
         max_candidates=args.n_candidates,
         paged=args.paged, page_size=args.page_size, n_pages=args.pages,
-        fused_decode=args.fused_decode))
+        fused_decode=args.fused_decode, quant_policy=args.quant_policy))
     requests = build_requests(cfg, args.requests, batch, args.seed,
                               args.ragged, n_candidates=args.n_candidates)
 
@@ -158,6 +164,11 @@ def main():
     else:
         outs, stats = engine.serve_requests(requests)
 
+    if args.quant_policy:
+        pol = engine.executor.quant_policy
+        print(f"[serve] quant policy: {args.quant_policy} "
+              f"({len(pol.overrides)} overrides, "
+              f"static_acts={pol.static_acts})")
     print(f"[serve] mode={args.mode} fp8={args.fp8} "
           f"kv={stats['kv_dtype']} "
           f"({int(stats['kv_row_bytes'])} B/row, "

@@ -57,7 +57,8 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
             page_gather: Optional[jax.Array] = None,
             page_tables: Optional[jax.Array] = None,
             page_size: int = 0,
-            fused_interpret: Optional[bool] = None):
+            fused_interpret: Optional[bool] = None,
+            unroll_layers: bool = False):
     """batch: tokens (B, T) semantic-ID stream, profile (B, PROFILE_DIM).
 
     ``page_scatter`` / ``page_gather`` run the cached modes against the
@@ -90,7 +91,8 @@ def forward(params, batch: Dict[str, jax.Array], cfg: OneRecConfig,
     embeds = _embed_with_profile(params, batch["tokens"], batch["profile"], cfg)
     return tfm.forward(params["backbone"], batch["tokens"], cfg.transformer,
                        inputs_embeds=embeds, cache=cache,
-                       fill_cache=fill_cache, lengths=lengths)
+                       fill_cache=fill_cache, lengths=lengths,
+                       unroll_layers=unroll_layers)
 
 
 def train_loss(params, batch, cfg: OneRecConfig) -> jax.Array:

@@ -39,6 +39,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import OneRecConfig
+from repro.core.policy import QuantPolicy, load_policy_artifact
 from repro.serving.executor import PhaseExecutor
 from repro.serving.kv_cache import PrefixStore, SlotPool
 from repro.serving.requests import requests_from_arrays
@@ -116,6 +117,11 @@ class EngineConfig:
     #                                when the layout is contiguous) |
     #                                "interpret" (force Pallas interpret
     #                                mode — CPU parity tests)
+    quant_policy: object = None    # tuned mixed-precision policy — a
+    #                                QuantPolicy instance OR a str path to an
+    #                                autotune artifact JSON (loaded with its
+    #                                calibrated static act scales); overrides
+    #                                the all-or-nothing use_fp8 switch
 
 
 class RequestHandle:
@@ -242,6 +248,19 @@ class ServingEngine:
             n_pages = engine_cfg.n_pages or \
                 -(-(self.n_slots + prefix_rows) * s_row
                   // engine_cfg.page_size)
+        # tuned mixed-precision policy: a str is an autotune artifact path
+        # (policy + calibrated static act scales travel together); a
+        # QuantPolicy instance applies as-is
+        quant_policy, act_scales = engine_cfg.quant_policy, None
+        if isinstance(quant_policy, str):
+            artifact = load_policy_artifact(quant_policy)
+            quant_policy = artifact["policy"]
+            act_scales = artifact.get("act_scales") or None
+        elif quant_policy is not None \
+                and not isinstance(quant_policy, QuantPolicy):
+            raise ValueError(
+                f"quant_policy must be a QuantPolicy or an artifact path, "
+                f"got {type(quant_policy).__name__}")
         self.executor = PhaseExecutor(
             params, cfg, n_slots=self.n_slots, use_fp8=engine_cfg.use_fp8,
             topk=engine_cfg.topk, use_radix_topk=engine_cfg.use_radix_topk,
@@ -250,7 +269,8 @@ class ServingEngine:
             n_candidates=engine_cfg.max_candidates,
             kv_dtype=engine_cfg.kv_dtype,
             paged=engine_cfg.paged, page_size=engine_cfg.page_size,
-            n_pages=n_pages, fused_decode=engine_cfg.fused_decode)
+            n_pages=n_pages, fused_decode=engine_cfg.fused_decode,
+            quant_policy=quant_policy, act_scales=act_scales)
         # the store PERSISTS across stats windows (repeat traffic spans
         # them); its hit/miss window resets with the engine's
         if not prefix_rows:

@@ -56,8 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import OneRecConfig
-from repro.core.policy import BASELINE_POLICY, PAPER_POLICY
-from repro.core.ptq import quantize_params
+from repro.core.policy import BASELINE_POLICY, PAPER_POLICY, QuantPolicy
+from repro.core.ptq import apply_static_act_scales, quantize_params
 from repro.models import onerec as onerec_model
 from repro.models import transformer as tfm_model
 from repro.serving.kv_cache import INDEX_DTYPE, PagePool, as_index
@@ -124,7 +124,9 @@ class PhaseExecutor:
                  paged: bool = False,
                  page_size: int = 32,
                  n_pages: int = 0,
-                 fused_decode: Union[bool, str, None] = False):
+                 fused_decode: Union[bool, str, None] = False,
+                 quant_policy: Optional[QuantPolicy] = None,
+                 act_scales: Optional[Dict[str, float]] = None):
         if n_candidates < 1:
             raise ValueError(f"n_candidates must be >= 1, got {n_candidates}")
         if n_candidates > topk:
@@ -149,8 +151,16 @@ class PhaseExecutor:
         self.branch_stride = max(cfg.decode_len - 1, 0)
         extra = (n_candidates - 1) * self.branch_stride
         kv_dt = self.kv_dtype
-        policy = PAPER_POLICY if use_fp8 else BASELINE_POLICY
+        # a tuned QuantPolicy (e.g. loaded from an autotune artifact)
+        # overrides the all-or-nothing use_fp8 switch; calibrated static
+        # activation scales ride the quantized leaves (fp8_linear skips
+        # the runtime per-token amax reduction where they are attached)
+        policy = quant_policy if quant_policy is not None else \
+            (PAPER_POLICY if use_fp8 else BASELINE_POLICY)
+        self.quant_policy = policy
         self.params = quantize_params(params, policy)
+        if act_scales:
+            self.params = apply_static_act_scales(self.params, act_scales)
         # per-request worst-case footprint in positions: profile + full
         # history + first decode token, plus every reserved branch span
         s_row = cfg.context_len + 1 + extra

@@ -1,0 +1,267 @@
+"""Auto-tuner + QuantPolicy overrides/serialization + static act scales."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import ptq
+from repro.core.autotune import (EvalTask, autotune, group_stats,
+                                 make_eval_task, measure)
+from repro.core.policy import (BASELINE_POLICY, PAPER_POLICY, POLICY_VERSION,
+                               QuantPolicy, load_policy_artifact,
+                               save_policy_artifact)
+from repro.core.quant import QuantizedTensor
+from repro.models import onerec as onerec_model
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.requests import build_requests
+
+
+# ---------------------------------------------------------------------------
+# Policy overrides
+# ---------------------------------------------------------------------------
+
+
+def test_override_beats_exclude():
+    # lm_head is default-excluded; an override quantizes it anyway
+    pol = PAPER_POLICY.override("*lm_head*", "linear")
+    assert PAPER_POLICY.classify("lm_head/kernel", 2, (16, 64)) is None
+    assert pol.classify("lm_head/kernel", 2, (16, 64)) == "linear"
+
+
+def test_override_first_match_wins():
+    pol = PAPER_POLICY.override("*/attn/*/kernel", "int8") \
+                      .override("*/attn/q_proj/kernel", "skip")
+    # the later .override() is PREPENDED, so the narrower pattern wins
+    assert pol.classify("l/attn/q_proj/kernel", 2, (8, 8)) is None
+    assert pol.classify("l/attn/k_proj/kernel", 2, (8, 8)) == "int8"
+
+
+def test_override_block_degrades_when_misaligned():
+    pol = BASELINE_POLICY.replace(enabled=True).override("*w", "block")
+    assert pol.classify("a/w", 2, (256, 128)) == "block"
+    assert pol.classify("a/w", 2, (100, 128)) == "linear"
+
+
+def test_override_respects_min_dim():
+    pol = PAPER_POLICY.override("*scale", "linear")
+    assert pol.classify("norm/scale", 1, (16,)) is None
+
+
+def test_invalid_override_decision_raises():
+    with pytest.raises(ValueError):
+        PAPER_POLICY.override("*w", "fp4")
+
+
+def test_match_returns_deciding_pattern():
+    kind, pat = PAPER_POLICY.match("l/moe/experts/gate", 4, (2, 4, 128, 128))
+    assert (kind, pat) == ("block", "*/moe/experts/gate")
+    kind, pat = PAPER_POLICY.match("l/attn_norm/scale", 2, (4, 16))
+    assert kind is None and pat in PAPER_POLICY.exclude_patterns
+
+
+# ---------------------------------------------------------------------------
+# Serialization: JSON round-trip + artifact file
+# ---------------------------------------------------------------------------
+
+
+def _zoo_param_paths(arch):
+    mod = get_arch(arch)
+    cfg = mod.reduced_config()
+    if mod.FAMILY == "onerec":
+        params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    else:
+        from repro.models import recsys as recsys_model
+        params = recsys_model.init_recsys(jax.random.PRNGKey(0), cfg)
+    out = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if hasattr(leaf, "ndim"):
+            out.append((ptq._path_str(path), leaf.ndim, leaf.shape))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["onerec-v2", "din"])
+def test_policy_json_roundtrip_classify_agreement(arch):
+    """A reloaded policy must agree with the original on EVERY param path
+    of the zoo config (satellite: round-trip is behavioral, not just
+    structural)."""
+    pol = (PAPER_POLICY.override("*lm_head*", "linear")
+                       .override("*/attn/k_proj/kernel", "int8")
+                       .replace(static_acts=True))
+    wire = json.dumps(pol.to_json_dict())       # must survive real JSON
+    back = QuantPolicy.from_json_dict(json.loads(wire))
+    paths = _zoo_param_paths(arch)
+    assert paths
+    for p, ndim, shape in paths:
+        assert back.match(p, ndim, shape) == pol.match(p, ndim, shape), p
+    assert back == pol
+
+
+def test_policy_version_guard():
+    with pytest.raises(ValueError):
+        QuantPolicy.from_json_dict({"version": POLICY_VERSION + 1})
+
+
+def test_artifact_roundtrip(tmp_path):
+    pol = PAPER_POLICY.override("*lm_head*", "linear").replace(
+        static_acts=True)
+    path = str(tmp_path / "policy.json")
+    written = save_policy_artifact(
+        path, pol, config="onerec-v2", target_overlap=0.6,
+        measured=dict(overlap=0.91, bytes_quantized=1234),
+        trace=[dict(step=0, action="uniform", group=None, overlap=0.88,
+                    bytes_quantized=1000, accepted=True)],
+        act_scales={"lm_head/kernel": 0.025},
+    )
+    art = load_policy_artifact(path)
+    assert art["version"] == POLICY_VERSION == written["version"]
+    assert art["policy"] == pol
+    assert art["config"] == "onerec-v2"
+    assert art["measured"]["overlap"] == 0.91
+    assert art["trace"][0]["action"] == "uniform"
+    assert art["act_scales"] == {"lm_head/kernel": 0.025}
+
+
+# ---------------------------------------------------------------------------
+# The search itself (synthetic task: deterministic, fast)
+# ---------------------------------------------------------------------------
+
+
+def _fake_task():
+    k = jax.random.PRNGKey(0)
+    params = {"blk": {
+        "attn": {"q_proj": {"kernel": jax.random.normal(k, (16, 16))}},
+        "mlp": {"down": {"kernel": jax.random.normal(k, (16, 16))}},
+    }}
+
+    def overlap(qp):
+        # pretend the down-projection is fp8-fragile
+        bad = isinstance(qp["blk"]["mlp"]["down"]["kernel"], QuantizedTensor)
+        return 0.3 if bad else 0.95
+
+    return EvalTask(name="fake", family="lm", params=params, overlap=overlap)
+
+
+def test_autotune_contracts_to_target():
+    task = _fake_task()
+    res = autotune(task, target=0.6, max_steps=8, try_expand=False,
+                   try_int8=False, try_static_acts=False)
+    assert res.overlap >= 0.6
+    assert ("*/mlp/down/kernel", "skip") in res.policy.overrides
+    # the fragile group really is de-quantized under the tuned policy
+    qp = ptq.quantize_params(task.params, res.policy)
+    assert not isinstance(qp["blk"]["mlp"]["down"]["kernel"], QuantizedTensor)
+    assert isinstance(qp["blk"]["attn"]["q_proj"]["kernel"], QuantizedTensor)
+    # trace: uniform start + every candidate, with accept/reject recorded
+    assert res.trace[0]["action"] == "uniform"
+    assert any(t["action"] == "skip" and t["accepted"] for t in res.trace)
+    assert res.uniform["overlap"] == pytest.approx(0.3)
+
+
+def test_measure_and_group_stats():
+    task = _fake_task()
+    ov, nbytes, report = measure(task, PAPER_POLICY)
+    assert ov == pytest.approx(0.3)
+    assert nbytes == report.bytes_before > 0
+    groups = {g["pattern"] for g in group_stats(report)}
+    assert groups == {"*/attn/q_proj/kernel", "*/mlp/down/kernel"}
+
+
+@pytest.mark.slow
+def test_autotune_recsys_expands_coverage():
+    """Real zoo run (DIN, reduced): the tuned policy must hold the target
+    while quantizing at least as many bytes as the uniform start."""
+    task = make_eval_task("din", seed=0)
+    res = autotune(task, target=0.6, max_steps=8, log=None)
+    assert res.overlap >= 0.6
+    assert res.bytes_quantized >= res.uniform["bytes_quantized"]
+    actions = {t["action"] for t in res.trace}
+    assert "uniform" in actions
+
+
+# ---------------------------------------------------------------------------
+# Static vs dynamic activation scales (satellite: calibration path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_static_act_scales_parity():
+    task = make_eval_task("deepseek-moe-16b", seed=0)
+    qparams = ptq.quantize_params(task.params, PAPER_POLICY)
+    dyn = task.overlap(qparams)
+    scales = ptq.calibrate_static_act_scales(
+        task.calib_forward, qparams, task.calib_batches)
+    assert scales, "calibration captured no fp8-linear activations"
+    sp = ptq.apply_static_act_scales(qparams, scales)
+    # scales attached to per-channel fp8 leaves only
+    attached = [l for l in jax.tree_util.tree_leaves(
+        sp, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor) and l.act_scale is not None]
+    assert attached
+    assert all(l.granularity == "per_channel" for l in attached)
+    stat = task.overlap(sp)
+    assert stat >= 0.6
+    assert abs(stat - dyn) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# Engine e2e: --quant-policy artifact load is token-identical to code
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_quant_policy_artifact_token_identical(tmp_path):
+    cfg = get_arch("onerec-v2").reduced_config()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    reqs = build_requests(cfg, 8, 4, 0, False)
+
+    pol = (PAPER_POLICY.override("*lm_head*", "linear")
+                       .override("*/attn/k_proj/kernel", "skip"))
+    path = str(tmp_path / "quant_policy.json")
+    save_policy_artifact(path, pol, config="onerec-v2")
+
+    in_code, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, quant_policy=pol)).serve_requests(reqs)
+    from_file, _ = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, quant_policy=path)).serve_requests(reqs)
+    np.testing.assert_array_equal(np.stack(in_code), np.stack(from_file))
+
+
+@pytest.mark.slow
+def test_engine_applies_artifact_static_scales(tmp_path):
+    cfg = get_arch("onerec-v2").reduced_config()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    reqs = build_requests(cfg, 4, 4, 0, False)
+
+    # calibrate real scales for the paper policy on this config
+    task = make_eval_task("onerec-v2", seed=0)
+    qparams = ptq.quantize_params(params, PAPER_POLICY)
+    scales = ptq.calibrate_static_act_scales(
+        task.calib_forward, qparams, task.calib_batches)
+    assert scales
+    pol = PAPER_POLICY.replace(static_acts=True)
+    path = str(tmp_path / "quant_policy_static.json")
+    save_policy_artifact(path, pol, config="onerec-v2", act_scales=scales)
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        batch_size=4, quant_policy=path))
+    # the executor's params carry the attached scales
+    attached = [l for l in jax.tree_util.tree_leaves(
+        eng.executor.params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor) and l.act_scale is not None]
+    assert attached
+    outs, _ = eng.serve_requests(reqs)
+    assert len(outs) == 4
+    assert all(o.shape == (cfg.decode_len,) for o in outs)
+
+
+def test_engine_rejects_bad_policy_type():
+    cfg = get_arch("onerec-v2").reduced_config()
+    params = onerec_model.init_onerec(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, EngineConfig(batch_size=4,
+                                                quant_policy=123))

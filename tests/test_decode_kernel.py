@@ -159,6 +159,7 @@ def _top8_overlap(a, b):
 
 @pytest.mark.parametrize("C", [1, 4], ids=["K1", "K4tree"])
 @pytest.mark.parametrize("kv", KV_DTYPES, ids=KV_IDS)
+@pytest.mark.slow
 def test_fused_decode_differential(setup, kv, C):
     """Fused interpret-mode kernel vs the unfused paged chain vs the
     contiguous reference, teacher-forced over the full decode chain."""

@@ -251,6 +251,7 @@ def test_fp8_kv_pool_arena_roundtrip_bit_identical():
                 f"round trip not bit-identical at {key}"
 
 
+@pytest.mark.slow
 def test_fp8_kv_single_decode_overlap():
     """Teacher-forced top-8 overlap through prefill + single-token decode
     with fp8 K/V storage vs bf16 K/V, SAME bf16 params — isolates the KV
@@ -366,6 +367,7 @@ def test_fp8_kv_prefix_resume_overlap():
     assert overlap > 0.6, f"fp8-KV prefix-resume top-8 overlap {overlap}"
 
 
+@pytest.mark.slow
 def test_fp8_kv_engine_composition():
     """fp8 K/V composes with prefix cache + chunked prefill + preemption +
     multi-candidate tree decode in one engine: repeat traffic hits the

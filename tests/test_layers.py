@@ -100,6 +100,7 @@ def test_multi_hot_bag_padding():
     np.testing.assert_allclose(out[1], table[3], rtol=2e-2, atol=1e-2)
 
 
+@pytest.mark.slow
 def test_decode_matches_full_forward():
     """Token-by-token decode == teacher-forced forward (greedy parity)."""
     cfg = TransformerConfig(
@@ -122,6 +123,7 @@ def test_decode_matches_full_forward():
             rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.slow
 def test_attention_kernel_integration():
     """cfg.use_attention_kernel routes decode through the Pallas kernel;
     results must match the XLA decode path."""

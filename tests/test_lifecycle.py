@@ -374,6 +374,7 @@ def test_store_insert_force_bypasses_doorkeeper():
     assert store.n_entries == 1
 
 
+@pytest.mark.slow
 def test_engine_second_sight_token_identical(lifecycle_setup):
     """Second-sight admission changes what the arena stores, never what
     the engine generates; repeats still produce hits (one visit later)."""

@@ -126,6 +126,7 @@ def test_tree_matches_sequential(mc_setup, tree_results, fp8):
             assert score == pytest.approx(sc.scores[0], abs=1e-5)
 
 
+@pytest.mark.slow
 def test_tree_composes_with_prefix_cache(mc_setup, tree_results):
     """Tree decode over rows admitted through the prefix store
     (prefix_copy_insert + resume_prefill) and chunked prefill must stay

@@ -73,6 +73,7 @@ def paged_setup():
 
 
 @pytest.mark.parametrize("kv", KV_DTYPES, ids=KV_IDS)
+@pytest.mark.slow
 def test_paged_matches_contiguous_plain(paged_setup, kv):
     """Ragged K=1 traffic through the paged engine is token-identical to
     the contiguous layout, with zero full-row copies by construction."""
@@ -88,6 +89,7 @@ def test_paged_matches_contiguous_plain(paged_setup, kv):
 
 
 @pytest.mark.parametrize("kv", KV_DTYPES, ids=KV_IDS)
+@pytest.mark.slow
 def test_paged_prefix_cache_warm_parity(paged_setup, kv):
     """Prefix-store hits: a paged hit is a page-table edit (+ at most one
     boundary COW) where the contiguous layout pays a full-row device copy;
@@ -112,6 +114,7 @@ def test_paged_prefix_cache_warm_parity(paged_setup, kv):
     assert ref_stats["prefix_row_copies"] == ref_stats["prefix_hits"] > 0
 
 
+@pytest.mark.slow
 def test_paged_chunked_prefill_parity(paged_setup):
     """Chunked-prefill segments land in granted pages via the paged resume
     program; composed with the store, both passes match the contiguous
@@ -126,6 +129,7 @@ def test_paged_chunked_prefill_parity(paged_setup):
             np.testing.assert_array_equal(a, b)
 
 
+@pytest.mark.slow
 def test_paged_preemption_park_resume(paged_setup):
     """Preemption under the paged layout parks the victim's K/V as page
     references (share, no copy) and resumes it through a page-table hit;
@@ -150,6 +154,7 @@ def test_paged_preemption_park_resume(paged_setup):
     assert stats["prefix_row_copies"] == 0.0
 
 
+@pytest.mark.slow
 def test_paged_tree_decode_parity(paged_setup):
     """K=4 tree decode: branch spans allocate pages on demand; ranked
     candidate sets and scores must match the contiguous reserved-span
@@ -209,6 +214,7 @@ def test_fused_decode_token_identical_plain(paged_setup):
             == ref_stats["select_calls"] - stats["fused_select_hits"])
 
 
+@pytest.mark.slow
 def test_fused_decode_tree_parity(paged_setup):
     """K=4 tree decode through the fused kernel, free-running engines.
 
@@ -242,6 +248,7 @@ def test_fused_decode_tree_parity(paged_setup):
     assert stats["fused_select_hits"] > 0
 
 
+@pytest.mark.slow
 def test_fused_decode_composed_parity(paged_setup):
     """Fused decode composed with the prefix store, chunked prefill and
     preemption park/resume: the preemption scenario, a cold pass and a warm

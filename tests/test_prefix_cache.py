@@ -307,6 +307,7 @@ def _repeat_requests(cfg, n=14, n_users=4, seed=7):
     return reqs
 
 
+@pytest.mark.slow
 def test_engine_prefix_cache_token_identical(prefix_setup):
     """Cache-on repeat traffic == cache-off, token for token, with a
     nonzero hit rate and saved prefill tokens reported."""

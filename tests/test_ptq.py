@@ -8,6 +8,17 @@ from repro.core import (BASELINE_POLICY, PAPER_POLICY, QuantizedTensor,
                         dequantize_params, is_quantized, quantize_params)
 
 
+def _quantized_by_path(qp):
+    """{param path: QuantizedTensor} over a quantized pytree (tags are set
+    to param paths by quantize_params)."""
+    out = {}
+    for leaf in jax.tree_util.tree_leaves(
+            qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            out[leaf.tag] = leaf
+    return out
+
+
 def _fake_params(key=jax.random.PRNGKey(0)):
     return {
         "embed": {"table": jax.random.normal(key, (64, 16))},
@@ -75,3 +86,51 @@ def test_quantize_params_traceable():
     assert q.data.shape == (2, 4, 128, 128)
     assert q.data.dtype == jnp.float8_e4m3fn
     assert q.scale.shape == (2, 4, 1, 1)
+
+
+def test_report_kind_matches_granularity():
+    """Regression: every report entry's ``kind`` must describe the scheme
+    actually APPLIED, consistent with the produced tensor's granularity."""
+    expected_gran = {"linear": "per_channel", "block": "block",
+                     "int8": "per_channel"}
+    qp, rep = quantize_params(_fake_params(), PAPER_POLICY, with_report=True)
+    by_path = _quantized_by_path(qp)
+    assert set(by_path) == {e["path"] for e in rep.entries}
+    for e in rep.entries:
+        q = by_path[e["path"]]
+        assert e["granularity"] == q.granularity, e
+        assert q.granularity == expected_gran[e["kind"]], e
+        assert e["pattern"] is not None, e
+
+
+def test_int8_report_kind_regression():
+    """The ``fmt='int8'`` path applies per-channel int8 EVERYWHERE (block
+    int8 is unimplemented) but used to record ``kind='block'`` for
+    block-pattern groups.  The report must say what ran."""
+    pol = PAPER_POLICY.replace(fmt="int8")
+    qp, rep = quantize_params(_fake_params(), pol, with_report=True)
+    by_path = _quantized_by_path(qp)
+    expert_entries = [e for e in rep.entries if "experts" in e["path"]]
+    assert expert_entries, "fixture lost its block-pattern groups"
+    for e in rep.entries:
+        q = by_path[e["path"]]
+        assert e["kind"] == "int8", e
+        assert e["granularity"] == "per_channel", e
+        assert q.data.dtype == jnp.int8
+        assert q.granularity == "per_channel"
+
+
+def test_int8_override_on_one_group():
+    """A per-group "int8" override downgrades just that group while the
+    rest keeps the paper's fp8 scheme — and the report tells them apart."""
+    pol = PAPER_POLICY.override("*/attn/q_proj/kernel", "int8")
+    qp, rep = quantize_params(_fake_params(), pol, with_report=True)
+    by_path = _quantized_by_path(qp)
+    kinds = {e["path"]: e["kind"] for e in rep.entries}
+    qk = "stacks/0/p0/attn/q_proj/kernel"
+    assert kinds[qk] == "int8"
+    assert by_path[qk].data.dtype == jnp.int8
+    ok = "stacks/0/p0/attn/o_proj/kernel"
+    assert kinds[ok] == "linear"
+    assert by_path[ok].data.dtype == jnp.float8_e4m3fn
+    assert kinds["stacks/0/p0/moe/experts/gate"] == "block"

@@ -61,6 +61,7 @@ def sched_setup():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_chunked_matches_monolithic(sched_setup):
     """Paging a prefill through engine steps must not change a single
     token — resume segments write the same K/V at the same positions."""
@@ -77,6 +78,7 @@ def test_chunked_matches_monolithic(sched_setup):
     assert st_c["join_steps"] > 0 and st_m["join_p99_s"] > 0
 
 
+@pytest.mark.slow
 def test_chunked_with_prefix_cache_parity(sched_setup):
     """Chunked suffix prefill composes with tier-2 prefix reuse: repeat
     traffic through a chunked+cached engine stays token-identical."""
@@ -168,6 +170,7 @@ def _drain(sched, queue, done):
             sched._decode_step(done)
 
 
+@pytest.mark.slow
 def test_preemption_roundtrip_parity(sched_setup):
     """Preempt mid-decode -> requeue -> outputs token-identical to an
     unpreempted run, with the resume riding the prefix store (row copy +

@@ -156,6 +156,7 @@ def slot_setup():
     return cfg, params, reqs
 
 
+@pytest.mark.slow
 def test_continuous_matches_fixed_reference(slot_setup):
     cfg, params, reqs = slot_setup
     out_f, st_f = ServingEngine(params, cfg, EngineConfig(
@@ -211,6 +212,7 @@ def test_staggered_arrivals_honored(slot_setup):
     assert stats["wall_s"] >= 0.5
 
 
+@pytest.mark.slow
 def test_uniform_lengths_still_work(slot_setup):
     """Degenerate case: all histories equal (the seed engine's workload)."""
     cfg, params, _ = slot_setup
